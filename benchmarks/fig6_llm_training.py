@@ -1,0 +1,42 @@
+"""Figure 6 — LLM training time, baseline (XLink+IB/RDMA) vs ScalePool
+(XLink+CXL hybrid fabric).  Paper claims: 1.22x avg, 1.84x max end-to-end
+speedup; 3.79x inter-cluster communication speedup."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import simulator as sim
+
+BANDS = {
+    "avg_speedup": (1.22, 0.05),        # paper value, tolerance
+    "max_speedup": (1.84, 0.06),
+    "avg_comm_inter_speedup": (3.79, 0.25),
+}
+
+
+def run() -> Tuple[List[str], dict]:
+    t0 = time.time()
+    rows = sim.run_fig6()
+    dt_us = (time.time() - t0) * 1e6 / max(1, len(rows))
+    summary = sim.fig6_summary(rows)
+    lines = []
+    for r in rows:
+        b, s = r.baseline, r.scalepool
+        lines.append(
+            f"fig6.{r.model},{dt_us:.1f},"
+            f"speedup={r.speedup:.3f};comm_inter_speedup={r.comm_inter_speedup:.2f};"
+            f"base_total={b.total:.3f}s;sp_total={s.total:.3f}s;"
+            f"base[comp={b.compute:.3f};comm={b.comm:.3f};other={b.other:.3f}];"
+            f"sp[comp={s.compute:.3f};comm={s.comm:.3f};other={s.other:.3f}]")
+    ok = True
+    for key, (target, tol) in BANDS.items():
+        got = summary[key]
+        good = abs(got - target) <= tol * target + 1e-9
+        ok &= good
+        lines.append(f"fig6.claim.{key},{dt_us:.1f},"
+                     f"got={got:.3f};paper={target};"
+                     f"{'PASS' if good else 'FAIL'}")
+    summary["all_claims_pass"] = ok
+    return lines, summary

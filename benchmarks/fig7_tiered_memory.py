@@ -1,0 +1,40 @@
+"""Figure 7 — tiered-memory average access latency vs working-set size.
+Paper claims: 1.4x beyond one accelerator's HBM; 4.5x vs baseline and
+1.6x vs accelerator-clusters beyond a cluster's capacity."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import simulator as sim
+
+BANDS = {
+    "speedup_beyond_accel": (1.4, 0.08),
+    "speedup_beyond_cluster": (4.5, 0.08),
+    "speedup_vs_accel_clusters": (1.6, 0.08),
+}
+
+
+def run() -> Tuple[List[str], dict]:
+    t0 = time.time()
+    rows = sim.run_fig7()
+    dt_us = (time.time() - t0) * 1e6 / max(1, len(rows))
+    summary = sim.fig7_summary(rows)
+    lines = []
+    for r in rows:
+        lines.append(
+            f"fig7.ws{int(r['working_set_gb'])}GB,{dt_us:.1f},"
+            f"baseline={r['baseline']*1e6:.3f}us;"
+            f"accel_clusters={r['accel_clusters']*1e6:.3f}us;"
+            f"tiered={r['tiered']*1e6:.3f}us;"
+            f"speedup={r['speedup_vs_baseline']:.2f}")
+    ok = True
+    for key, (target, tol) in BANDS.items():
+        got = summary[key]
+        good = abs(got - target) <= tol * target + 1e-9
+        ok &= good
+        lines.append(f"fig7.claim.{key},{dt_us:.1f},"
+                     f"got={got:.2f};paper={target};{'PASS' if good else 'FAIL'}")
+    summary["all_claims_pass"] = ok
+    return lines, summary

@@ -1,0 +1,56 @@
+"""§Roofline — per (arch x shape x mesh) three-term roofline from the
+dry-run artifacts (artifacts/dryrun/*.json).  v5e constants per the
+assignment: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+
+def load_records(art_dir: str = "artifacts/dryrun") -> List[dict]:
+    recs = []
+    for fp in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        if "-smoke" in fp or "-xval" in fp or "-pytest" in fp:
+            continue
+        try:
+            recs.append(json.loads(open(fp).read()))
+        except Exception:
+            continue
+    return recs
+
+
+def run() -> Tuple[List[str], dict]:
+    recs = load_records()
+    lines = []
+    n_ok = n_skip = n_fail = 0
+    worst = None
+    for r in recs:
+        tag = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "SKIP":
+            n_skip += 1
+            lines.append(f"roofline.{tag},0,SKIP")
+            continue
+        if r["status"] != "OK":
+            n_fail += 1
+            lines.append(f"roofline.{tag},0,FAIL")
+            continue
+        n_ok += 1
+        roof = r["roofline"]
+        dom_t = max(roof["compute_s"], roof["memory_s"], roof["collective_s"])
+        frac = roof["compute_s"] / dom_t if dom_t > 0 else 0.0
+        lines.append(
+            f"roofline.{tag},{dom_t*1e6:.1f},"
+            f"compute_s={roof['compute_s']:.4g};memory_s={roof['memory_s']:.4g};"
+            f"collective_s={roof['collective_s']:.4g};dom={roof['dominant']};"
+            f"useful_flops_ratio={roof.get('useful_flops_ratio', 0):.3f};"
+            f"roofline_frac={frac:.3f}")
+        if roof["dominant"] != "compute":
+            key = (frac, tag)
+            if worst is None or key < worst:
+                worst = key
+    return lines, {"ok_cells": n_ok, "skip_cells": n_skip,
+                   "fail_cells": n_fail,
+                   "worst": worst[1] if worst else None}

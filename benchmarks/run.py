@@ -1,0 +1,49 @@
+"""Benchmark driver (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,fig7,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks import (ablations, collectives_bench, fig6_llm_training,
+                        fig7_tiered_memory, roofline, table1_links)
+
+SUITES = {
+    "fig6": fig6_llm_training,
+    "fig7": fig7_tiered_memory,
+    "table1": table1_links,
+    "collectives": collectives_bench,
+    "roofline": roofline,
+    "ablations": ablations,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        lines, summary = SUITES[name].run()
+        for line in lines:
+            print(line)
+        ok = summary.get("all_claims_pass", summary.get("ok", True))
+        if summary.get("fail_cells"):
+            ok = False
+        print(f"{name}.summary,0,{json.dumps(summary, default=str)}")
+        failures += 0 if ok else 1
+    print(f"benchmarks.total,0,failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Explore ScalePool fabric topologies (paper §4, Figure 4a): compare
+Clos / 3D-torus / DragonFly CXL fabrics and cluster counts on collective
+cost, and reproduce the hybrid-fabric speedup sweep.
+
+    PYTHONPATH=src python examples/fabric_explorer.py
+"""
+
+from repro.core import costmodel as cm
+from repro.core import fabric as fb
+from repro.core.fabric import TopologyKind
+from repro.core.simulator import (Calibration, FIG6_WORKLOADS, make_system,
+                                  simulate_step)
+
+GB = 1 << 30
+
+print("== CXL fabric topology sweep (1024 endpoints, 1GiB all-reduce over 16 clusters) ==")
+for kind in TopologyKind:
+    if kind == TopologyKind.SINGLE_HOP:
+        continue
+    f = fb.cxl_fabric(1024, kind=kind)
+    t = cm.allreduce_time(f, GB, 16)
+    print(f"{kind.value:18s} hops={f.topology.hops()} "
+          f"latency={f.latency()*1e6:.2f}us  allreduce_1GiB={t*1e3:.1f}ms")
+
+print("\n== hybrid-fabric speedup per workload (paper Fig. 6) ==")
+import dataclasses
+for w in FIG6_WORKLOADS:
+    calib = dataclasses.replace(Calibration(), ib_load=w.ib_load,
+                                cxl_load=w.cxl_load)
+    base = simulate_step(w.model, w.par,
+                         make_system("baseline", w.par.n_gpus, calib))
+    sp = simulate_step(w.model, w.par,
+                       make_system("scalepool", w.par.n_gpus, calib))
+    print(f"{w.model.name:10s} {base.total/sp.total:.3f}x "
+          f"(comm {base.comm_inter_raw:.3f}s -> {sp.comm_inter_raw:.3f}s)")

@@ -1,0 +1,51 @@
+"""Quickstart: build an assigned architecture, run a training step and a
+decode step on CPU, and print the ScalePool fabric analysis for it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import fabric as fb
+from repro.core import costmodel as cm
+from repro.models.api import build_model
+
+# 1. a reduced config of an assigned architecture (exact full configs are
+#    exercised by the dry-run: python -m repro.launch.dryrun)
+cfg = get_config("qwen1.5-0.5b", smoke=True)
+model = build_model(cfg)
+rng = jax.random.PRNGKey(0)
+params = model.init(rng)
+print(f"{cfg.name}: {sum(x.size for x in jax.tree.leaves(params)):,} params")
+
+# 2. one training step (loss + grads)
+batch = {
+    "tokens": jax.random.randint(rng, (2, 32), 0, cfg.vocab),
+    "labels": jax.random.randint(rng, (2, 32), 0, cfg.vocab),
+}
+loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+print(f"train: loss={float(loss):.3f}")
+
+# 3. prefill + a few decode steps
+cache = model.init_cache(2, 48, dtype=jnp.float32)
+logits, cache = model.prefill(params, {"tokens": batch["tokens"]}, cache)
+tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
+for i in range(4):
+    logits, cache = model.decode(params, tok, cache, jnp.int32(32 + i))
+    tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
+print(f"decode: generated {tok[:, 0].tolist()}")
+
+# 4. what would ScalePool's fabric do with this model's gradient sync?
+xlink = fb.xlink_cluster_fabric(72)
+cxl = fb.cxl_fabric(1024)
+ib = fb.infiniband_fabric(1024)
+dom_cxl = cm.HierarchicalDomains(intra=xlink, inter=cxl, intra_size=8, n_groups=16)
+dom_ib = cm.HierarchicalDomains(intra=xlink, inter=ib, intra_size=8, n_groups=16)
+grad_bytes = int(2 * sum(x.size for x in jax.tree.leaves(params)))
+t_sp = cm.hierarchical_allreduce_time(dom_cxl, grad_bytes)
+t_ib = cm.flat_allreduce_time(dom_ib, grad_bytes)
+print(f"gradient all-reduce over 128 replicas: RDMA-flat {t_ib*1e3:.2f} ms "
+      f"vs ScalePool-hierarchical {t_sp*1e3:.2f} ms "
+      f"({t_ib/t_sp:.1f}x)")

@@ -1,0 +1,53 @@
+"""Elastic re-sharding: restore a checkpoint onto a DIFFERENT mesh.
+
+ScalePool's composable disaggregation means the compute pool can grow or
+shrink independently of storage; a training job restarted on 384 chips
+must consume a checkpoint written on 512.  The manifest stores global
+shapes + shard slices, so re-assembly is mesh-agnostic: we rebuild the
+full logical array from shard files and re-slice it for the new mesh's
+shardings.  (At 1000+ nodes one would stream slices instead of
+materializing; the interface is the same.)
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.ckpt import checkpoint as C
+from repro.sharding.partition import Rules, tree_shardings
+
+
+def replan(ckpt_dir, target_tree, new_mesh: Mesh, rules: Rules,
+           axes_tree) -> Any:
+    """Restore ``ckpt_dir`` re-sharded for ``new_mesh``.
+
+    axes_tree: logical-axes pytree matching target_tree (from
+    model.param_axes() / optimizer.state_axes()).
+    """
+    shardings = tree_shardings(new_mesh, rules, axes_tree)
+    tree, extra = C.restore(ckpt_dir, target_tree, shardings=shardings)
+    return tree, extra
+
+
+def resize_plan(old_devices: int, new_devices: int, *,
+                model_parallel: int = 16) -> Dict[str, int]:
+    """Derive a (pods, data, model) decomposition for an elastic resize.
+
+    Keeps model parallelism fixed (sharding layouts stay valid) and
+    absorbs the change in the data-parallel/pod dimensions — the paper's
+    composability axis.  Raises if the new size can't host the model."""
+    if new_devices % model_parallel:
+        raise ValueError(f"{new_devices} devices cannot host "
+                         f"{model_parallel}-way model parallelism")
+    data_total = new_devices // model_parallel
+    pods = max(1, data_total // 16)
+    while data_total % pods:
+        pods -= 1
+    return {"pods": pods, "data": data_total // pods, "model": model_parallel}

@@ -1,0 +1,169 @@
+"""Two-tier memory management (paper §5), JAX realization.
+
+Tier-1 = accelerator HBM across the mesh (the coherent pool: GSPMD-
+addressed device memory).  Tier-2 = the capacity pool: on TPU this is
+host memory reached through JAX's memory-kind API (``pinned_host``) —
+the structural analogue of the paper's CXL memory nodes (the cost model
+in ``repro.core.fabric`` carries the paper's actual latency/bandwidth
+constants).
+
+The manager provides:
+  * placement policy: which training/serving state lives in which tier
+    (optimizer moments, master params, cold KV pages, embedding spill);
+  * sharding transforms (``to_tier2(sharding)``) usable at jit boundaries;
+  * a paged KV-cache spill/fetch pair for serving;
+  * capability detection so the same code runs on CPU (tests) and TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, SingleDeviceSharding
+
+
+def tier2_memory_kind() -> Optional[str]:
+    """The platform's capacity-tier memory kind, or None if unsupported."""
+    try:
+        dev = jax.devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+    except Exception:  # pragma: no cover
+        return None
+    for kind in ("pinned_host", "unpinned_host", "host"):
+        if kind in kinds:
+            return kind
+    return None
+
+
+def supports_tier2() -> bool:
+    return tier2_memory_kind() is not None
+
+
+def to_tier2(sharding):
+    """Return the tier-2 (host/CXL-pool) variant of a sharding, or the
+    original when the platform has no second memory space."""
+    kind = tier2_memory_kind()
+    if kind is None:
+        return sharding
+    try:
+        return sharding.with_memory_kind(kind)
+    except Exception:  # pragma: no cover
+        return sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class TieringPolicy:
+    """Which state lives in the capacity tier (§6: the paper evaluates
+    weight + optimizer offloading as the common training optimization)."""
+
+    offload_optimizer: bool = True      # AdamW moments → tier-2
+    offload_master_params: bool = False # fp32 masters → tier-2
+    kv_spill: bool = False              # cold KV pages → tier-2
+    kv_hot_fraction: float = 0.25       # fraction of pages kept in tier-1
+
+
+def offload_state_shardings(state_shardings, policy: TieringPolicy):
+    """Rewrite a TrainState sharding pytree so the selected components
+    carry tier-2 memory kinds.  jit honors these for inputs/outputs; XLA
+    streams them in during the optimizer-update phase."""
+    if not supports_tier2():
+        return state_shardings
+    s = state_shardings
+    if policy.offload_optimizer and hasattr(s, "opt"):
+        opt = s.opt
+        new_opt = opt._replace(
+            mu=jax.tree.map(to_tier2, opt.mu),
+            nu=jax.tree.map(to_tier2, opt.nu))
+        s = s._replace(opt=new_opt)
+    if policy.offload_master_params and hasattr(s, "params"):
+        s = s._replace(params=jax.tree.map(to_tier2, s.params))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache with tier-2 spill (serving-side tiering)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PagedKV:
+    """Fixed-size-page KV pool: hot pages in tier-1 (device arrays), cold
+    pages in the tier-2 capacity pool.  Page granularity keeps spill
+    traffic bulk-friendly (the paper's capacity-oriented CXL carries
+    large flits efficiently).
+
+    The cold pool is HOST-side storage (numpy): paging decisions are host
+    bookkeeping, and the spill/fetch transfers are explicit device<->pool
+    bulk copies — exactly the paper's CXL.io (no-coherence) tier-2 path.
+    ``spill``/``fetch`` mutate the cold pool in place (it is a pool, not
+    a functional value) and return ``self`` for chaining.
+
+    Logical layout per layer: (n_pages, page, kv_heads, head_dim).
+    """
+
+    page_size: int
+    hot: Dict[str, jax.Array]           # (L, B, hot_pages, page, KV, hd)
+    cold: Dict[str, "np.ndarray"]       # (L, B, cold_pages, page, KV, hd)
+    hot_map: jax.Array                  # (B, hot_pages) -> logical page id
+
+    @staticmethod
+    def create(n_layers: int, batch: int, max_seq: int, kv_heads: int,
+               head_dim: int, *, page_size: int = 512,
+               hot_fraction: float = 0.25, dtype=jnp.bfloat16) -> "PagedKV":
+        import numpy as np
+        n_pages = max(1, max_seq // page_size)
+        hot_pages = max(1, int(n_pages * hot_fraction))
+        cold_pages = max(1, n_pages - hot_pages)
+        mk = lambda p: jnp.zeros((n_layers, batch, p, page_size, kv_heads,
+                                  head_dim), dtype)
+        mk_np = lambda p: np.zeros((n_layers, batch, p, page_size, kv_heads,
+                                    head_dim), np.float32)
+        return PagedKV(
+            page_size=page_size,
+            hot={"k": mk(hot_pages), "v": mk(hot_pages)},
+            cold={"k": mk_np(cold_pages), "v": mk_np(cold_pages)},
+            hot_map=jnp.tile(jnp.arange(hot_pages)[None], (batch, 1)),
+        )
+
+    @property
+    def hot_pages(self) -> int:
+        return self.hot["k"].shape[2]
+
+    @property
+    def cold_pages(self) -> int:
+        return self.cold["k"].shape[2]
+
+    def spill(self, hot_slot: int, cold_slot) -> "PagedKV":
+        """Move one hot page to the cold (tier-2) pool: an explicit
+        tier-1 → tier-2 bulk transfer (the paper's CXL.io path)."""
+        import numpy as np
+        for key in ("k", "v"):
+            page = np.asarray(self.hot[key][:, :, hot_slot], np.float32)
+            self.cold[key][:, :, int(cold_slot)] = page
+        return self
+
+    def fetch(self, cold_slot, hot_slot: int, logical_page) -> "PagedKV":
+        """Bring one cold page back into tier-1 at ``hot_slot``."""
+        new_hot = {}
+        for key in ("k", "v"):
+            page = jnp.asarray(self.cold[key][:, :, int(cold_slot)])
+            new_hot[key] = jax.lax.dynamic_update_index_in_dim(
+                self.hot[key], page.astype(self.hot[key].dtype), hot_slot, 2)
+        new_map = self.hot_map.at[:, hot_slot].set(logical_page)
+        return dataclasses.replace(self, hot=new_hot, hot_map=new_map)
+
+
+def tier_traffic_report(policy: TieringPolicy, n_params: float,
+                        steps_per_sec: float = 1.0) -> Dict[str, float]:
+    """Analytic tier-2 traffic for the chosen policy (feeds the §5 cost
+    model): bytes/step shuttled over the capacity fabric."""
+    per_step = 0.0
+    if policy.offload_optimizer:
+        # moments read+write per step (fp32 m, v)
+        per_step += 2 * 4 * n_params * 2
+    if policy.offload_master_params:
+        per_step += 2 * 4 * n_params
+    return {"tier2_bytes_per_step": per_step,
+            "tier2_gbps": per_step * steps_per_sec / 1e9}

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  sliding_window: Optional[int] = None,
+                  sm_scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,Sq,D); k,v: (B,HKV,Skv,D) -> (B,H,Sq,D), fp32 math."""
+    B, H, Sq, D = q.shape
+    HKV, Skv = k.shape[1], k.shape[2]
+    group = H // HKV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * sm_scale
+    q_idx = jnp.arange(Sq)[:, None]
+    k_idx = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if sliding_window is not None:
+        mask &= k_idx > (q_idx - sliding_window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ssd_ref(x, dt, A, B_mat, C_mat, D, *, init_state=None):
+    """Sequential (token-by-token) SSD recurrence — the ground truth.
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); B_mat/C_mat: (B,S,G,N); D: (H,).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    HG = H // G
+    f32 = jnp.float32
+    state = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+             else init_state.astype(f32))
+
+    def step(state, t):
+        xt = x[:, t].astype(f32)                    # (B,H,P)
+        dtt = dt[:, t].astype(f32)                  # (B,H)
+        Bt = jnp.repeat(B_mat[:, t].astype(f32), HG, axis=1)  # (B,H,N)
+        Ct = jnp.repeat(C_mat[:, t].astype(f32), HG, axis=1)
+        decay = jnp.exp(dtt * A.astype(f32))
+        incr = (dtt[..., None] * xt)[..., None] * Bt[:, :, None, :]
+        state = decay[..., None, None] * state + incr
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        y = y + D.astype(f32)[None, :, None] * xt
+        return state, y
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                      # (B,S,H,P)
+    return y.astype(x.dtype), state

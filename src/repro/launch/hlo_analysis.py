@@ -1,0 +1,174 @@
+"""Post-SPMD HLO analysis: collective inventory + roofline terms.
+
+``compiled.cost_analysis()`` gives HLO_FLOPs / HLO_bytes but NOT
+collective traffic; we parse ``compiled.as_text()`` and sum per-op moved
+bytes with standard ring-algorithm accounting, classifying each op by
+whether its replica group crosses the pod boundary (the ScalePool
+inter-cluster fabric).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a possibly-tuple HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    crosses_pod: bool
+    moved_bytes: float  # per-device bytes on the wire (ring accounting)
+
+
+def _group_info(line: str, pod_size: Optional[int]) -> Tuple[int, bool]:
+    """(group_size, crosses_pod) from a collective's replica_groups."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota groups [G,S]<=[dims]T(perm): exact membership — iota over
+        # dims, transposed by perm, reshaped (G,S); a group crosses the
+        # pod boundary iff its members span device-id // pod_size values.
+        import numpy as np
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        dims = [int(t) for t in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(t) for t in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(n_groups, group_size)
+        crosses = False
+        if pod_size is not None and group_size > 1:
+            crosses = bool(np.any(groups // pod_size
+                                  != groups[:, :1] // pod_size))
+        return group_size, crosses
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1, False
+    groups = m.group(1)
+    first = groups.split("}")[0].strip("{} ")
+    if not first:
+        return 1, False
+    ids = [int(t) for t in first.split(",") if t.strip().isdigit()]
+    size = max(1, len(ids))
+    crosses = False
+    if pod_size is not None and ids:
+        pods = {i // pod_size for i in ids}
+        crosses = len(pods) > 1
+    return size, crosses
+
+
+def moved_bytes(kind: str, result_bytes: int, n: int) -> float:
+    """Per-device wire bytes under ring algorithms."""
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * frac * result_bytes
+    if kind == "all-gather":
+        return frac * result_bytes            # result is the gathered buffer
+    if kind == "reduce-scatter":
+        return frac * result_bytes * n        # result is the scattered shard
+    if kind == "all-to-all":
+        return frac * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def parse_collectives(hlo_text: str, pod_size: Optional[int] = None
+                      ) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        rb = shape_bytes(shape_str)
+        if rb == 0:
+            continue
+        size, crosses = _group_info(line, pod_size)
+        ops.append(CollectiveOp(kind, rb, size, crosses,
+                                moved_bytes(kind, rb, size)))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    out: Dict[str, float] = {"total_moved_bytes": 0.0,
+                             "cross_pod_moved_bytes": 0.0, "n_ops": len(ops)}
+    for op in ops:
+        out["total_moved_bytes"] += op.moved_bytes
+        if op.crosses_pod:
+            out["cross_pod_moved_bytes"] += op.moved_bytes
+        key = f"{op.kind}_bytes"
+        out[key] = out.get(key, 0.0) + op.moved_bytes
+        out[f"{op.kind}_count"] = out.get(f"{op.kind}_count", 0) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+
+V5E_PEAK_FLOPS = 197e12        # bf16 / chip
+V5E_HBM_BW = 819e9             # bytes/s / chip
+V5E_ICI_BW = 50e9              # bytes/s per link (~3 links usable / chip)
+
+
+def roofline_terms(cost: Dict[str, float], coll: Dict[str, float],
+                   n_chips: int, model_flops: Optional[float] = None
+                   ) -> Dict[str, float]:
+    """Three roofline terms in seconds + diagnostics.
+
+    cost_analysis flops/bytes are whole-program (all devices) on some
+    backends and per-partition on others; on the CPU host-device backend
+    they are per-program-instance (the SPMD module is compiled once), so
+    we treat them as per-device values.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    compute_t = flops / V5E_PEAK_FLOPS
+    memory_t = bytes_ / V5E_HBM_BW
+    coll_t = float(coll.get("total_moved_bytes", 0.0)) / V5E_ICI_BW
+    dominant = max(("compute", compute_t), ("memory", memory_t),
+                   ("collective", coll_t), key=lambda kv: kv[1])[0]
+    out = dict(compute_s=compute_t, memory_s=memory_t, collective_s=coll_t,
+               dominant=dominant, hlo_flops=flops, hlo_bytes=bytes_,
+               collective_bytes=float(coll.get("total_moved_bytes", 0.0)),
+               cross_pod_bytes=float(coll.get("cross_pod_moved_bytes", 0.0)))
+    if model_flops:
+        per_dev = model_flops / n_chips
+        out["model_flops_per_device"] = per_dev
+        out["useful_flops_ratio"] = per_dev / flops if flops else 0.0
+    return out

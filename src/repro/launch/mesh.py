@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+ScalePool mapping (DESIGN.md §2): the inner axes ("data", "model") are
+one accelerator cluster's XLink domain (a 256-chip pod); the outer
+"pod" axis is the inter-cluster CXL fabric.  Functions, not module
+constants — importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int | None = None):
+    """Small mesh for in-process tests (requires forced host devices)."""
+    n = n_devices or len(jax.devices())
+    if n >= 8:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))

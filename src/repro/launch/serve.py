@@ -1,0 +1,89 @@
+"""Batched serving driver: prefill + decode over a sharded KV cache with
+optional tier-2 page spilling.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --batch 4 --prompt 64 --generate 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.api import build_model
+from repro.models.config import ShapeConfig
+from repro.runtime import serve as serve_rt
+from repro.sharding.partition import use_rules
+from repro.sharding.profiles import make_rules
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen1.5-0.5b")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt", type=int, default=64)
+    p.add_argument("--generate", type=int, default=32)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    max_seq = args.prompt + args.generate
+    shape = ShapeConfig("cli", "decode", max_seq, args.batch)
+    mesh = make_smoke_mesh()
+    rules = make_rules(cfg, shape, mesh, fsdp=False)
+
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt), 1, cfg.vocab)
+
+    decode_fn = jax.jit(serve_rt.make_decode_step(model),
+                        donate_argnums=(1,))
+
+    with use_rules(rules, mesh), jax.set_mesh(mesh):
+        cache = model.init_cache(args.batch, max_seq, dtype=jnp.float32)
+        t0 = time.time()
+        if cfg.family == "encdec":
+            frames = jax.random.normal(rng, (args.batch, cfg.enc_seq,
+                                             cfg.d_model), jnp.bfloat16)
+            logits, cache, enc = model.prefill(
+                params, {"frame_embeds": frames, "tokens": prompts}, cache)
+        else:
+            logits, cache = model.prefill(params, {"tokens": prompts}, cache)
+            enc = None
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        carry = {"tokens": jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32),
+                 "cache": cache, "index": jnp.int32(args.prompt)}
+        if enc is not None:
+            carry["enc_states"] = enc
+        generated = [np.asarray(carry["tokens"])]
+        t0 = time.time()
+        for _ in range(args.generate - 1):
+            logits, carry = decode_fn(params, carry)
+            generated.append(np.asarray(carry["tokens"]))
+        jax.block_until_ready(carry["tokens"])
+        t_decode = time.time() - t0
+
+    toks = np.concatenate(generated, axis=1)
+    tokens_per_s = args.batch * (args.generate - 1) / max(t_decode, 1e-9)
+    print(json.dumps({
+        "arch": cfg.name, "batch": args.batch, "prompt": args.prompt,
+        "generated": toks.shape[1],
+        "prefill_s": round(t_prefill, 3),
+        "decode_tok_per_s": round(tokens_per_s, 1),
+        "sample_tokens": toks[0, :8].tolist(),
+    }, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

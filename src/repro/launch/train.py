@@ -1,0 +1,123 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --steps 100 --batch 8 --seq 128 --dp-mode hierarchical
+
+Runs the full stack: data pipeline → sharded train step (GSPMD + optional
+hierarchical cross-pod phase) → AdamW → async checkpointing → fault-
+tolerant loop with straggler monitoring.  On real hardware the same
+driver runs under jax.distributed with the production mesh; on CPU it
+uses whatever devices exist (force more with XLA_FLAGS).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.tiering import TieringPolicy, offload_state_shardings
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.ckpt import checkpoint as ckpt
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.api import build_model
+from repro.models.config import ShapeConfig
+from repro.optim.adamw import AdamW
+from repro.runtime import train as train_rt
+from repro.runtime.ft import FaultTolerantLoop, StragglerMonitor
+from repro.sharding.partition import use_rules
+from repro.sharding.profiles import make_rules
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="olmo-1b")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--dp-mode", default="auto", choices=["auto", "hierarchical"])
+    p.add_argument("--compress-pod", action="store_true")
+    p.add_argument("--offload-optimizer", action="store_true")
+    p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    optimizer = AdamW(lr=args.lr)
+    shape = ShapeConfig("cli", "train", args.seq, args.batch,
+                        microbatches=args.microbatches)
+
+    mesh = make_smoke_mesh()
+    multi_pod = "pod" in mesh.axis_names
+    rules = make_rules(cfg, shape, mesh, fsdp=False)
+    dp_mode = args.dp_mode if multi_pod else "auto"
+    tcfg = train_rt.TrainStepConfig(dp_mode=dp_mode,
+                                    compress_pod=args.compress_pod,
+                                    microbatches=args.microbatches)
+
+    rng = jax.random.PRNGKey(0)
+    state = train_rt.init_state(model, optimizer, rng, tcfg)
+    step_fn, state_sh = train_rt.make_train_step(
+        model, optimizer, shape, mesh=mesh, rules=rules, tcfg=tcfg)
+    if args.offload_optimizer and state_sh is not None:
+        state_sh = offload_state_shardings(state_sh, TieringPolicy())
+
+    pipe = DataPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                   global_batch=args.batch))
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    def train_step(state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        with use_rules(rules, mesh), jax.set_mesh(mesh):
+            return jit_step(state, batch)
+
+    ckpt_dir = Path(args.ckpt_dir)
+    last = {"state": state, "step": 0}
+
+    def save_fn(s, step):
+        last["state"], last["step"] = s, step
+        ckpt.save(ckpt_dir / f"step{step}",
+                  {"params": s.params, "mu": s.opt.mu, "nu": s.opt.nu},
+                  step=step, extra={"pipeline": pipe.state.to_dict()},
+                  asynchronous=True)
+
+    def restore_fn():
+        return last["state"], last["step"]
+
+    loop = FaultTolerantLoop(train_step, save_fn, restore_fn, pipe,
+                             ckpt_every=args.ckpt_every,
+                             monitor=StragglerMonitor())
+
+    t0 = time.time()
+    state = loop.run(state, args.steps)
+    dt = time.time() - t0
+
+    losses = [h["loss"] for h in loop.history]
+    print(json.dumps({
+        "arch": cfg.name, "steps": args.steps,
+        "devices": len(jax.devices()), "mesh": dict(zip(mesh.axis_names,
+                                                        mesh.devices.shape)),
+        "dp_mode": dp_mode,
+        "loss_first": losses[0], "loss_last": losses[-1],
+        "loss_drop": losses[0] - losses[-1],
+        "wall_s": round(dt, 1), "s_per_step": round(dt / args.steps, 3),
+        "straggler_events": len(loop.monitor.events),
+        "restarts": loop.restarts,
+    }, indent=2))
+    return 0 if losses[-1] < losses[0] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,158 @@
+"""Uniform model API over all families.
+
+``build_model(cfg)`` returns a ``Model`` whose members are plain
+functions, suitable for jax.jit / AOT lowering:
+
+    model.init(rng)                      -> params
+    model.param_axes()                   -> logical-axis pytree (matches params)
+    model.loss(params, batch)            -> scalar
+    model.init_cache(batch, max_seq)     -> cache pytree
+    model.cache_axes()                   -> logical-axis pytree for the cache
+    model.prefill(params, batch, cache)  -> (logits, cache[, enc_states])
+    model.decode(params, tokens, cache, index[, enc_states]) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, mamba2, moe, transformer
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    param_axes: Callable[[], Any]
+    loss: Callable[..., jax.Array]
+    init_cache: Callable[..., Any]
+    cache_axes: Callable[[], Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig, *, moe_groups: int = 1) -> Model:
+    if cfg.family == "dense":
+        m = transformer
+        return Model(
+            cfg=cfg,
+            init=lambda rng: m.init_params(rng, cfg),
+            param_axes=lambda: m.param_axes(cfg),
+            loss=lambda p, b, **kw: m.loss_fn(p, cfg, b, **kw),
+            init_cache=lambda b, s, **kw: m.init_cache(cfg, b, s, **kw),
+            cache_axes=lambda: m.cache_axes(),
+            prefill=lambda p, b, c: m.prefill(p, cfg, b, c),
+            decode=lambda p, t, c, i: m.decode_step(p, cfg, t, c, i),
+        )
+    if cfg.family == "moe":
+        m = moe
+        return Model(
+            cfg=cfg,
+            init=lambda rng: m.init_params(rng, cfg),
+            param_axes=lambda: m.param_axes(cfg),
+            loss=lambda p, b, **kw: m.loss_fn(p, cfg, b, groups=moe_groups, **kw),
+            init_cache=lambda b, s, **kw: m.init_cache(cfg, b, s, **kw),
+            cache_axes=lambda: m.cache_axes(),
+            prefill=lambda p, b, c: m.prefill(p, cfg, b, c, groups=moe_groups),
+            decode=lambda p, t, c, i: m.decode_step(p, cfg, t, c, i,
+                                                    groups=moe_groups),
+        )
+    if cfg.family == "ssm":
+        m = mamba2
+        return Model(
+            cfg=cfg,
+            init=lambda rng: m.init_params(rng, cfg),
+            param_axes=lambda: m.param_axes(cfg),
+            loss=lambda p, b, **kw: m.loss_fn(p, cfg, b, **kw),
+            init_cache=lambda b, s, **kw: m.init_cache(cfg, b, s, **kw),
+            cache_axes=lambda: m.cache_axes(),
+            prefill=lambda p, b, c: m.prefill(p, cfg, b, c),
+            decode=lambda p, t, c, i: m.decode_step(p, cfg, t, c, i),
+        )
+    if cfg.family == "hybrid":
+        m = hybrid
+        return Model(
+            cfg=cfg,
+            init=lambda rng: m.init_params(rng, cfg),
+            param_axes=lambda: m.param_axes(cfg),
+            loss=lambda p, b, **kw: m.loss_fn(p, cfg, b, **kw),
+            init_cache=lambda b, s, **kw: m.init_cache(cfg, b, s, **kw),
+            cache_axes=lambda: m.cache_axes(cfg),
+            prefill=lambda p, b, c: m.prefill(p, cfg, b, c),
+            decode=lambda p, t, c, i: m.decode_step(p, cfg, t, c, i),
+        )
+    if cfg.family == "encdec":
+        m = encdec
+        return Model(
+            cfg=cfg,
+            init=lambda rng: m.init_params(rng, cfg),
+            param_axes=lambda: m.param_axes(cfg),
+            loss=lambda p, b, **kw: m.loss_fn(p, cfg, b, **kw),
+            init_cache=lambda b, s, **kw: m.init_cache(cfg, b, s, **kw),
+            cache_axes=lambda: m.cache_axes(),
+            prefill=lambda p, b, c: m.prefill(p, cfg, b, c),
+            decode=lambda p, t, c, i, enc: m.decode_step(p, cfg, t, c, i, enc),
+        )
+    raise ValueError(cfg.family)
+
+
+def layer_scan_trips(cfg: ModelConfig) -> int:
+    """Trip count of the (outer) layer scan — the extrapolated dimension
+    of the two-point cost analysis (see repro.models.unroll)."""
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import group_layout
+        return group_layout(cfg)[0]
+    if cfg.family == "encdec":
+        assert cfg.n_enc_layers == cfg.n_layers, (
+            "two-point extrapolation assumes equal enc/dec scan lengths")
+        return cfg.n_layers
+    return cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# input specs: ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract inputs for one (arch, shape) cell — no allocation.
+
+    train/prefill: the full token batch; decode: one new token per
+    sequence (the KV/state cache is part of the step signature, built by
+    ``init_cache`` specs separately).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.frontend == "vision":
+            # stub: precomputed patch embeddings replace token embedding
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+            del specs["tokens"]
+        if cfg.family == "encdec":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "vision":
+            specs = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+        if cfg.family == "encdec":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        if cfg.family == "encdec":
+            specs["enc_states"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    raise ValueError(shape.kind)

@@ -1,0 +1,266 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, d_model).  The encoder runs
+bidirectional attention over the frames; the decoder is a causal LM with
+cross-attention into the encoder states.  Whisper uses GELU MLPs
+(ungated), pre-LayerNorm, and no RoPE (sinusoidal/learned positions; we
+use sinusoidal for shape flexibility — noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.unroll import scan_unroll
+from repro.sharding.partition import constrain
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """positions: (S,) -> (S, d) float32."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / max(1, half - 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_cfg(cfg: ModelConfig, *, causal: bool) -> L.AttentionConfig:
+    return L.AttentionConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, qkv_bias=True, qk_norm=False,
+        causal=causal, use_rope=False, norm_eps=cfg.norm_eps)
+
+
+def _mlp_cfg(cfg: ModelConfig) -> L.MLPConfig:
+    return L.MLPConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                       activation="gelu", gated=False)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_enc_block(key, cfg: ModelConfig, dtype):
+    ka, km, k1, k2 = jax.random.split(key, 4)
+    return {
+        "attn": L.init_attention(ka, _attn_cfg(cfg, causal=False), dtype),
+        "mlp": L.init_mlp(km, _mlp_cfg(cfg), dtype),
+        "norm1": L.init_norm(k1, cfg.d_model, "layernorm", dtype),
+        "norm2": L.init_norm(k2, cfg.d_model, "layernorm", dtype),
+    }
+
+
+def enc_block_axes(cfg: ModelConfig):
+    return {
+        "attn": L.attention_axes(_attn_cfg(cfg, causal=False)),
+        "mlp": L.mlp_axes(_mlp_cfg(cfg)),
+        "norm1": L.norm_axes("layernorm"),
+        "norm2": L.norm_axes("layernorm"),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig, dtype):
+    ka, kc, km, k1, k2, k3 = jax.random.split(key, 6)
+    return {
+        "self_attn": L.init_attention(ka, _attn_cfg(cfg, causal=True), dtype),
+        "cross_attn": L.init_attention(kc, _attn_cfg(cfg, causal=False), dtype),
+        "mlp": L.init_mlp(km, _mlp_cfg(cfg), dtype),
+        "norm1": L.init_norm(k1, cfg.d_model, "layernorm", dtype),
+        "norm2": L.init_norm(k2, cfg.d_model, "layernorm", dtype),
+        "norm3": L.init_norm(k3, cfg.d_model, "layernorm", dtype),
+    }
+
+
+def dec_block_axes(cfg: ModelConfig):
+    return {
+        "self_attn": L.attention_axes(_attn_cfg(cfg, causal=True)),
+        "cross_attn": L.attention_axes(_attn_cfg(cfg, causal=False)),
+        "mlp": L.mlp_axes(_mlp_cfg(cfg)),
+        "norm1": L.norm_axes("layernorm"),
+        "norm2": L.norm_axes("layernorm"),
+        "norm3": L.norm_axes("layernorm"),
+    }
+
+
+def enc_block_fwd(params, x, cfg: ModelConfig, positions):
+    h = L.apply_norm(x, params["norm1"], "layernorm")
+    attn, _ = L.attention_fwd(params["attn"], h, _attn_cfg(cfg, causal=False),
+                              positions=positions)
+    x = x + attn
+    h = L.apply_norm(x, params["norm2"], "layernorm")
+    x = x + L.mlp_fwd(params["mlp"], h, _mlp_cfg(cfg))
+    return constrain(x, "batch", "seq_q", "embed")
+
+
+def dec_block_fwd(params, x, cfg: ModelConfig, *, positions, enc_kv,
+                  kv_cache=None, cache_index=None):
+    """enc_kv: (k, v) precomputed from encoder states for this layer."""
+    h = L.apply_norm(x, params["norm1"], "layernorm")
+    attn, new_cache = L.attention_fwd(
+        params["self_attn"], h, _attn_cfg(cfg, causal=True),
+        positions=positions, kv_cache=kv_cache, cache_index=cache_index)
+    x = x + attn
+    h = L.apply_norm(x, params["norm2"], "layernorm")
+    cross, _ = L.attention_fwd(
+        params["cross_attn"], h, _attn_cfg(cfg, causal=False),
+        positions=positions, kv_override=enc_kv)
+    x = x + cross
+    h = L.apply_norm(x, params["norm3"], "layernorm")
+    x = x + L.mlp_fwd(params["mlp"], h, _mlp_cfg(cfg))
+    return constrain(x, "batch", "seq_q", "embed"), new_cache
+
+
+def cross_kv(params, cfg: ModelConfig, enc_states: jax.Array):
+    """Precompute cross-attention K/V for one decoder layer."""
+    B, S, _ = enc_states.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_states, params["cross_attn"]["wk"])
+    v = jnp.einsum("bsd,dh->bsh", enc_states, params["cross_attn"]["wv"])
+    k = (k + params["cross_attn"]["bk"]).reshape(B, S, KV, hd)
+    v = (v + params["cross_attn"]["bv"]).reshape(B, S, KV, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = T._dtype(cfg.param_dtype)
+    ke, ken, kd, kf1, kf2 = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ken, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embedding": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: init_enc_block(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_block(k, cfg, dtype))(dec_keys),
+        "enc_norm": L.init_norm(kf1, cfg.d_model, "layernorm", dtype),
+        "dec_norm": L.init_norm(kf2, cfg.d_model, "layernorm", dtype),
+    }
+
+
+def param_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    def lift(tree):
+        return jax.tree.map(lambda ax: ("layers",) + ax, tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embedding": L.embedding_axes(),
+        "enc_layers": lift(enc_block_axes(cfg)),
+        "dec_layers": lift(dec_block_axes(cfg)),
+        "enc_norm": L.norm_axes("layernorm"),
+        "dec_norm": L.norm_axes("layernorm"),
+    }
+
+
+def encode(params, cfg: ModelConfig, frame_embeds: jax.Array,
+           remat: bool = False) -> jax.Array:
+    """frame_embeds: (B, enc_seq, d_model) — stub frontend output."""
+    dtype = T._dtype(cfg.compute_dtype)
+    S = frame_embeds.shape[1]
+    pos = _sinusoidal(jnp.arange(S), cfg.d_model).astype(dtype)
+    x = frame_embeds.astype(dtype) + pos[None]
+    x = constrain(x, "batch", "seq_q", "embed")
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+
+    def body(x, layer_params):
+        return enc_block_fwd(layer_params, x, cfg, positions), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = lax.scan(body, x, params["enc_layers"], unroll=scan_unroll())
+    return L.apply_norm(x, params["enc_norm"], "layernorm")
+
+
+def decode(params, cfg: ModelConfig, tokens: jax.Array, enc_states: jax.Array,
+           *, cache=None, cache_index=None, remat: bool = False):
+    dtype = T._dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = L.embed(params["embedding"], tokens).astype(dtype)
+    if cache_index is None:
+        positions = jnp.arange(S)
+    else:
+        positions = cache_index + jnp.arange(S)
+    x = x + _sinusoidal(positions, cfg.d_model).astype(dtype)[None]
+    positions_b = positions[None, :].astype(jnp.int32)
+
+    # cross-attention K/V per layer, computed once from encoder states
+    ckv = jax.vmap(lambda p: cross_kv(p, cfg, enc_states))(params["dec_layers"])
+
+    def body(x, scanned):
+        if cache is None:
+            layer_params, ck, cv = scanned
+            kv = None
+        else:
+            layer_params, ck, cv, sk, sv = scanned
+            kv = (sk, sv)
+        x, new_kv = dec_block_fwd(layer_params, x, cfg, positions=positions_b,
+                                  enc_kv=(ck, cv), kv_cache=kv,
+                                  cache_index=cache_index)
+        return x, (None if cache is None else new_kv)
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cache is None:
+        x, _ = lax.scan(body, x, (params["dec_layers"], ckv[0], ckv[1]),
+                        unroll=scan_unroll())
+        new_cache = None
+    else:
+        x, (nk, nv) = lax.scan(
+            body, x, (params["dec_layers"], ckv[0], ckv[1], cache["k"], cache["v"]),
+            unroll=scan_unroll())
+        new_cache = {"k": nk, "v": nv}
+
+    x = L.apply_norm(x, params["dec_norm"], "layernorm")
+    return x, new_cache
+
+
+def forward(params, cfg: ModelConfig, batch, *, cache=None, cache_index=None,
+            remat: bool = False):
+    """batch: {frame_embeds, tokens, labels?} or decode {tokens, enc_states}."""
+    params = T.cast_params(params, cfg)
+    if "enc_states" in batch:
+        enc_states = batch["enc_states"]
+    else:
+        enc_states = encode(params, cfg, batch["frame_embeds"], remat=remat)
+    hidden, new_cache = decode(params, cfg, batch["tokens"], enc_states,
+                               cache=cache, cache_index=cache_index, remat=remat)
+    return hidden, new_cache, enc_states
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    hidden, _, _ = forward(params, cfg, batch, remat=remat)
+    logits = L.unembed(params["embedding"], hidden, cfg.vocab)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+cache_axes = T.cache_axes
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    hidden, new_cache, enc_states = forward(
+        params, cfg, batch, cache=cache, cache_index=jnp.int32(0), remat=True)
+    logits = L.unembed(params["embedding"], hidden[:, -1:, :], cfg.vocab)
+    return logits, new_cache, enc_states
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_index,
+                enc_states):
+    hidden, new_cache, _ = forward(
+        params, cfg, {"tokens": tokens, "enc_states": enc_states},
+        cache=cache, cache_index=cache_index)
+    logits = L.unembed(params["embedding"], hidden, cfg.vocab)
+    return logits, new_cache

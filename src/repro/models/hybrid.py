@@ -1,0 +1,219 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED transformer block
+invoked every ``attn_every`` layers (weight reuse, separate KV caches per
+invocation point).
+
+Layer layout for n_layers = 81, attn_every = 6:
+  13 groups of [shared-attn-block, 6 mamba layers] + 3 tail mamba layers
+(the shared block therefore runs 13 times with 13 distinct KV caches).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.unroll import inner_scan_unroll, scan_unroll
+from repro.sharding.partition import constrain
+
+
+def group_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, layers_per_group, tail_layers)."""
+    k = cfg.attn_every
+    n_groups = cfg.n_layers // k
+    tail = cfg.n_layers - n_groups * k
+    return n_groups, k, tail
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = T._dtype(cfg.param_dtype)
+    ke, ks, km, kt, kf = jax.random.split(key, 5)
+    n_groups, per, tail = group_layout(cfg)
+
+    main_keys = jax.random.split(km, n_groups * per)
+    main_keys = main_keys.reshape((n_groups, per) + main_keys.shape[1:])
+    stacked_main = jax.vmap(jax.vmap(lambda k: M.init_block(k, cfg, dtype)))(main_keys)
+    p = {
+        "embedding": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "shared_attn": T.init_block(ks, cfg, dtype),
+        "mamba_main": stacked_main,                       # (G, per, ...)
+        "final_norm": L.init_norm(kf, cfg.d_model, cfg.norm_type, dtype),
+    }
+    if tail:
+        p["mamba_tail"] = jax.vmap(lambda k: M.init_block(k, cfg, dtype))(
+            jax.random.split(kt, tail))
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    n_groups, per, tail = group_layout(cfg)
+
+    def lift(tree, n_lead):
+        return jax.tree.map(lambda ax: ("layers",) * n_lead + ax, tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    p = {
+        "embedding": L.embedding_axes(),
+        "shared_attn": T.block_axes(cfg),
+        "mamba_main": lift(M.block_axes(cfg), 2),
+        "final_norm": L.norm_axes(cfg.norm_type),
+    }
+    if tail:
+        p["mamba_tail"] = lift(M.block_axes(cfg), 1)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    n_groups, per, tail = group_layout(cfg)
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * G * N
+    kv_shape = (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    c = {
+        "k": jnp.zeros(kv_shape, dtype),
+        "v": jnp.zeros(kv_shape, dtype),
+        "conv": jnp.zeros((n_groups, per, batch, cfg.ssm_conv_width - 1, conv_ch),
+                          jnp.float32),
+        "ssd": jnp.zeros((n_groups, per, batch, cfg.ssm_heads,
+                          cfg.ssm_head_dim, N), jnp.float32),
+    }
+    if tail:
+        c["conv_tail"] = jnp.zeros((tail, batch, cfg.ssm_conv_width - 1, conv_ch),
+                                   jnp.float32)
+        c["ssd_tail"] = jnp.zeros((tail, batch, cfg.ssm_heads,
+                                   cfg.ssm_head_dim, N), jnp.float32)
+    return c
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    n_groups, per, tail = group_layout(cfg)
+    kv = ("layers", "batch", "seq_kv", "kv_heads", "head_dim")
+    c = {
+        "k": kv, "v": kv,
+        "conv": ("layers", "layers2", "batch", None, "ssm_conv_ch"),
+        "ssd": ("layers", "layers2", "batch", "ssm_heads", None, None),
+    }
+    if tail:
+        c["conv_tail"] = ("layers", "batch", None, "ssm_conv_ch")
+        c["ssd_tail"] = ("layers", "batch", "ssm_heads", None, None)
+    return c
+
+
+def forward(params, cfg: ModelConfig, batch, *, cache=None, cache_index=None,
+            remat: bool = False):
+    params = T.cast_params(params, cfg)
+    x = T._embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    decode = cache is not None and S == 1
+    if cache_index is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    else:
+        positions = (cache_index + jnp.arange(S))[None, :].astype(jnp.int32)
+
+    n_groups, per, tail = group_layout(cfg)
+    shared = params["shared_attn"]
+
+    def mamba_apply(layer_params, x, conv_s, ssd_s):
+        if cache is None:
+            x, _ = M.block_fwd(layer_params, x, cfg)
+            return x, conv_s, ssd_s
+        if decode:
+            x, (nc, ns) = M.block_decode(layer_params, x, cfg,
+                                         conv_state=conv_s, ssd_state=ssd_s)
+        else:
+            x, (nc, ns) = M.block_fwd(layer_params, x, cfg,
+                                      conv_state=conv_s, ssd_state=ssd_s)
+        return x, nc, ns.astype(ssd_s.dtype)
+
+    def group_body(x, scanned):
+        if cache is None:
+            group_params = scanned
+            kv = None
+            conv_g = jnp.zeros((per, B, cfg.ssm_conv_width - 1,
+                                cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state),
+                               jnp.float32)
+            ssd_g = jnp.zeros((per, B, cfg.ssm_heads, cfg.ssm_head_dim,
+                               cfg.ssm_state), jnp.float32)
+        else:
+            group_params, ck, cv, conv_g, ssd_g = scanned
+            kv = (ck, cv)
+        # shared attention block (same weights every group)
+        x, new_kv = T.block_fwd(shared, x, cfg, positions=positions,
+                                kv_cache=kv, cache_index=cache_index)
+
+        def inner(carry, inner_scanned):
+            x = carry
+            lp, cs, ss = inner_scanned
+            x, nc, ns = mamba_apply(lp, x, cs, ss)
+            return x, (nc, ns)
+
+        x, (ncs, nsss) = lax.scan(inner, x, (group_params, conv_g, ssd_g),
+                                  unroll=inner_scan_unroll())
+        if cache is None:
+            return x, None
+        nk, nv = new_kv
+        return x, (nk, nv, ncs, nsss)
+
+    if remat:
+        group_body = jax.checkpoint(group_body,
+                                    policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cache is None:
+        x, _ = lax.scan(group_body, x, params["mamba_main"],
+                        unroll=scan_unroll())
+        new_cache = None
+    else:
+        x, (nk, nv, ncs, nsss) = lax.scan(
+            group_body, x,
+            (params["mamba_main"], cache["k"], cache["v"],
+             cache["conv"], cache["ssd"]), unroll=scan_unroll())
+        new_cache = {"k": nk, "v": nv, "conv": ncs, "ssd": nsss}
+
+    if tail:
+        def tail_body(x, scanned):
+            if cache is None:
+                lp = scanned
+                x, _, _ = mamba_apply(lp, x, None, None)
+                return x, None
+            lp, cs, ss = scanned
+            x, nc, ns = mamba_apply(lp, x, cs, ss)
+            return x, (nc, ns)
+
+        if cache is None:
+            x, _ = lax.scan(tail_body, x, params["mamba_tail"],
+                            unroll=inner_scan_unroll())
+        else:
+            x, (nct, nst) = lax.scan(
+                tail_body, x,
+                (params["mamba_tail"], cache["conv_tail"], cache["ssd_tail"]),
+                unroll=inner_scan_unroll())
+            new_cache["conv_tail"] = nct
+            new_cache["ssd_tail"] = nst
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return x, new_cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    hidden, _ = forward(params, cfg, batch, remat=remat)
+    logits = L.unembed(params["embedding"], hidden, cfg.vocab)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    hidden, new_cache = forward(params, cfg, batch, cache=cache,
+                                cache_index=jnp.int32(0), remat=True)
+    logits = L.unembed(params["embedding"], hidden[:, -1:, :], cfg.vocab)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_index):
+    hidden, new_cache = forward(params, cfg, {"tokens": tokens}, cache=cache,
+                                cache_index=cache_index)
+    logits = L.unembed(params["embedding"], hidden, cfg.vocab)
+    return logits, new_cache

@@ -1,0 +1,382 @@
+"""Mamba2 (SSD — state-space duality) blocks and LM, pure-JAX reference.
+
+The SSD chunked block decomposition is matmul-rich (MXU-friendly): within
+each chunk of Q tokens the quadratic "attention-like" term runs as dense
+einsums, and chunk-to-chunk information flows through a small recurrent
+state (B, H, P, N) carried by ``lax.scan``.  The Pallas kernel in
+``repro.kernels.ssd_scan`` implements the same decomposition with VMEM
+tiling; this module is the oracle and the dry-run path.
+
+Decode is O(1) per token via the state recurrence (this is why the
+``long_500k`` cell runs for SSM archs).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.unroll import scan_unroll
+from repro.sharding.partition import constrain
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked scan)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B_mat: jax.Array,
+                C_mat: jax.Array, D: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    x:     (B, S, H, P)   per-head inputs
+    dt:    (B, S, H)      positive step sizes (post-softplus)
+    A:     (H,)           negative decay rates
+    B_mat: (B, S, G, N)   input projections (G groups, H % G == 0)
+    C_mat: (B, S, G, N)   output projections
+    D:     (H,)           skip connection
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    HG = H // G
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # zero-pad the tail chunk: dt=0 contributes nothing to states or
+        # outputs, so padding is exact.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = B_mat.reshape(Bsz, nc, Q, G, N).astype(f32)
+    Cc = C_mat.reshape(Bsz, nc, Q, G, N).astype(f32)
+
+    a = dtc * A.astype(f32)                       # (B,nc,Q,H)  negative
+    cum = jnp.cumsum(a, axis=2)                   # running decay within chunk
+    dtx = xc * dtc[..., None]                     # dt-weighted inputs
+
+    # ---- intra-chunk (quadratic, masked) ----
+    # scores[b,c,q,k,g] = C_q . B_k
+    scores = jnp.einsum("bcqgn,bckgn->bcqkg", Cc, Bc)
+    # decay[b,c,q,k,h] = exp(cum_q - cum_k), masked to k <= q.  The mask is
+    # applied INSIDE the exp (as -inf-ish) so the masked entries carry no
+    # gradient and cannot overflow (cum_q - cum_k > 0 above the diagonal).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    scores_h = jnp.repeat(scores, HG, axis=-1)    # broadcast groups -> heads
+    # (B,nc,Q,K,H) x (B,nc,K,H,P) -> (B,nc,Q,H,P)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", scores_h * decay, dtx)
+
+    # ---- chunk states ----
+    # w_k = exp(cum_last - cum_k): contribution of position k to the state
+    w = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    Bh = jnp.repeat(Bc, HG, axis=-2)              # (B,nc,Q,H,N)
+    # states[b,c,h,p,n] = sum_k w[k,h] * dtx[k,h,p] * B[k,h,n]
+    states = jnp.einsum("bckh,bckhp,bckhn->bchpn", w, dtx, Bh)
+
+    # ---- inter-chunk recurrence (associative scan: log-depth, no while
+    # loop — keeps dry-run cost analysis exact and parallelizes on TPU) ----
+    chunk_decay = jnp.exp(jnp.sum(a, axis=2))     # (B,nc,H)
+    h0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    dec_b = jnp.broadcast_to(chunk_decay[..., None, None],
+                             (Bsz, nc, H, 1, 1))
+
+    def combine(earlier, later):
+        a1, b1 = earlier
+        a2, b2 = later
+        return a1 * a2, a2 * b1 + b2
+
+    cum_dec, h_zero = lax.associative_scan(combine, (dec_b, states), axis=1)
+    h_incl = h_zero + cum_dec * h0[:, None]        # h after chunk c
+    h_prevs = jnp.concatenate([h0[:, None], h_incl[:, :-1]], axis=1)
+    final = h_incl[:, -1]
+
+    # ---- inter-chunk output ----
+    Ch = jnp.repeat(Cc, HG, axis=-2)              # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, h_prevs, jnp.exp(cum))
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y[:, :S_orig].astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, A, B_mat, C_mat, D, state):
+    """One-token SSD update.
+
+    x: (B,H,P), dt: (B,H), B_mat/C_mat: (B,G,N), state: (B,H,P,N).
+    """
+    Bsz, H, P = x.shape
+    G, N = B_mat.shape[1], B_mat.shape[2]
+    f32 = jnp.float32
+    xf, dtf = x.astype(f32), dt.astype(f32)
+    Bh = jnp.broadcast_to(B_mat[:, :, None].astype(f32), (Bsz, G, H // G, N)
+                          ).reshape(Bsz, H, N)
+    Ch = jnp.broadcast_to(C_mat[:, :, None].astype(f32), (Bsz, G, H // G, N)
+                          ).reshape(Bsz, H, N)
+    decay = jnp.exp(dtf * A.astype(f32))                       # (B,H)
+    incr = (dtf[..., None] * xf)[..., None] * Bh[:, :, None, :]  # (B,H,P,N)
+    new_state = decay[..., None, None] * state.astype(f32) + incr
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + D.astype(f32)[None, :, None] * xf
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width w) with streaming state
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, kernel: jax.Array, bias: jax.Array,
+                  prev: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, C); kernel: (w, C); prev: (B, w-1, C) streaming tail.
+    Returns (y: (B,S,C), new_tail: (B, w-1, C))."""
+    B, S, C = x.shape
+    w = kernel.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, w - 1, C), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)       # (B, S+w-1, C)
+    idx = jnp.arange(S)[:, None] + jnp.arange(w)[None, :]
+    windows = xp[:, idx, :]                        # (B, S, w, C)
+    y = jnp.einsum("bswc,wc->bsc", windows.astype(jnp.float32),
+                   kernel.astype(jnp.float32))
+    y = (y + bias.astype(jnp.float32)).astype(x.dtype)
+    new_tail = xp[:, S:, :] if w > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y, new_tail
+
+
+# ---------------------------------------------------------------------------
+# mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    conv_ch = di + 2 * G * N
+    proj_out = 2 * di + 2 * G * N + H
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": L.fan_in_init(ks[0], (d, proj_out), dtype),
+        "conv_kernel": L.normal_init(ks[1], (w, conv_ch), dtype, scale=0.5 / w),
+        "conv_bias": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": L.init_norm(ks[2], di, "rmsnorm", dtype),
+        "out_proj": L.fan_in_init(ks[3], (di, d), dtype),
+        "in_norm": L.init_norm(ks[4], d, cfg.norm_type, dtype),
+    }
+
+
+def block_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "in_proj": ("embed", "ssm_inner_proj"),
+        "conv_kernel": (None, "ssm_conv_ch"),
+        "conv_bias": ("ssm_conv_ch",),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm": {"scale": ("ssm_inner_norm",)},
+        "out_proj": ("ssm_inner", "embed"),
+        "in_norm": L.norm_axes(cfg.norm_type),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC: jax.Array):
+    di = cfg.d_inner
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+    x = xBC[..., :di]
+    B_mat = xBC[..., di:di + G * N]
+    C_mat = xBC[..., di + G * N:]
+    return x, B_mat, C_mat
+
+
+def block_fwd(params, u: jax.Array, cfg: ModelConfig, *,
+              conv_state: Optional[jax.Array] = None,
+              ssd_state: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence mamba2 block.  u: (B, S, d_model)."""
+    B, S, d = u.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+
+    h = L.apply_norm(u, params["in_norm"], cfg.norm_type)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", h, params["in_proj"])
+    zxbcdt = constrain(zxbcdt, "batch", "seq_q", "ssm_inner_proj")
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    xBC, new_conv = causal_conv1d(xBC, params["conv_kernel"],
+                                  params["conv_bias"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    x, B_mat, C_mat = _split_xbc(cfg, xBC)
+
+    x = x.reshape(B, S, H, P)
+    x = constrain(x, "batch", "seq_q", "ssm_heads", None)
+    B_mat = B_mat.reshape(B, S, G, N)
+    C_mat = C_mat.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, final_state = ssd_chunked(x, dt, A, B_mat, C_mat, params["D"],
+                                 cfg.ssm_chunk, init_state=ssd_state)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  params["norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    out = constrain(u + out, "batch", "seq_q", "embed")
+    return out, (new_conv, final_state)
+
+
+def block_decode(params, u: jax.Array, cfg: ModelConfig, *,
+                 conv_state: jax.Array, ssd_state: jax.Array):
+    """One-token mamba2 step.  u: (B, 1, d_model)."""
+    B = u.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+
+    h = L.apply_norm(u, params["in_norm"], cfg.norm_type)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", h, params["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    xBC, new_conv = causal_conv1d(xBC, params["conv_kernel"],
+                                  params["conv_bias"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    x, B_mat, C_mat = _split_xbc(cfg, xBC)
+
+    x1 = x[:, 0].reshape(B, H, P)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_state = ssd_decode_step(
+        x1, dt1, A, B_mat[:, 0].reshape(B, G, N), C_mat[:, 0].reshape(B, G, N),
+        params["D"], ssd_state)
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = L.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  params["norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return u + out, (new_conv, new_state)
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 LM
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    from repro.models.transformer import _dtype
+    dtype = _dtype(cfg.param_dtype)
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+    return {
+        "embedding": L.init_embedding(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": L.init_norm(kf, cfg.d_model, cfg.norm_type, dtype),
+    }
+
+
+def param_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    def lift(tree):
+        return jax.tree.map(lambda ax: ("layers",) + ax, tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embedding": L.embedding_axes(),
+        "layers": lift(block_axes(cfg)),
+        "final_norm": L.norm_axes(cfg.norm_type),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.float32) -> Dict[str, jax.Array]:
+    G, N = cfg.ssm_n_groups, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                          cfg.ssm_head_dim, N), dtype),
+    }
+
+
+def cache_axes() -> Dict[str, Any]:
+    return {"conv": ("layers", "batch", None, "ssm_conv_ch"),
+            "ssd": ("layers", "batch", "ssm_heads", None, None)}
+
+
+def forward(params, cfg: ModelConfig, batch, *, cache=None, cache_index=None,
+            remat: bool = False):
+    from repro.models.transformer import _embed_inputs, cast_params
+    params = cast_params(params, cfg)
+    x = _embed_inputs(params, cfg, batch)
+    decode = cache is not None and x.shape[1] == 1
+
+    def body(x, scanned):
+        if cache is None:
+            x, _ = block_fwd(scanned, x, cfg)
+            return x, None
+        layer_params, conv_s, ssd_s = scanned
+        if decode:
+            x, (nc, ns) = block_decode(layer_params, x, cfg,
+                                       conv_state=conv_s, ssd_state=ssd_s)
+        else:
+            x, (nc, ns) = block_fwd(layer_params, x, cfg,
+                                    conv_state=conv_s, ssd_state=ssd_s)
+        return x, (nc, ns.astype(ssd_s.dtype))
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cache is None:
+        x, _ = lax.scan(body, x, params["layers"], unroll=scan_unroll())
+        new_cache = None
+    else:
+        x, (ncs, nss) = lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssd"]),
+            unroll=scan_unroll())
+        new_cache = {"conv": ncs, "ssd": nss}
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return x, new_cache
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, remat: bool = True):
+    hidden, _ = forward(params, cfg, batch, remat=remat)
+    logits = L.unembed(params["embedding"], hidden, cfg.vocab)
+    return L.cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    hidden, new_cache = forward(params, cfg, batch, cache=cache,
+                                cache_index=jnp.int32(0), remat=True)
+    logits = L.unembed(params["embedding"], hidden[:, -1:, :], cfg.vocab)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, cache_index):
+    hidden, new_cache = forward(params, cfg, {"tokens": tokens}, cache=cache,
+                                cache_index=cache_index)
+    logits = L.unembed(params["embedding"], hidden, cfg.vocab)
+    return logits, new_cache

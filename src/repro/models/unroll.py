@@ -1,0 +1,65 @@
+"""Global scan-unroll switch for cost-exact dry-run lowering.
+
+XLA's HloCostAnalysis counts a ``while`` body ONCE regardless of trip
+count, so rolled layer scans under-report flops/bytes/collective traffic
+(verified empirically — EXPERIMENTS.md §Roofline-methodology).  Two
+remedies, selected by mode:
+
+* ``full``  — unroll layer scans completely (exact, expensive compile);
+* ``k=1 / k=2`` — lower twice with ``unroll=k``; since the emitted HLO
+  contains exactly k body copies, cost(k) = outside + k*body is affine
+  in k, and the true cost is outside + trips*body.  Two cheap compiles
+  replace one gigantic one (this is what the dry-run does by default).
+
+Inner scans with small trip counts (zamba's 6-layer groups / 3-layer
+tail) always unroll fully in any non-off mode so they land in the
+measured body/outside exactly.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Union
+
+Mode = Union[str, int]   # "off" | "full" | k (int)
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mode: Mode = "off"
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def unroll_mode(mode: Mode):
+    prev = _STATE.mode
+    _STATE.mode = mode
+    try:
+        yield
+    finally:
+        _STATE.mode = prev
+
+
+# back-compat alias used by earlier call sites
+@contextlib.contextmanager
+def unrolled_scans(on: bool = True):
+    with unroll_mode("full" if on else "off"):
+        yield
+
+
+def scan_unroll():
+    """unroll= value for LAYER scans (the extrapolated dimension)."""
+    m = _STATE.mode
+    if m == "off":
+        return 1
+    if m == "full":
+        return True
+    return int(m)
+
+
+def inner_scan_unroll():
+    """unroll= value for small fixed inner scans (always exact)."""
+    return 1 if _STATE.mode == "off" else True

@@ -1,0 +1,76 @@
+"""AdamW from scratch (no optax dependency), with:
+
+* fp32 moments regardless of param dtype (mixed-precision training),
+* optional tier-2 offload of the moments (see repro.core.tiering),
+* optimizer-state sharding that follows the parameter sharding (with
+  FSDP parameter layouts this is the ZeRO analogue: states live only on
+  the shard that owns the parameters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # ()
+    mu: Any                  # fp32 pytree like params
+    nu: Any                  # fp32 pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def state_axes(self, param_axes) -> AdamWState:
+        """Logical axes for the state pytree (moments follow params)."""
+        return AdamWState(step=(), mu=param_axes, nu=param_axes)
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState, jax.Array]:
+        """Returns (new_params, new_state, grad_norm)."""
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(gf)) + 1e-30)
+        if self.grad_clip is not None:
+            scale = jnp.minimum(1.0, self.grad_clip / gnorm)
+            gf = jax.tree.map(lambda g: g * scale, gf)
+
+        step = state.step + 1
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            m = self.b1 * m + (1.0 - self.b1) * g
+            v = self.b2 * v + (1.0 - self.b2) * jnp.square(g)
+            mhat = m / c1
+            vhat = v / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - self.lr * (delta + self.weight_decay * pf)
+            return pf.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, gf, state.mu, state.nu)
+        # out is a tree of 3-tuples; split it
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step, new_mu, new_nu), gnorm

@@ -1,0 +1,165 @@
+"""Training-step factory: microbatched grad accumulation, remat, FSDP/TP
+via GSPMD shardings, and the ScalePool hierarchical cross-pod gradient
+phase (shard_map manual over ``pod``, GSPMD auto inside the pod).
+
+Modes:
+  dp_mode="auto"         — one GSPMD program over all mesh axes (the flat
+                           baseline for §Perf comparisons).
+  dp_mode="hierarchical" — the pod axis is manual: per-pod grads are
+                           computed by GSPMD on the intra-pod (XLink)
+                           axes, then explicitly reduced across pods
+                           (the CXL fabric phase), optionally with int8
+                           error-feedback compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.core import hierarchy
+from repro.models.api import Model, input_specs
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamW, AdamWState
+from repro.sharding.partition import Rules, tree_shardings, use_rules
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    residuals: Any     # int8-compression error feedback (or empty dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    dp_mode: str = "auto"              # auto | hierarchical
+    compress_pod: bool = False         # int8 EF on the cross-pod phase
+    microbatches: int = 1
+    remat: bool = True
+
+
+def _accumulated_grads(model: Model, params, batch, tcfg: TrainStepConfig):
+    """loss, grads averaged over the (local) batch, with optional
+    gradient-accumulation microbatching."""
+
+    def loss_fn(p, mb):
+        return model.loss(p, mb, remat=tcfg.remat)
+
+    if tcfg.microbatches <= 1:
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    mbs = jax.tree.map(
+        lambda x: x.reshape((tcfg.microbatches, x.shape[0] // tcfg.microbatches)
+                            + x.shape[1:]), batch)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        lsum, gsum = carry
+        l, g = jax.value_and_grad(loss_fn)(params, mb)
+        gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+        return (lsum + l, gsum), None
+
+    (lsum, gsum), _ = lax.scan(body, (jnp.float32(0.0), zeros), mbs)
+    inv = 1.0 / tcfg.microbatches
+    return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+
+def make_train_step(model: Model, optimizer: AdamW, shape: ShapeConfig, *,
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[Rules] = None,
+                    tcfg: TrainStepConfig = TrainStepConfig()):
+    """Returns (train_step, state_shardings, batch_shardings) — the step is
+    NOT jitted; callers jit (or AOT-lower) with the returned shardings."""
+
+    def core_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        loss, grads = _accumulated_grads(model, state.params, batch, tcfg)
+        residuals = state.residuals
+        if tcfg.dp_mode == "hierarchical":
+            grads, new_res = hierarchy.reduce_gradients_hierarchically(
+                grads, inter_axis="pod", compress=tcfg.compress_pod,
+                residuals=residuals.get("g") if tcfg.compress_pod else None)
+            loss = jax.lax.pmean(loss, "pod")
+            if tcfg.compress_pod:
+                residuals = {"g": new_res}
+        new_params, new_opt, gnorm = optimizer.update(grads, state.opt,
+                                                      state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": new_opt.step.astype(jnp.float32)}
+        return TrainState(new_params, new_opt, residuals), metrics
+
+    if tcfg.dp_mode == "hierarchical":
+        if mesh is None or "pod" not in mesh.axis_names:
+            raise ValueError("hierarchical dp_mode needs a mesh with a 'pod' axis")
+
+        # inside the manual-pod body, sharding constraints may only touch
+        # the auto axes — strip 'pod' from the rule table
+        inner_rules = rules.strip_axis("pod") if rules is not None else None
+
+        def step(state, batch):
+            def inner(state, batch):
+                with use_rules(inner_rules, mesh):
+                    new_state, metrics = core_step(state, batch)
+                metrics = {k: v[None] for k, v in metrics.items()}
+                return new_state, metrics
+
+            out_state_spec = jax.tree.map(lambda _: P(), state,
+                                          is_leaf=lambda x: x is None)
+            f = _shard_map(
+                inner, mesh=mesh,
+                in_specs=(jax.tree.map(lambda _: P(), state,
+                                       is_leaf=lambda x: x is None),
+                          jax.tree.map(lambda _: P("pod"), batch)),
+                out_specs=(out_state_spec,
+                           {"loss": P("pod"), "grad_norm": P("pod"),
+                            "step": P("pod")}),
+                check_vma=False, axis_names={"pod"})
+            new_state, metrics = f(state, batch)
+            metrics = {k: v[0] for k, v in metrics.items()}
+            return new_state, metrics
+    else:
+        def step(state, batch):
+            return core_step(state, batch)
+
+    # ---- sharding pytrees for jit in_shardings / AOT lowering ----
+    shardings = None
+    if mesh is not None and rules is not None:
+        p_ax = model.param_axes()
+        state_ax = TrainState(
+            params=p_ax,
+            opt=optimizer.state_axes(p_ax),
+            residuals={"g": p_ax} if tcfg.compress_pod else {},
+        )
+        state_sh = tree_shardings(mesh, rules, state_ax)
+        shardings = state_sh
+    return step, shardings
+
+
+def init_state(model: Model, optimizer: AdamW, rng,
+               tcfg: TrainStepConfig = TrainStepConfig()) -> TrainState:
+    params = model.init(rng)
+    opt = optimizer.init(params)
+    residuals = {}
+    if tcfg.compress_pod:
+        residuals = {"g": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+    return TrainState(params, opt, residuals)
+
+
+def batch_shardings(mesh: Mesh, rules: Rules, specs: Dict[str, jax.ShapeDtypeStruct]):
+    """Shardings for the input batch: leading dim over the batch axes."""
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, rules.spec(*axes))
+    return out

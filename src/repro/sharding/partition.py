@@ -1,0 +1,132 @@
+"""Logical-axis sharding: named activation/parameter axes → mesh axes.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"ff", "heads", ...).  A per-(arch, mesh) rule table maps logical names to
+mesh axes.  This keeps model code mesh-agnostic (the ScalePool
+composability requirement: any cluster shape, same model code).
+
+Usage:
+    rules = Rules({"batch": ("pod", "data"), "ff": "model", ...})
+    with use_rules(rules):
+        x = constrain(x, "batch", "seq", "embed")
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class Rules:
+    """Mapping from logical axis name → mesh axis (or tuple, or None)."""
+
+    def __init__(self, table: Dict[str, MeshAxes]):
+        self.table = dict(table)
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        out = []
+        used: set = set()
+        for name in logical_axes:
+            if name is None:
+                out.append(None)
+                continue
+            axes = self.table.get(name)
+            # a mesh axis may appear at most once in a PartitionSpec
+            if axes is None:
+                out.append(None)
+            elif isinstance(axes, str):
+                if axes in used:
+                    out.append(None)
+                else:
+                    used.add(axes)
+                    out.append(axes)
+            else:
+                free = tuple(a for a in axes if a not in used)
+                used.update(free)
+                out.append(free if free else None)
+        return P(*out)
+
+    def override(self, **kw: MeshAxes) -> "Rules":
+        t = dict(self.table)
+        t.update(kw)
+        return Rules(t)
+
+    def strip_axis(self, axis: str) -> "Rules":
+        """Remove one mesh axis from every rule (used inside shard_map
+        bodies where that axis is manual)."""
+        t: Dict[str, MeshAxes] = {}
+        for k, v in self.table.items():
+            if v is None or v == axis:
+                t[k] = None if v == axis else v
+            elif isinstance(v, tuple):
+                kept = tuple(a for a in v if a != axis)
+                t[k] = kept if kept else None
+            else:
+                t[k] = v
+        return Rules(t)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: Optional[Rules] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules], mesh: Optional[Mesh] = None):
+    prev = (_CTX.rules, _CTX.mesh)
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev
+
+
+def current_rules() -> Optional[Rules]:
+    return _CTX.rules
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if rules are active; identity otherwise.
+
+    Model code calls this unconditionally — on a single CPU device (smoke
+    tests) it is a no-op, under the dry-run mesh it pins GSPMD decisions.
+    """
+    rules = _CTX.rules
+    if rules is None:
+        return x
+    spec = rules.spec(*logical_axes)
+    if _CTX.mesh is not None:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_CTX.mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def logical_to_sharding(mesh: Mesh, rules: Rules, logical_axes) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(*logical_axes))
+
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf is a plain tuple of axis names / None (possibly
+    empty) — NOT a NamedTuple (those are pytree nodes, e.g. optimizer
+    states)."""
+    return (type(x) is tuple
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def tree_shardings(mesh: Mesh, rules: Rules, logical_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: logical_to_sharding(mesh, rules, axes),
+        logical_tree,
+        is_leaf=is_axes_leaf,
+    )

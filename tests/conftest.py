@@ -1,0 +1,29 @@
+import os
+
+# keep the default device count at 1 for smoke tests/benches; dry-run
+# sets XLA_FLAGS itself in a subprocess (see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(rng, cfg, B=2, S=16):
+    """Build a smoke batch for any family."""
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+    }
+    if cfg.frontend == "vision":
+        batch["embeds"] = jax.random.normal(rng, (B, S, cfg.d_model), jnp.bfloat16)
+        del batch["tokens"]
+    if cfg.family == "encdec":
+        batch["frame_embeds"] = jax.random.normal(
+            rng, (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch

@@ -1,0 +1,68 @@
+"""Unit tests for the post-SPMD HLO collective parser and roofline terms."""
+
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_shape_bytes():
+    assert H.shape_bytes("f32[16,16]") == 1024
+    assert H.shape_bytes("bf16[8]") == 16
+    assert H.shape_bytes("(f32[4], bf16[4])") == 24
+    assert H.shape_bytes("pred[]") == 1
+    assert H.shape_bytes("u32[2,3,4]") == 96
+
+
+def test_parse_collectives_basic():
+    hlo = """
+  %ar = f32[1024,128]{1,0} all-reduce(f32[1024,128]{1,0} %x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+  %ag = bf16[2048]{0} all-gather(bf16[256]{0} %y), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %rs = f32[128]{0} reduce-scatter(f32[1024]{0} %z), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+"""
+    ops = H.parse_collectives(hlo, pod_size=4)
+    assert len(ops) == 3
+    ar, ag, rs = ops
+    assert ar.kind == "all-reduce" and ar.group_size == 4
+    assert not ar.crosses_pod
+    assert ar.moved_bytes == pytest.approx(2 * 0.75 * 1024 * 128 * 4)
+    assert ag.crosses_pod          # group spans devices 0-7, pods of 4
+    assert ag.moved_bytes == pytest.approx(7 / 8 * 2048 * 2)
+    assert rs.moved_bytes == pytest.approx(7 / 8 * 128 * 4 * 8)
+
+
+def test_parse_iota_replica_groups():
+    # contiguous groups of 8 inside pods of 16: no crossing
+    hlo = ("%ar = f32[64]{0} all-reduce(f32[64]{0} %x), "
+           "replica_groups=[4,8]<=[32], to_apply=%sum\n")
+    ops = H.parse_collectives(hlo, pod_size=16)
+    assert len(ops) == 1
+    assert ops[0].group_size == 8
+    assert not ops[0].crosses_pod  # members 0..7 stay inside pod 0
+
+    # transposed (strided) groups span both pods
+    hlo = ("%ar = f32[64]{0} all-reduce(f32[64]{0} %x), "
+           "replica_groups=[4,8]<=[8,4]T(1,0), to_apply=%sum\n")
+    ops = H.parse_collectives(hlo, pod_size=16)
+    assert ops[0].crosses_pod  # group 0 = {0,4,...,28}
+
+
+def test_roofline_terms_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 / 2}
+    coll = {"total_moved_bytes": 50e9 / 4}
+    r = H.roofline_terms(cost, coll, n_chips=1, model_flops=98.5e12)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(0.5)
+    assert r["collective_s"] == pytest.approx(0.25)
+    assert r["dominant"] == "compute"
+    assert r["useful_flops_ratio"] == pytest.approx(0.5)
+
+
+def test_collective_summary():
+    hlo = """
+  %a = f32[256]{0} all-reduce(f32[256]{0} %x), replica_groups={{0,1}}, to_apply=%s
+  %b = f32[256]{0} all-reduce(f32[256]{0} %y), replica_groups={{0,1}}, to_apply=%s
+"""
+    s = H.collective_summary(H.parse_collectives(hlo, pod_size=1))
+    assert s["n_ops"] == 2
+    assert s["all-reduce_count"] == 2
+    assert s["total_moved_bytes"] == pytest.approx(2 * 2 * 0.5 * 1024)

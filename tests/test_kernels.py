@@ -1,0 +1,174 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.kernels import ops, ref
+from repro.models import mamba2
+
+SETTINGS = dict(deadline=None, max_examples=12,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    B=st.sampled_from([1, 2]),
+    Sq=st.sampled_from([16, 64, 128, 130]),
+    H=st.sampled_from([1, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([16, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_attention_matches_ref(B, Sq, H, group, D, dtype):
+    if H % group:
+        group = 1
+    key = jax.random.PRNGKey(B * 1000 + Sq + H + D)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = rand(kq, (B, Sq, H, D), dtype)
+    k = rand(kk, (B, Sq, H // group, D), dtype)
+    v = rand(kv, (B, Sq, H // group, D), dtype)
+
+    got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    want = jnp.moveaxis(
+        ref.attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                          jnp.moveaxis(v, 1, 2), causal=True), 1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_sliding_window():
+    key = jax.random.PRNGKey(0)
+    q = rand(key, (1, 128, 2, 32), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (1, 128, 2, 32), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (1, 128, 2, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, sliding_window=32,
+                              block_q=32, block_k=32)
+    want = jnp.moveaxis(
+        ref.attention_ref(jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2),
+                          jnp.moveaxis(v, 1, 2), causal=True,
+                          sliding_window=32), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_reference_path():
+    """The kernel and the model's gqa_attention must agree (they are the
+    two attention_impl choices)."""
+    from repro.models.layers import gqa_attention
+    key = jax.random.PRNGKey(3)
+    q = rand(key, (2, 64, 4, 32), jnp.float32)
+    k = rand(jax.random.fold_in(key, 1), (2, 64, 2, 32), jnp.float32)
+    v = rand(jax.random.fold_in(key, 2), (2, 64, 2, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    want = gqa_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 7, 64, 300]),
+    d=st.sampled_from([64, 512, 1024]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_rmsnorm_matches_ref(rows, d, dtype):
+    key = jax.random.PRNGKey(rows * 7 + d)
+    x = rand(key, (rows, d), dtype)
+    scale = 1.0 + 0.1 * rand(jax.random.fold_in(key, 1), (d,), jnp.float32)
+    got = ops.rmsnorm(x, scale, block_rows=64)
+    want = ref.rmsnorm_ref(x, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+def ssd_inputs(key, B, S, H, P, G, N):
+    ks = jax.random.split(key, 5)
+    x = rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(0.5 * rand(ks[2], (H,), jnp.float32))
+    Bm = rand(ks[3], (B, S, G, N), jnp.float32) / np.sqrt(N)
+    Cm = rand(ks[4], (B, S, G, N), jnp.float32) / np.sqrt(N)
+    D = jnp.ones((H,))
+    return x, dt, A, Bm, Cm, D
+
+
+@settings(**SETTINGS)
+@given(
+    B=st.sampled_from([1, 2]),
+    S=st.sampled_from([8, 32, 50, 128]),
+    H=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2]),
+    chunk=st.sampled_from([8, 16, 32]),
+)
+def test_ssd_kernel_matches_sequential_ref(B, S, H, G, chunk):
+    if H % G:
+        G = 1
+    P, N = 8, 16
+    x, dt, A, Bm, Cm, D = ssd_inputs(jax.random.PRNGKey(S + H), B, S, H, P, G, N)
+    y, h = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=chunk)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    """Kernel vs the model's associative-scan SSD (the dry-run path)."""
+    P, N = 8, 16
+    x, dt, A, Bm, Cm, D = ssd_inputs(jax.random.PRNGKey(9), 2, 64, 4, P, 1, N)
+    y_k, h_k = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=16)
+    y_m, h_m = mamba2.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_initial_state():
+    P, N = 8, 16
+    x, dt, A, Bm, Cm, D = ssd_inputs(jax.random.PRNGKey(11), 1, 32, 2, P, 1, N)
+    h0 = rand(jax.random.PRNGKey(12), (1, 2, P, N), jnp.float32)
+    y, h = ops.ssd_scan(x, dt, A, Bm, Cm, D, chunk=8, init_state=h0)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D, init_state=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_model_ssd_chunked_matches_sequential_ref():
+    """The model's chunked SSD (oracle for the dry-run) vs token-by-token
+    recurrence, including the padded tail-chunk path."""
+    P, N = 8, 16
+    x, dt, A, Bm, Cm, D = ssd_inputs(jax.random.PRNGKey(21), 2, 50, 4, P, 1, N)
+    y_m, h_m = mamba2.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16)
+    y_ref, h_ref = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_m), np.asarray(h_ref),
+                               atol=2e-4, rtol=2e-4)

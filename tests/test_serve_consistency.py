@@ -1,0 +1,91 @@
+"""Prefill + incremental decode must reproduce the full-context forward
+pass (the serving path's correctness invariant)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.models.api import build_model
+from repro.models import layers as L
+
+
+def full_logits(model, cfg, params, tokens):
+    if cfg.family == "dense":
+        from repro.models import transformer as m
+        hidden, _ = m.forward(params, cfg, {"tokens": tokens})
+        return m.logits_fn(params, cfg, hidden)
+    if cfg.family == "moe":
+        from repro.models import moe as m
+        hidden, _, _ = m.forward(params, cfg, {"tokens": tokens})
+        return L.unembed(params["embedding"], hidden.astype(jnp.float32))
+    if cfg.family == "ssm":
+        from repro.models import mamba2 as m
+        hidden, _ = m.forward(params, cfg, {"tokens": tokens})
+        return L.unembed(params["embedding"], hidden.astype(jnp.float32))
+    if cfg.family == "hybrid":
+        from repro.models import hybrid as m
+        hidden, _ = m.forward(params, cfg, {"tokens": tokens})
+        return L.unembed(params["embedding"], hidden.astype(jnp.float32))
+    raise ValueError(cfg.family)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "qwen3-14b", "mixtral-8x7b",
+                                  "mamba2-780m", "zamba2-7b"])
+def test_prefill_then_decode_matches_forward(arch, rng):
+    # capacity_factor high enough that no token is dropped: capacity-based
+    # MoE is only batch-composition-invariant in the dropless regime.
+    cfg = SMOKE_ARCHS[arch].__class__(**{
+        **SMOKE_ARCHS[arch].__dict__, "compute_dtype": "float32",
+        "capacity_factor": 16.0})
+    model = build_model(cfg)
+    params = model.init(rng)
+    B, S_prompt, S_total = 2, 8, 12
+    tokens = jax.random.randint(rng, (B, S_total), 0, cfg.vocab)
+
+    # reference: full forward over all S_total tokens
+    ref = full_logits(model, cfg, params, tokens)
+
+    # serving path: prefill on the prompt, then one-by-one decode
+    cache = model.init_cache(B, S_total, dtype=jnp.float32)
+    logits, cache = model.prefill(params, {"tokens": tokens[:, :S_prompt]}, cache)
+    outs = [logits]
+    for i in range(S_prompt, S_total):
+        logits, cache = model.decode(params, tokens[:, i:i + 1], cache,
+                                     jnp.int32(i))
+        outs.append(logits)
+
+    got = jnp.concatenate(outs, axis=1)          # (B, S_total-S_prompt+1, V)
+    want = ref[:, S_prompt - 1:, :]
+    # fp32 end to end: tight tolerance
+    assert jnp.allclose(got, want, atol=2e-3, rtol=2e-3), (
+        f"{arch}: max abs err {jnp.max(jnp.abs(got - want))}")
+
+
+def test_whisper_prefill_decode_consistency(rng):
+    cfg = SMOKE_ARCHS["whisper-small"].__class__(**{
+        **SMOKE_ARCHS["whisper-small"].__dict__, "compute_dtype": "float32"})
+    model = build_model(cfg)
+    params = model.init(rng)
+    from repro.models import encdec as m
+    B, S_prompt, S_total = 2, 8, 12
+    tokens = jax.random.randint(rng, (B, S_total), 0, cfg.vocab)
+    frames = jax.random.normal(rng, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+
+    hidden, _, enc_states = m.forward(params, cfg,
+                                      {"frame_embeds": frames, "tokens": tokens})
+    ref = L.unembed(params["embedding"], hidden.astype(jnp.float32))
+
+    cache = model.init_cache(B, S_total, dtype=jnp.float32)
+    logits, cache, enc = m.prefill(params, cfg,
+                                   {"frame_embeds": frames,
+                                    "tokens": tokens[:, :S_prompt]}, cache)
+    outs = [logits]
+    for i in range(S_prompt, S_total):
+        logits, cache = model.decode(params, tokens[:, i:i + 1], cache,
+                                     jnp.int32(i), enc)
+        outs.append(logits)
+    got = jnp.concatenate(outs, axis=1)
+    want = ref[:, S_prompt - 1:, :]
+    assert jnp.allclose(got, want, atol=2e-3, rtol=2e-3), (
+        f"whisper: max abs err {jnp.max(jnp.abs(got - want))}")

@@ -1,0 +1,121 @@
+"""Leg-A validation: the fabric/cost model reproduces the paper's own
+evaluation numbers (Fig 6 / Fig 7), plus property tests on the model's
+invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core import fabric as fb
+from repro.core import simulator as sim
+
+
+# ---------------------------------------------------------------------------
+# paper-claim bands
+# ---------------------------------------------------------------------------
+
+def test_fig6_paper_claims():
+    s = sim.fig6_summary(sim.run_fig6())
+    assert s["avg_speedup"] == pytest.approx(1.22, rel=0.05)
+    assert s["max_speedup"] == pytest.approx(1.84, rel=0.05)
+    assert s["avg_comm_inter_speedup"] == pytest.approx(3.79, rel=0.20)
+
+
+def test_fig7_paper_claims():
+    s = sim.fig7_summary(sim.run_fig7())
+    assert s["speedup_beyond_accel"] == pytest.approx(1.4, rel=0.08)
+    assert s["speedup_beyond_cluster"] == pytest.approx(4.5, rel=0.08)
+    assert s["speedup_vs_accel_clusters"] == pytest.approx(1.6, rel=0.08)
+
+
+def test_fig6_speedup_is_from_communication():
+    """Breakdown analysis (paper: gains 'predominantly result from reduced
+    communication time'): compute must be identical across systems."""
+    for r in sim.run_fig6():
+        assert r.baseline.compute == pytest.approx(r.scalepool.compute)
+        assert r.baseline.comm_inter_raw > r.scalepool.comm_inter_raw
+
+
+# ---------------------------------------------------------------------------
+# property tests: fabric/cost-model invariants
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=40)
+@given(nbytes=st.integers(1, 1 << 32), n=st.integers(2, 512))
+def test_allreduce_at_most_ring_and_tree(nbytes, n):
+    f = fb.infiniband_fabric(1024)
+    t = cm.allreduce_time(f, nbytes, n)
+    assert t <= cm.ring_allreduce_time(f, nbytes, n) + 1e-12
+    assert t <= cm.tree_allreduce_time(f, nbytes, n) + 1e-12
+    assert t > 0
+
+
+@settings(deadline=None, max_examples=40)
+@given(nbytes=st.integers(1, 1 << 30))
+def test_transfer_time_monotone_in_bytes(nbytes):
+    f = fb.cxl_fabric(1024)
+    assert f.transfer_time(nbytes) <= f.transfer_time(nbytes * 2) + 1e-15
+    assert f.transfer_time(nbytes) >= f.latency()
+
+
+@settings(deadline=None, max_examples=20)
+@given(n_endpoints=st.sampled_from([16, 64, 256, 1024, 4096]))
+def test_latency_monotone_in_scale(n_endpoints):
+    small = fb.cxl_fabric(n_endpoints)
+    big = fb.cxl_fabric(n_endpoints * 4)
+    assert big.latency() >= small.latency() - 1e-15
+
+
+@settings(deadline=None, max_examples=30)
+@given(nbytes=st.integers(1 << 10, 1 << 30),
+       intra=st.sampled_from([2, 4, 8, 16]),
+       groups=st.sampled_from([2, 4, 16, 64]))
+def test_hierarchical_beats_flat_on_slow_inter(nbytes, intra, groups):
+    """The ScalePool schedule can only help when the inter fabric is the
+    bottleneck — which is the paper's setting."""
+    dom = cm.HierarchicalDomains(
+        intra=fb.xlink_cluster_fabric(72),
+        inter=fb.infiniband_fabric(groups * intra),
+        intra_size=intra, n_groups=groups)
+    hier = cm.hierarchical_allreduce_time(dom, nbytes)
+    flat = cm.flat_allreduce_time(dom, nbytes)
+    assert hier <= flat * 1.05
+
+
+def test_queuing_factor_increases_with_load():
+    f0 = fb.cxl_fabric(64)
+    f9 = fb.dataclasses.replace(f0, load=0.9)
+    assert f9.queuing_factor() > f0.queuing_factor() >= 1.0
+    assert f9.bandwidth() < f0.bandwidth()
+
+
+def test_flit_efficiency_accounting():
+    # 1 byte still costs a whole flit on the wire
+    link = fb.CXL3
+    assert link.wire_bytes(1) == link.flit_bytes
+    assert link.wire_bytes(link.flit_payload) == link.flit_bytes
+    assert link.wire_bytes(link.flit_payload + 1) == 2 * link.flit_bytes
+
+
+def test_memory_tier_ordering():
+    """§5: HBM < tier-1 coherent < tier-2 pool < RDMA-remote latency."""
+    calib = sim.Calibration()
+    tiered = sim.make_mem_system("tiered", calib)
+    base = sim.make_mem_system("baseline", calib)
+    hbm, t1, t2 = tiered.tiers
+    assert hbm.access_time(4096) < t1.access_time(4096) < t2.access_time(4096)
+    assert t2.access_time(4096) < base.tiers[2].access_time(4096)  # vs RDMA
+
+
+def test_placement_logic():
+    # one replica spans exactly one rack -> no PP crossings, 1 replica/rack
+    par = sim.ParallelismConfig(tp=8, pp=9, dp=4, global_batch_seqs=64)
+    pl = sim.place(par, cluster_size=72)
+    assert pl.pp_boundaries_crossing == 0
+    assert pl.dp_intra_size == 1
+    # replica spans 2 racks -> at least one crossing
+    par = sim.ParallelismConfig(tp=8, pp=16, dp=4, global_batch_seqs=64)
+    pl = sim.place(par, cluster_size=72)
+    assert pl.pp_boundaries_crossing >= 1

@@ -1,0 +1,192 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint/restore + elastic,
+fault-tolerant loop, tiering policy."""
+
+import os
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.core import tiering
+from repro.ckpt import checkpoint as C
+from repro.data.pipeline import DataConfig, DataPipeline, PipelineState
+from repro.models.api import build_model
+from repro.optim.adamw import AdamW
+from repro.runtime.ft import FaultTolerantLoop, RetryPolicy, StragglerMonitor
+from conftest import make_batch
+
+
+def test_adamw_reduces_loss(rng):
+    cfg = SMOKE_ARCHS["olmo-1b"]
+    model = build_model(cfg)
+    params = model.init(rng)
+    opt = AdamW(lr=3e-3)
+    state = opt.init(params)
+    batch = make_batch(rng, cfg)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, state, gnorm = opt.update(grads, state, params)
+        return params, state, loss
+
+    losses = []
+    for _ in range(8):
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+    assert int(state.step) == 8
+
+
+def test_data_pipeline_determinism_and_resume():
+    cfg = DataConfig(vocab=1000, seq_len=32, global_batch=8)
+    p1 = DataPipeline(cfg)
+    batches = [p1.next_batch() for _ in range(5)]
+    # resume from step 3 reproduces batches 3, 4 exactly
+    p2 = DataPipeline(cfg, PipelineState(step=3, seed=cfg.seed))
+    for i in (3, 4):
+        b = p2.next_batch()
+        np.testing.assert_array_equal(b["tokens"], batches[i]["tokens"])
+    # host sharding: different hosts get different data
+    ph = DataPipeline(DataConfig(vocab=1000, seq_len=32, global_batch=8,
+                                 n_hosts=2, host_id=1))
+    assert not np.array_equal(ph.next_batch()["tokens"],
+                              batches[0]["tokens"][:4])
+    # labels are next-token shifted
+    b = DataPipeline(cfg).next_batch()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_pipeline_prefetch():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4)
+    p = DataPipeline(cfg).start()
+    b0 = p.get()
+    b1 = p.get()
+    p.stop()
+    ref = DataPipeline(cfg)
+    np.testing.assert_array_equal(b0["tokens"], ref.next_batch()["tokens"])
+    np.testing.assert_array_equal(b1["tokens"], ref.next_batch()["tokens"])
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    cfg = SMOKE_ARCHS["qwen1.5-0.5b"]
+    model = build_model(cfg)
+    params = model.init(rng)
+    opt = AdamW()
+    state = opt.init(params)
+    tree = {"params": params, "opt_mu": state.mu}
+
+    C.save(tmp_path / "ck", tree, step=7,
+           extra={"pipeline": {"step": 7, "seed": 0}}).wait()
+    restored, meta = C.restore(tmp_path / "ck", tree)
+    assert meta["step"] == 7
+    assert meta["pipeline"]["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_detects_corruption(tmp_path, rng):
+    tree = {"w": jnp.arange(16.0)}
+    C.save(tmp_path / "ck", tree, step=1).wait()
+    # corrupt the shard file
+    files = [f for f in os.listdir(tmp_path / "ck") if f.endswith(".npy")]
+    arr = np.load(tmp_path / "ck" / files[0])
+    arr[0] = 999.0
+    np.save(tmp_path / "ck" / files[0], arr)
+    with pytest.raises(IOError):
+        C.restore(tmp_path / "ck", tree)
+
+
+def test_async_checkpoint(tmp_path):
+    tree = {"w": jnp.ones((256, 256))}
+    h = C.save(tmp_path / "ck", tree, step=3, asynchronous=True)
+    h.wait()
+    restored, meta = C.restore(tmp_path / "ck", tree)
+    assert meta["step"] == 3
+
+
+def test_fault_tolerant_loop_recovers(tmp_path, rng):
+    """Inject a failure at step 7; the loop must restore from the step-5
+    checkpoint and converge to the SAME final state as a failure-free run
+    (bitwise determinism of recovery)."""
+    cfg = SMOKE_ARCHS["olmo-1b"]
+    model = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    pipe_cfg = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4)
+
+    @jax.jit
+    def train_step(params_state, batch):
+        params, ostate = params_state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, ostate, _ = opt.update(grads, ostate, params)
+        return (params, ostate), {"loss": loss}
+
+    def run(with_failure: bool):
+        params = model.init(rng)
+        state = (params, opt.init(params))
+        saved = {}
+
+        def save_fn(s, step):
+            saved["state"], saved["step"] = s, step
+
+        def restore_fn():
+            return saved["state"], saved["step"]
+
+        fired = {"done": False}
+
+        def failure_hook(step):
+            if with_failure and step == 7 and not fired["done"]:
+                fired["done"] = True
+                raise RuntimeError("injected chip failure")
+
+        loop = FaultTolerantLoop(
+            train_step, save_fn, restore_fn, DataPipeline(pipe_cfg),
+            ckpt_every=5, retry=RetryPolicy(max_retries=0),
+            failure_hook=failure_hook)
+        final = loop.run(state, 10)
+        return final, loop
+
+    clean, _ = run(False)
+    recovered, loop = run(True)
+    assert loop.restarts == 1
+    for a, b in zip(jax.tree.leaves(clean[0]), jax.tree.leaves(recovered[0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0,
+                                   rtol=0)
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(alpha=0.5, threshold=2.0)
+    for step in range(5):
+        assert not m.observe(step, 1.0)
+    assert m.observe(5, 10.0)        # 10x slowdown flagged
+    assert m.recommendation() in ("monitor", "evict-and-resize")
+    for step in range(6, 9):
+        m.observe(step, 10.0)
+    assert m.recommendation() == "evict-and-resize"
+
+
+def test_tiering_policy_traffic():
+    pol = tiering.TieringPolicy(offload_optimizer=True)
+    rep = tiering.tier_traffic_report(pol, n_params=1e9)
+    assert rep["tier2_bytes_per_step"] == pytest.approx(16e9)
+    # CPU backend: tier-2 may be unsupported; API must still be safe
+    sh = tiering.to_tier2(jax.sharding.SingleDeviceSharding(jax.devices()[0]))
+    assert sh is not None
+
+
+def test_paged_kv_spill_fetch():
+    kv = tiering.PagedKV.create(n_layers=2, batch=2, max_seq=64, kv_heads=2,
+                                head_dim=4, page_size=16, hot_fraction=0.5)
+    assert kv.hot_pages == 2 and kv.cold_pages == 2
+    kv.hot["k"] = kv.hot["k"].at[:, :, 1].set(7.0)
+    kv2 = kv.spill(hot_slot=1, cold_slot=jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(kv2.cold["k"][:, :, 0],
+                                          np.float32), 7.0)
+    kv3 = kv2.fetch(cold_slot=jnp.int32(0), hot_slot=0,
+                    logical_page=jnp.int32(3))
+    np.testing.assert_allclose(np.asarray(kv3.hot["k"][:, :, 0], np.float32),
+                               7.0)
+    assert int(kv3.hot_map[0, 0]) == 3
