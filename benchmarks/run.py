@@ -11,11 +11,13 @@ import json
 import sys
 
 from benchmarks import (ablations, collectives_bench, fig6_llm_training,
-                        fig7_tiered_memory, roofline, table1_links)
+                        fig7_tiered_memory, fig8_composability, roofline,
+                        table1_links)
 
 SUITES = {
     "fig6": fig6_llm_training,
     "fig7": fig7_tiered_memory,
+    "fig8": fig8_composability,
     "table1": table1_links,
     "collectives": collectives_bench,
     "roofline": roofline,

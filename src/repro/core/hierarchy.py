@@ -27,10 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # jax>=0.6 moved shard_map to jax.shard_map
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.core.compat import axis_size as _axis_size
+from repro.core.compat import shard_map as _shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -60,7 +58,7 @@ def hierarchical_allreduce(x: jax.Array, mesh: Mesh, *,
 
     def f(xs):
         # xs: local shard, shape (n, ...)
-        n_intra = jax.lax.axis_size(intra_axis)
+        n_intra = _axis_size(intra_axis)
         # phase 1: reduce-scatter along intra axis over the leading dim
         shard = jax.lax.psum_scatter(xs, intra_axis, scatter_dimension=0,
                                      tiled=True)

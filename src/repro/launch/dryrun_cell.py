@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core import compat
 from repro.launch import hlo_analysis as H
 from repro.launch.mesh import make_production_mesh
 from repro.models.api import build_model, input_specs, layer_scan_trips
@@ -117,7 +118,7 @@ def _measure(cfg, shape, mesh, rules, model, optimizer, pod_size, *,
                                      compress_pod=compress_pod)
         compiled = lowered.compile()
     dt = time.time() - t0
-    cost = dict(compiled.cost_analysis())
+    cost = compat.cost_analysis(compiled)
     colls = H.parse_collectives(compiled.as_text(), pod_size=pod_size)
     csum = H.collective_summary(colls)
     mem = compiled.memory_analysis()

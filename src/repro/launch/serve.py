@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.compat import mesh_context
 from repro.launch.mesh import make_smoke_mesh
 from repro.models.api import build_model
 from repro.models.config import ShapeConfig
@@ -47,7 +48,7 @@ def main(argv=None):
     decode_fn = jax.jit(serve_rt.make_decode_step(model),
                         donate_argnums=(1,))
 
-    with use_rules(rules, mesh), jax.set_mesh(mesh):
+    with use_rules(rules, mesh), mesh_context(mesh):
         cache = model.init_cache(args.batch, max_seq, dtype=jnp.float32)
         t0 = time.time()
         if cfg.family == "encdec":

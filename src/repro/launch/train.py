@@ -13,7 +13,9 @@ uses whatever devices exist (force more with XLA_FLAGS).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import sys
 import time
 from pathlib import Path
 
@@ -22,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.compat import IS_OLD_JAX, mesh_context
 from repro.core.tiering import TieringPolicy, offload_state_shardings
 from repro.data.pipeline import DataConfig, DataPipeline
 from repro.ckpt import checkpoint as ckpt
@@ -47,6 +50,13 @@ def main(argv=None):
     p.add_argument("--dp-mode", default="auto", choices=["auto", "hierarchical"])
     p.add_argument("--compress-pod", action="store_true")
     p.add_argument("--offload-optimizer", action="store_true")
+    # ---- pool-orchestrated resources (repro.pool) ----
+    p.add_argument("--pool", default="none",
+                   choices=["none", "scalepool", "baseline"],
+                   help="obtain mesh + tiering from a resource-pool lease")
+    p.add_argument("--pool-accels", type=int, default=8)
+    p.add_argument("--pool-tier2-gb", type=float, default=0.0)
+    p.add_argument("--pool-model-parallel", type=int, default=1)
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--log-every", type=int, default=10)
@@ -58,7 +68,29 @@ def main(argv=None):
     shape = ShapeConfig("cli", "train", args.seq, args.batch,
                         microbatches=args.microbatches)
 
-    mesh = make_smoke_mesh()
+    lease = None
+    tier_policy = TieringPolicy() if args.offload_optimizer else None
+    if args.pool != "none":
+        # the orchestrator decides mesh shape AND tiering: a lease with a
+        # tier-2 reservation trains with optimizer state in the capacity
+        # tier; one without keeps everything in HBM.
+        from repro.pool import smoke_pool
+        pool = smoke_pool(args.pool)
+        lease = pool.lease("cli-train", args.pool_accels,
+                           tier2_gb=args.pool_tier2_gb,
+                           model_parallel=args.pool_model_parallel)
+        mesh, tier_policy = lease.materialize()
+        if args.offload_optimizer and not tier_policy.offload_optimizer:
+            # explicit flag without a tier-2 reservation: honor it (host
+            # memory stands in for the capacity tier) but say so.
+            print("warning: --offload-optimizer with a 0-byte tier-2 "
+                  "lease; offloading to host memory (pass "
+                  "--pool-tier2-gb to reserve pool capacity)",
+                  file=sys.stderr)
+            tier_policy = dataclasses.replace(tier_policy,
+                                              offload_optimizer=True)
+    else:
+        mesh = make_smoke_mesh()
     multi_pod = "pod" in mesh.axis_names
     rules = make_rules(cfg, shape, mesh, fsdp=False)
     dp_mode = args.dp_mode if multi_pod else "auto"
@@ -70,17 +102,21 @@ def main(argv=None):
     state = train_rt.init_state(model, optimizer, rng, tcfg)
     step_fn, state_sh = train_rt.make_train_step(
         model, optimizer, shape, mesh=mesh, rules=rules, tcfg=tcfg)
-    if args.offload_optimizer and state_sh is not None:
-        state_sh = offload_state_shardings(state_sh, TieringPolicy())
+    if state_sh is not None and tier_policy is not None \
+            and tier_policy.offload_optimizer:
+        state_sh = offload_state_shardings(state_sh, tier_policy)
 
     pipe = DataPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                    global_batch=args.batch))
 
-    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+    # jax 0.4.x XLA hard-crashes (IsManualSubgroup CHECK) when donation
+    # meets the partially-manual pod shard_map; trade memory for survival.
+    donate = () if (dp_mode == "hierarchical" and IS_OLD_JAX) else (0,)
+    jit_step = jax.jit(step_fn, donate_argnums=donate)
 
     def train_step(state, batch):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        with use_rules(rules, mesh), jax.set_mesh(mesh):
+        with use_rules(rules, mesh), mesh_context(mesh):
             return jit_step(state, batch)
 
     ckpt_dir = Path(args.ckpt_dir)
@@ -110,6 +146,11 @@ def main(argv=None):
         "devices": len(jax.devices()), "mesh": dict(zip(mesh.axis_names,
                                                         mesh.devices.shape)),
         "dp_mode": dp_mode,
+        "lease": (None if lease is None else {
+            "pods": list(lease.allocation.pod_ids),
+            "accels": lease.n_accels,
+            "tier2_gb": lease.tier2_bytes / 1e9,
+            "offload_optimizer": tier_policy.offload_optimizer}),
         "loss_first": losses[0], "loss_last": losses[-1],
         "loss_drop": losses[0] - losses[-1],
         "wall_s": round(dt, 1), "s_per_step": round(dt / args.steps, 3),

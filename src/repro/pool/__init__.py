@@ -1,0 +1,28 @@
+"""repro.pool — composable resource-disaggregation orchestrator.
+
+The software layer the paper's title promises: composes disaggregated
+accelerators (XLink pods stitched by the hierarchical CXL fabric) and
+tier-2 memory nodes into per-job allocations, schedules multi-job
+workloads over them, and materializes grants as JAX meshes + tiering
+policies for the runtime.
+
+    inventory   — the static estate (pods, CXL tiers, memory nodes)
+    allocator   — topology-aware composable allocation + pool metrics
+    scheduler   — discrete-event multi-job admit/preempt/elastic engine
+    lease       — allocation → concrete mesh + TieringPolicy binding
+"""
+
+from repro.pool.allocator import (Allocation, AllocationError, Allocator,
+                                  JobRequest, PoolMetrics)
+from repro.pool.inventory import (Inventory, MemoryNodeSpec, PodSpec,
+                                  build_inventory)
+from repro.pool.lease import Lease, ResourcePool, smoke_pool
+from repro.pool.scheduler import (JobRecord, PoolJob, ScheduleResult,
+                                  Scheduler, offload_bytes)
+
+__all__ = [
+    "Allocation", "AllocationError", "Allocator", "Inventory", "JobRecord",
+    "JobRequest", "Lease", "MemoryNodeSpec", "PodSpec", "PoolJob",
+    "PoolMetrics", "ResourcePool", "ScheduleResult", "Scheduler",
+    "build_inventory", "offload_bytes", "smoke_pool",
+]

@@ -1,0 +1,316 @@
+"""Topology-aware composable allocation over an ``Inventory``.
+
+Two policies realize the paper's §6 comparison at the *resource* level:
+
+``scalepool``
+    Composable disaggregation: accelerators are allocated at single-accel
+    granularity, pod selection minimizes CXL hop count (single pod →
+    shared leaf switch → full fabric), and capacity requests are
+    reserved on tier-2 memory nodes independently of compute.
+
+``baseline``
+    RDMA-era static partitioning: jobs receive *whole pods* (the unit of
+    the fast interconnect domain), and — with no disaggregated memory
+    pool — capacity beyond the job's own HBM must be scavenged from the
+    HBM of idle accelerators inside its partition, stranding their
+    compute.  This is the paper's "sharing data beyond static partitions"
+    problem made quantitative.
+
+The allocator is the bookkeeping core; admission/timing lives in
+``repro.pool.scheduler``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.pool.inventory import Inventory
+
+GB = 1e9
+
+
+@dataclass(frozen=True)
+class JobRequest:
+    """What a job asks the pool for."""
+
+    name: str
+    n_accels: int
+    tier2_bytes: float = 0.0      # capacity-tier reservation (offload state)
+
+    def __post_init__(self):
+        if self.n_accels <= 0:
+            raise ValueError(f"{self.name}: n_accels must be positive")
+        if self.tier2_bytes < 0:
+            raise ValueError(f"{self.name}: negative tier2_bytes")
+
+
+@dataclass(frozen=True)
+class Allocation:
+    """A granted, disjoint slice of the estate."""
+
+    job: str
+    accels: Dict[int, Tuple[int, ...]]   # pod id -> local accel ids
+    tier2: Dict[int, float]              # memory-node id -> reserved bytes
+    n_requested: int                     # accels the job will actually use
+    whole_pods: bool                     # baseline partition granularity
+    # capacity the job *asked* for: equals the tier-2 reservation under
+    # scalepool; under baseline it is backed by scavenged idle-accel HBM
+    # (tier2 stays empty) but the demand is still real.
+    tier2_requested: float = 0.0
+
+    @property
+    def n_granted(self) -> int:
+        return sum(len(v) for v in self.accels.values())
+
+    @property
+    def n_stranded(self) -> int:
+        """Accelerators held by the partition but idle (baseline HBM
+        scavenging / whole-pod rounding)."""
+        return self.n_granted - self.n_requested
+
+    @property
+    def pod_ids(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.accels))
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.accels)
+
+    @property
+    def tier2_bytes(self) -> float:
+        return sum(self.tier2.values())
+
+
+@dataclass
+class PoolMetrics:
+    """Instantaneous pool health, the quantities Fig. 8 sweeps."""
+
+    accels_total: int
+    accels_granted: int        # held by any allocation
+    accels_busy: int           # actually computing (requested)
+    tier2_total: float
+    tier2_reserved: float
+    fragmentation: float       # 1 - largest free block / min(free, pod size)
+    n_jobs: int
+
+    @property
+    def utilization(self) -> float:
+        return self.accels_busy / self.accels_total if self.accels_total else 0.0
+
+    @property
+    def granted_frac(self) -> float:
+        return self.accels_granted / self.accels_total if self.accels_total else 0.0
+
+    @property
+    def stranded_frac(self) -> float:
+        return (self.accels_granted - self.accels_busy) / self.accels_total \
+            if self.accels_total else 0.0
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+class Allocator:
+    """Mutable allocation state over an immutable ``Inventory``."""
+
+    def __init__(self, inventory: Inventory, policy: Optional[str] = None):
+        self.inv = inventory
+        self.policy = policy or inventory.interconnect
+        if self.policy not in ("scalepool", "baseline"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        # free local accel ids per pod, kept sorted for determinism
+        self._free: Dict[int, List[int]] = {
+            p.id: list(p.accel_ids()) for p in inventory.pods}
+        self._free_t2: Dict[int, float] = {
+            m.id: m.capacity for m in inventory.memory_nodes}
+        self.live: Dict[str, Allocation] = {}
+
+    # ---- queries ---------------------------------------------------------
+    def free_accels(self, pod_id: Optional[int] = None) -> int:
+        if pod_id is not None:
+            return len(self._free[pod_id])
+        return sum(len(v) for v in self._free.values())
+
+    def free_tier2(self) -> float:
+        return sum(self._free_t2.values())
+
+    def fully_free_pods(self) -> List[int]:
+        return [p.id for p in self.inv.pods
+                if len(self._free[p.id]) == p.n_accels]
+
+    # ---- allocation ------------------------------------------------------
+    def allocate(self, req: JobRequest) -> Optional[Allocation]:
+        """Grant ``req`` or return None (leaving state untouched)."""
+        if req.name in self.live:
+            raise AllocationError(f"job {req.name!r} already holds an allocation")
+        if self.policy == "baseline":
+            alloc = self._allocate_baseline(req)
+        else:
+            alloc = self._allocate_scalepool(req)
+        if alloc is not None:
+            self._commit(alloc)
+        return alloc
+
+    def release(self, job: str) -> None:
+        alloc = self.live.pop(job, None)
+        if alloc is None:
+            raise AllocationError(f"job {job!r} holds no allocation")
+        for pod_id, ids in alloc.accels.items():
+            self._free[pod_id] = sorted(self._free[pod_id] + list(ids))
+        for node_id, nbytes in alloc.tier2.items():
+            self._free_t2[node_id] += nbytes
+
+    # ---- transactional snapshot (for preemption / resize trials) ---------
+    def snapshot(self):
+        """Opaque copy of the allocation state; pair with ``restore`` to
+        roll back a failed multi-step operation."""
+        import copy
+        return (copy.deepcopy(self._free), dict(self._free_t2),
+                dict(self.live))
+
+    def restore(self, snap) -> None:
+        self._free = {k: list(v) for k, v in snap[0].items()}
+        self._free_t2 = dict(snap[1])
+        self.live = dict(snap[2])
+
+    def _commit(self, alloc: Allocation) -> None:
+        for pod_id, ids in alloc.accels.items():
+            pool = self._free[pod_id]
+            for i in ids:
+                pool.remove(i)   # raises if double-allocated
+        for node_id, nbytes in alloc.tier2.items():
+            if self._free_t2[node_id] < nbytes - 1e-6:
+                raise AllocationError("tier-2 over-reservation")
+            self._free_t2[node_id] -= nbytes
+        self.live[alloc.job] = alloc
+
+    # ---- scalepool: composable, hop-minimizing ---------------------------
+    def _allocate_scalepool(self, req: JobRequest) -> Optional[Allocation]:
+        tier2 = self._reserve_tier2(req.tier2_bytes)
+        if tier2 is None:
+            return None
+        pods = self._pick_pods_min_hops(req.n_accels)
+        if pods is None:
+            return None
+        accels: Dict[int, Tuple[int, ...]] = {}
+        remaining = req.n_accels
+        for pod_id in pods:
+            take = min(remaining, len(self._free[pod_id]))
+            accels[pod_id] = tuple(self._free[pod_id][:take])
+            remaining -= take
+        assert remaining == 0
+        return Allocation(req.name, accels, tier2, req.n_accels,
+                          whole_pods=False, tier2_requested=req.tier2_bytes)
+
+    def _pick_pods_min_hops(self, n: int) -> Optional[List[int]]:
+        """Pod set minimizing (span hops, pod count): single pod best-fit,
+        then one leaf-switch group, then greedy across the fabric."""
+        free = {pid: len(v) for pid, v in self._free.items() if v}
+        if sum(free.values()) < n:
+            return None
+        # 1. tightest single pod that fits (best-fit limits fragmentation)
+        fitting = [pid for pid, f in free.items() if f >= n]
+        if fitting:
+            return [min(fitting, key=lambda pid: (free[pid], pid))]
+        # 2. one leaf group (1 CXL hop), fewest pods: fill biggest first
+        by_leaf: Dict[int, List[int]] = {}
+        for pid in free:
+            by_leaf.setdefault(self.inv.leaf_of(pid), []).append(pid)
+        for leaf in sorted(by_leaf):
+            group = by_leaf[leaf]
+            if sum(free[p] for p in group) >= n:
+                return self._greedy_fill(group, free, n)
+        # 3. whole fabric
+        return self._greedy_fill(list(free), free, n)
+
+    @staticmethod
+    def _greedy_fill(pods: List[int], free: Dict[int, int], n: int) -> List[int]:
+        chosen, got = [], 0
+        for pid in sorted(pods, key=lambda p: (-free[p], p)):
+            chosen.append(pid)
+            got += free[pid]
+            if got >= n:
+                return chosen
+        raise AssertionError("caller guaranteed capacity")
+
+    def _reserve_tier2(self, nbytes: float) -> Optional[Dict[int, float]]:
+        if nbytes <= 0:
+            return {}
+        if self.free_tier2() < nbytes:
+            return None
+        out: Dict[int, float] = {}
+        remaining = nbytes
+        # fewest nodes: drain the fullest first (deterministic tie on id)
+        for node_id in sorted(self._free_t2,
+                              key=lambda i: (-self._free_t2[i], i)):
+            if remaining <= 0:
+                break
+            take = min(remaining, self._free_t2[node_id])
+            if take > 0:
+                out[node_id] = take
+                remaining -= take
+        assert remaining <= 1e-6
+        return out
+
+    # ---- baseline: static whole-pod partitions ---------------------------
+    def _allocate_baseline(self, req: JobRequest) -> Optional[Allocation]:
+        pod_size = self.inv.pod_size
+        hbm = self.inv.pods[0].hbm_per_accel
+        import math
+        pods_needed = math.ceil(req.n_accels / pod_size)
+        # no memory pool: capacity beyond the job's accelerators comes from
+        # idle accels' HBM inside the partition -> possibly more pods.
+        if req.tier2_bytes > 0:
+            while (pods_needed * pod_size - req.n_accels) * hbm < req.tier2_bytes:
+                pods_needed += 1
+                if pods_needed > self.inv.n_pods:
+                    return None
+        free_pods = self.fully_free_pods()
+        if len(free_pods) < pods_needed:
+            return None
+        chosen = sorted(free_pods)[:pods_needed]   # first-fit, contiguous ids
+        accels = {pid: tuple(self.inv.pods[pid].accel_ids()) for pid in chosen}
+        return Allocation(req.name, accels, {}, req.n_accels, whole_pods=True,
+                          tier2_requested=req.tier2_bytes)
+
+    # ---- metrics & invariants --------------------------------------------
+    def metrics(self) -> PoolMetrics:
+        total = self.inv.total_accels
+        granted = sum(a.n_granted for a in self.live.values())
+        busy = sum(a.n_requested for a in self.live.values())
+        free = self.free_accels()
+        largest = max((len(v) for v in self._free.values()), default=0)
+        # external fragmentation relative to the best a pod-local (XLink)
+        # job could hope for: an empty estate scores 0, free capacity
+        # shattered across partially-used pods scores toward 1.
+        best_block = min(free, self.inv.pod_size)
+        frag = 1.0 - largest / best_block if best_block > 0 else 0.0
+        return PoolMetrics(
+            accels_total=total, accels_granted=granted, accels_busy=busy,
+            tier2_total=self.inv.total_tier2,
+            tier2_reserved=self.inv.total_tier2 - self.free_tier2(),
+            fragmentation=frag, n_jobs=len(self.live))
+
+    def check_conservation(self) -> None:
+        """Invariant: free + granted == inventory, no accel held twice."""
+        seen = set()
+        for alloc in self.live.values():
+            for pod_id, ids in alloc.accels.items():
+                for i in ids:
+                    key = (pod_id, i)
+                    if key in seen:
+                        raise AssertionError(f"double allocation of {key}")
+                    seen.add(key)
+        for p in self.inv.pods:
+            held = {(p.id, i) for i in p.accel_ids()}
+            free = {(p.id, i) for i in self._free[p.id]}
+            alloced = {k for k in seen if k[0] == p.id}
+            if free | alloced != held or free & alloced:
+                raise AssertionError(f"pod {p.id}: conservation violated")
+        for m in self.inv.memory_nodes:
+            reserved = sum(a.tier2.get(m.id, 0.0) for a in self.live.values())
+            if abs(reserved + self._free_t2[m.id] - m.capacity) > 1e-3:
+                raise AssertionError(f"memory node {m.id}: conservation violated")

@@ -1,0 +1,164 @@
+"""Allocation leases: the bridge from the orchestrator to the runtime.
+
+A ``Lease`` is a granted allocation plus everything the training/serving
+stack needs to *use* it: a concrete JAX device mesh whose shape mirrors
+the lease's pod topology, and a ``TieringPolicy`` that routes state to
+the capacity tier exactly when the lease carries a tier-2 reservation.
+Elastic grow/shrink produces a checkpoint re-sharding plan via
+``repro.ckpt.elastic.resize_plan`` so a resized job can consume its old
+checkpoint (the paper's composability axis made operational).
+
+``ResourcePool`` is the user-facing facade: build one over an inventory,
+take leases, hand them to ``launch/train.py`` / ``runtime/serve.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.ckpt.elastic import resize_plan
+from repro.core.tiering import TieringPolicy
+from repro.pool.allocator import (Allocation, AllocationError, Allocator,
+                                  JobRequest)
+from repro.pool.inventory import Inventory, build_inventory
+
+GB = 1e9
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@dataclass(frozen=True)
+class Lease:
+    """A live claim on pool resources, materializable as mesh + policy."""
+
+    allocation: Allocation
+    model_parallel: int = 1
+    kv_spill: bool = False        # serving leases spill cold KV pages
+
+    @property
+    def job(self) -> str:
+        return self.allocation.job
+
+    @property
+    def n_accels(self) -> int:
+        return self.allocation.n_requested
+
+    @property
+    def tier2_bytes(self) -> float:
+        return self.allocation.tier2_bytes
+
+    @property
+    def spans_pods(self) -> bool:
+        return self.allocation.n_pods > 1
+
+    # ---- runtime binding -------------------------------------------------
+    def tiering_policy(self) -> TieringPolicy:
+        """Capacity demand → offload policy: a lease with capacity
+        backing offloads optimizer state (train) / cold KV (serve).
+        Under the baseline policy that backing is scavenged idle-accel
+        HBM (``tier2_requested`` with an empty reservation) — the demand
+        still offloads, it just lands in the stranded partition."""
+        has_t2 = self.allocation.tier2_requested > 0 or self.tier2_bytes > 0
+        return TieringPolicy(offload_optimizer=has_t2,
+                             kv_spill=has_t2 and self.kv_spill)
+
+    def mesh_shape(self, n_devices: int) -> Tuple[Tuple[int, ...],
+                                                  Tuple[str, ...]]:
+        """Map the lease's logical topology onto ``n_devices`` local
+        devices: the pod axis mirrors the allocation's pod span; model
+        parallelism is honored as far as divisibility allows."""
+        span = self.allocation.n_pods
+        if span > 1 and n_devices % span == 0 and n_devices // span > 1:
+            per_pod = n_devices // span
+            m = _largest_divisor_leq(per_pod, self.model_parallel)
+            return (span, per_pod // m, m), ("pod", "data", "model")
+        m = _largest_divisor_leq(n_devices, self.model_parallel)
+        return (n_devices // m, m), ("data", "model")
+
+    def materialize(self, devices=None):
+        """Build the concrete JAX mesh + tiering policy for this lease.
+
+        ``devices``: optional explicit device list (defaults to all local
+        devices — on a real deployment each host binds its slice; the
+        mesh *shape* logic is identical).
+        """
+        devs = list(devices) if devices is not None else list(jax.devices())
+        shape, axes = self.mesh_shape(len(devs))
+        mesh = jax.make_mesh(shape, axes, devices=devs)
+        return mesh, self.tiering_policy()
+
+class ResourcePool:
+    """Facade: inventory + allocator + lease lifecycle."""
+
+    def __init__(self, inventory: Optional[Inventory] = None,
+                 policy: Optional[str] = None, **inventory_kwargs):
+        self.inv = inventory or build_inventory(**inventory_kwargs)
+        self.alloc = Allocator(self.inv, policy)
+        self.leases: Dict[str, Lease] = {}
+
+    def lease(self, name: str, n_accels: int, *, tier2_gb: float = 0.0,
+              model_parallel: int = 1, kv_spill: bool = False) -> Lease:
+        allocation = self.alloc.allocate(
+            JobRequest(name, n_accels, tier2_gb * GB))
+        if allocation is None:
+            m = self.alloc.metrics()
+            raise AllocationError(
+                f"pool cannot satisfy {name!r}: wanted {n_accels} accels + "
+                f"{tier2_gb:.0f}GB tier-2; free: "
+                f"{self.alloc.free_accels()} accels, "
+                f"{self.alloc.free_tier2() / GB:.0f}GB "
+                f"(utilization {m.utilization:.0%})")
+        lease = Lease(allocation, model_parallel=model_parallel,
+                      kv_spill=kv_spill)
+        self.leases[name] = lease
+        return lease
+
+    def release(self, lease_or_name) -> None:
+        name = (lease_or_name if isinstance(lease_or_name, str)
+                else lease_or_name.job)
+        self.alloc.release(name)
+        del self.leases[name]
+
+    def resize(self, lease_or_name, n_accels: int,
+               *, tier2_gb: Optional[float] = None) -> Tuple[Lease, Dict[str, int]]:
+        """Elastic grow/shrink: atomically trade the old allocation for a
+        new one (old resources count as free during re-placement)."""
+        name = (lease_or_name if isinstance(lease_or_name, str)
+                else lease_or_name.job)
+        old = self.leases[name]
+        t2 = old.tier2_bytes if tier2_gb is None else tier2_gb * GB
+        # validate the re-sharding plan BEFORE touching allocator state so
+        # an impossible decomposition can't leave a half-committed resize
+        plan = resize_plan(old.n_accels, n_accels,
+                           model_parallel=old.model_parallel)
+        snapshot = self.alloc.snapshot()
+        self.alloc.release(name)
+        allocation = self.alloc.allocate(JobRequest(name, n_accels, t2))
+        if allocation is None:
+            self.alloc.restore(snapshot)
+            raise AllocationError(
+                f"cannot resize {name!r} to {n_accels} accels")
+        new_lease = dataclasses.replace(old, allocation=allocation)
+        self.leases[name] = new_lease
+        return new_lease, plan
+
+    def metrics(self):
+        return self.alloc.metrics()
+
+
+def smoke_pool(policy: str = "scalepool") -> ResourcePool:
+    """A small deterministic estate for CPU tests/demos: 4 pods x 8
+    accels, two 1TB memory nodes (scalepool) or none (baseline)."""
+    return ResourcePool(build_inventory(
+        n_pods=4, pod_size=8, hbm_per_accel_gb=192.0,
+        n_memory_nodes=(2 if policy == "scalepool" else 0),
+        memory_node_gb=1024.0, interconnect=policy))

@@ -1,0 +1,373 @@
+"""Discrete-event multi-job scheduler over the composable pool.
+
+Jobs are LLM training runs described by the same ``LLMConfig`` /
+``ParallelismConfig`` pairs the §6 simulator uses; a job's execution rate
+comes from ``core.simulator.simulate_step`` under the pool's interconnect
+(``baseline`` IB vs ``scalepool`` CXL), so every second of simulated time
+is derived from the paper's cost models — the scheduler adds only
+*when* jobs run and *where* they are placed.
+
+Mechanics: submit → FIFO queue (+ backfill) → admit via the topology-
+aware allocator → finish.  Higher-priority head-of-line jobs may preempt
+(newest, lowest-priority victims first, requeued with their remaining
+steps); elastic jobs admit shrunk (dp halved until they fit) and grow
+back toward their full data-parallel width when resources free up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import simulator as sim
+from repro.pool.allocator import Allocation, Allocator, JobRequest
+from repro.pool.inventory import Inventory
+
+
+@dataclass(frozen=True)
+class PoolJob:
+    """One training job submitted to the pool."""
+
+    name: str
+    model: sim.LLMConfig
+    par: sim.ParallelismConfig
+    n_steps: int
+    tier2_bytes: float = 0.0
+    submit_t: float = 0.0
+    priority: int = 0
+    elastic: bool = False
+    min_dp: int = 1
+
+    @property
+    def n_accels(self) -> int:
+        return self.par.n_gpus
+
+
+def offload_bytes(model: sim.LLMConfig,
+                  calib: sim.Calibration) -> float:
+    """Capacity-tier demand of an offloaded optimizer for ``model`` —
+    the same constant the §6 step simulator charges per step."""
+    return calib.optimizer_bytes_per_param * model.n_params
+
+
+@dataclass
+class JobRecord:
+    """Per-job outcome of a schedule."""
+
+    name: str
+    submit_t: float
+    start_t: Optional[float] = None     # first admission
+    finish_t: Optional[float] = None
+    preemptions: int = 0
+    resizes: int = 0
+    dp_granted: int = 0                 # dp at final admission
+    accel_seconds: float = 0.0          # busy integral
+
+    @property
+    def jct(self) -> Optional[float]:
+        return None if self.finish_t is None else self.finish_t - self.submit_t
+
+    @property
+    def queue_delay(self) -> Optional[float]:
+        return None if self.start_t is None else self.start_t - self.submit_t
+
+
+@dataclass
+class _Running:
+    job: PoolJob
+    par: sim.ParallelismConfig          # possibly shrunk
+    alloc: Allocation
+    step_time: float
+    steps_done: float
+    seg_start: float                    # start of the current segment
+    epoch: int                          # invalidates stale finish events
+
+
+@dataclass
+class ScheduleResult:
+    records: Dict[str, JobRecord]
+    trace: List[str]                    # deterministic event log
+    makespan: float
+    util_area: float                    # busy accel-seconds
+    granted_area: float                 # held accel-seconds
+    frag_samples: List[float]
+    total_accels: int
+
+    @property
+    def utilization(self) -> float:
+        denom = self.total_accels * self.makespan
+        return self.util_area / denom if denom > 0 else 0.0
+
+    @property
+    def stranded_frac(self) -> float:
+        denom = self.total_accels * self.makespan
+        return (self.granted_area - self.util_area) / denom if denom > 0 else 0.0
+
+    @property
+    def mean_jct(self) -> float:
+        jcts = [r.jct for r in self.records.values() if r.jct is not None]
+        return sum(jcts) / len(jcts) if jcts else 0.0
+
+    @property
+    def mean_queue_delay(self) -> float:
+        qs = [r.queue_delay for r in self.records.values()
+              if r.queue_delay is not None]
+        return sum(qs) / len(qs) if qs else 0.0
+
+    @property
+    def mean_fragmentation(self) -> float:
+        return (sum(self.frag_samples) / len(self.frag_samples)
+                if self.frag_samples else 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        return dict(utilization=self.utilization,
+                    stranded_frac=self.stranded_frac,
+                    mean_jct=self.mean_jct,
+                    mean_queue_delay=self.mean_queue_delay,
+                    mean_fragmentation=self.mean_fragmentation,
+                    makespan=self.makespan,
+                    n_finished=sum(r.finish_t is not None
+                                   for r in self.records.values()))
+
+
+class Scheduler:
+    """Event-driven scheduler; fully deterministic for a fixed job list."""
+
+    def __init__(self, inventory: Inventory, policy: Optional[str] = None,
+                 *, backfill: bool = True,
+                 calib: Optional[sim.Calibration] = None):
+        self.inv = inventory
+        self.alloc = Allocator(inventory, policy)
+        self.policy = self.alloc.policy
+        self.backfill = backfill
+        self.calib = calib or dataclasses.replace(
+            sim.Calibration(), cluster_size=inventory.pod_size)
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._queue: List[PoolJob] = []
+        self._running: Dict[str, _Running] = {}
+        self.records: Dict[str, JobRecord] = {}
+        self.trace: List[str] = []
+        self._now = 0.0
+        self._last_t = 0.0
+        self._util_area = 0.0
+        self._granted_area = 0.0
+        self._frag_samples: List[float] = []
+        self._step_cache: Dict[Tuple, float] = {}
+
+    # ---- public API ------------------------------------------------------
+    def submit(self, job: PoolJob) -> None:
+        self._push(job.submit_t, "submit", job)
+        self.records[job.name] = JobRecord(job.name, job.submit_t)
+
+    def run(self, until: float = math.inf) -> ScheduleResult:
+        while self._events:
+            if self._events[0][0] > until:
+                break   # leave the event for a later run() call
+            t, _, kind, data = heapq.heappop(self._events)
+            self._advance(t)
+            if kind == "submit":
+                self._queue.append(data)
+                self._log(f"submit {data.name} "
+                          f"(n={data.n_accels}, t2={data.tier2_bytes/1e9:.0f}GB)")
+            elif kind == "finish":
+                name, epoch = data
+                run = self._running.get(name)
+                if run is None or run.epoch != epoch:
+                    continue    # stale: job was preempted/resized
+                self._finish(run)
+            self._admit_and_grow()
+        return ScheduleResult(
+            records=self.records, trace=self.trace, makespan=self._now,
+            util_area=self._util_area, granted_area=self._granted_area,
+            frag_samples=self._frag_samples,
+            total_accels=self.inv.total_accels)
+
+    # ---- internals -------------------------------------------------------
+    def _push(self, t: float, kind: str, data) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, data))
+
+    def _log(self, msg: str) -> None:
+        self.trace.append(f"t={self._now:.2f} {msg}")
+
+    def _advance(self, t: float) -> None:
+        dt = t - self._last_t
+        if dt > 0:
+            busy = sum(r.alloc.n_requested for r in self._running.values())
+            granted = sum(r.alloc.n_granted for r in self._running.values())
+            self._util_area += busy * dt
+            self._granted_area += granted * dt
+            self._last_t = t
+        self._now = t
+
+    def step_time(self, job: PoolJob, par: sim.ParallelismConfig,
+                  alloc: Allocation) -> float:
+        """Seconds per training step under the pool's interconnect, from
+        the §6 cost models.  The inter-cluster fabric a job sees is sized
+        to its own placement span (a 1-pod job never pays multi-level
+        CXL/IB switching; a wide job does)."""
+        span_endpoints = max(self.inv.pod_size,
+                             alloc.n_pods * self.inv.pod_size)
+        offloads = job.tier2_bytes > 0
+        key = (job.model.name, par.tp, par.pp, par.dp,
+               par.global_batch_seqs, par.microbatch_seqs, par.vpp,
+               self.policy, span_endpoints, offloads)
+        if key not in self._step_cache:
+            system = sim.make_system(self.policy, span_endpoints, self.calib)
+            bd = sim.simulate_step(job.model, par, system)
+            # jobs without a capacity reservation run no offload traffic;
+            # charging them the (policy-dependent) offload path would leak
+            # a difference that is not about resource composition.
+            self._step_cache[key] = bd.total - (0.0 if offloads else bd.offload)
+        return self._step_cache[key]
+
+    # ---- admission -------------------------------------------------------
+    def _request(self, job: PoolJob, par: sim.ParallelismConfig) -> JobRequest:
+        return JobRequest(job.name, par.tp * par.pp * par.dp, job.tier2_bytes)
+
+    def _try_admit(self, job: PoolJob) -> bool:
+        """Full size, then elastic shrink (dp halving) if allowed."""
+        dp = job.par.dp
+        while dp >= max(1, job.min_dp):
+            par = dataclasses.replace(job.par, dp=dp)
+            alloc = self.alloc.allocate(self._request(job, par))
+            if alloc is not None:
+                self._start(job, par, alloc)
+                return True
+            if not job.elastic or dp == job.min_dp:
+                return False
+            dp = max(job.min_dp, dp // 2)
+        return False
+
+    def _try_admit_with_preemption(self, job: PoolJob) -> bool:
+        """Head-of-line high-priority admission: preempt newest lowest-
+        priority victims until the job fits (all-or-nothing)."""
+        victims = sorted(
+            (r for r in self._running.values()
+             if r.job.priority < job.priority),
+            key=lambda r: (r.job.priority, -r.seg_start, r.job.name))
+        if not victims:
+            return False
+        snapshot = self.alloc.snapshot()
+        preempted: List[_Running] = []
+        ok = False
+        for v in victims:
+            self._suspend(v)
+            preempted.append(v)
+            alloc = self.alloc.allocate(self._request(job, job.par))
+            if alloc is not None:
+                self._start(job, job.par, alloc)
+                ok = True
+                break
+        if not ok:
+            # restore: nobody should have been harmed
+            self.alloc.restore(snapshot)
+            for v in preempted:
+                self._running[v.job.name] = v
+            return False
+        for v in preempted:
+            rec = self.records[v.job.name]
+            rec.preemptions += 1
+            remaining = max(1, math.ceil(v.job.n_steps - v.steps_done))
+            requeue = dataclasses.replace(v.job, n_steps=remaining,
+                                          submit_t=self._now)
+            self._queue.append(requeue)
+            self._log(f"preempt {v.job.name} ({remaining} steps left) "
+                      f"for {job.name}")
+        return True
+
+    def _admit_and_grow(self) -> None:
+        # FIFO with optional backfill; preemption only for head-of-line.
+        still_queued: List[PoolJob] = []
+        head_blocked = False
+        for i, job in enumerate(self._queue):
+            if head_blocked and not self.backfill:
+                still_queued.append(job)
+                continue
+            if self._try_admit(job):
+                continue
+            if i == 0 and job.priority > 0 and \
+                    self._try_admit_with_preemption(job):
+                continue
+            head_blocked = True
+            still_queued.append(job)
+        self._queue = still_queued
+        self._grow_elastic()
+
+    def _grow_elastic(self) -> None:
+        """Double shrunk elastic jobs back toward full dp while it fits."""
+        for name in sorted(self._running):
+            run = self._running[name]
+            if not run.job.elastic or run.par.dp >= run.job.par.dp:
+                continue
+            grew = False
+            while run.par.dp < run.job.par.dp:
+                new_dp = min(run.job.par.dp, run.par.dp * 2)
+                new_par = dataclasses.replace(run.par, dp=new_dp)
+                snapshot = self.alloc.snapshot()
+                self.alloc.release(name)
+                alloc = self.alloc.allocate(self._request(run.job, new_par))
+                if alloc is None:
+                    self.alloc.restore(snapshot)
+                    break
+                self._resize(run, new_par, alloc)
+                grew = True
+            if grew:
+                self._log(f"grow {name} to dp={run.par.dp}")
+
+    # ---- lifecycle -------------------------------------------------------
+    def _start(self, job: PoolJob, par: sim.ParallelismConfig,
+               alloc: Allocation) -> None:
+        st = self.step_time(job, par, alloc)
+        rec = self.records[job.name]
+        if rec.start_t is None:
+            rec.start_t = self._now
+        rec.dp_granted = par.dp
+        run = _Running(job, par, alloc, st, steps_done=0.0,
+                       seg_start=self._now, epoch=rec.preemptions + rec.resizes)
+        self._running[job.name] = run
+        remaining = job.n_steps * st
+        self._push(self._now + remaining, "finish", (job.name, run.epoch))
+        self._frag_samples.append(self.alloc.metrics().fragmentation)
+        self._log(f"admit {job.name} dp={par.dp} "
+                  f"pods={list(alloc.pod_ids)} granted={alloc.n_granted} "
+                  f"(stranded={alloc.n_stranded}) step={st*1e3:.1f}ms")
+
+    def _account_segment(self, run: _Running) -> None:
+        dt = self._now - run.seg_start
+        if dt > 0:
+            run.steps_done += dt / run.step_time
+            self.records[run.job.name].accel_seconds += \
+                run.alloc.n_requested * dt
+        run.seg_start = self._now
+
+    def _suspend(self, run: _Running) -> None:
+        self._account_segment(run)
+        self.alloc.release(run.job.name)
+        del self._running[run.job.name]
+
+    def _resize(self, run: _Running, par: sim.ParallelismConfig,
+                alloc: Allocation) -> None:
+        self._account_segment(run)
+        rec = self.records[run.job.name]
+        rec.resizes += 1
+        rec.dp_granted = par.dp
+        run.par, run.alloc = par, alloc
+        run.step_time = self.step_time(run.job, par, alloc)
+        run.epoch += 1
+        remaining = max(0.0, run.job.n_steps - run.steps_done) * run.step_time
+        self._push(self._now + remaining, "finish",
+                   (run.job.name, run.epoch))
+
+    def _finish(self, run: _Running) -> None:
+        self._account_segment(run)
+        self.alloc.release(run.job.name)
+        del self._running[run.job.name]
+        rec = self.records[run.job.name]
+        rec.finish_t = self._now
+        self._frag_samples.append(self.alloc.metrics().fragmentation)
+        self._log(f"finish {run.job.name} jct={rec.jct:.2f}s")

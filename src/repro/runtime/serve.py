@@ -1,18 +1,25 @@
 """Serving-step factories: prefill and one-token decode over a sharded
 KV/state cache.  These are the functions the decode_* / long_* dry-run
-cells lower (``serve_step``, not ``train_step``, per the assignment)."""
+cells lower (``serve_step``, not ``train_step``, per the assignment).
+
+``make_lease_session`` binds a ``repro.pool`` allocation lease to a
+concrete serving setup (mesh, sharding rules, jitted decode step, KV
+tiering policy) — the orchestrator-to-runtime path for serving jobs."""
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.tiering import TieringPolicy
 from repro.models.api import Model
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.sharding.partition import Rules, tree_shardings
+from repro.sharding.profiles import make_rules
 
 
 def make_prefill_step(model: Model):
@@ -66,6 +73,53 @@ def decode_carry_specs(model: Model, shape: ShapeConfig,
         carry["enc_states"] = jax.ShapeDtypeStruct(
             (B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
     return carry
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseServeSession:
+    """Everything a serving worker needs from its pool lease."""
+
+    mesh: Mesh
+    rules: Rules
+    policy: TieringPolicy
+    prefill_step: Any          # jitted
+    decode_step: Any           # jitted
+
+    @property
+    def kv_spill(self) -> bool:
+        return self.policy.kv_spill
+
+
+def make_lease_session(model: Model, shape: ShapeConfig,
+                       lease) -> LeaseServeSession:
+    """Bind a ``repro.pool.Lease`` to a runnable serving session.
+
+    The lease's allocation determines the mesh shape (pod span → mesh
+    axes) and its tier-2 reservation determines the KV spill policy —
+    serving capacity and KV paging are composed by the orchestrator, not
+    hard-coded per deployment.  The returned steps run scoped to the
+    lease's mesh/rules so GSPMD honors the leased model parallelism.
+    """
+    from repro.core.compat import mesh_context
+    from repro.sharding.partition import use_rules
+
+    mesh, policy = lease.materialize()
+    rules = make_rules(model.cfg, shape, mesh, fsdp=False)
+
+    def scoped(fn, donate=()):
+        jitted = jax.jit(fn, donate_argnums=donate)
+
+        def call(*args):
+            with use_rules(rules, mesh), mesh_context(mesh):
+                return jitted(*args)
+        return call
+
+    return LeaseServeSession(
+        mesh=mesh, rules=rules, policy=policy,
+        prefill_step=scoped(make_prefill_step(model)),
+        # donate the decode carry (the KV cache dominates it) so the
+        # token loop updates in place instead of copying the cache
+        decode_step=scoped(make_decode_step(model), donate=(1,)))
 
 
 def decode_carry_shardings(model: Model, mesh: Mesh, rules: Rules,

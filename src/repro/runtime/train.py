@@ -23,12 +23,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from repro.core import hierarchy
+from repro.core.compat import shard_map as _shard_map
 from repro.models.api import Model, input_specs
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.optim.adamw import AdamW, AdamWState
@@ -123,7 +119,7 @@ def make_train_step(model: Model, optimizer: AdamW, shape: ShapeConfig, *,
                 out_specs=(out_state_spec,
                            {"loss": P("pod"), "grad_norm": P("pod"),
                             "step": P("pod")}),
-                check_vma=False, axis_names={"pod"})
+                check=False, manual_axes={"pod"})
             new_state, metrics = f(state, batch)
             metrics = {k: v[0] for k, v in metrics.items()}
             return new_state, metrics

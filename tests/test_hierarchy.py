@@ -83,12 +83,12 @@ def test_int8_compression_error_feedback():
         assert err.max() <= float(s) * 0.51 + 1e-9
         # error feedback: mean of compressed reductions converges to true mean
         mesh = jax.make_mesh((2,), ("pod",))
-        from jax import shard_map
+        from repro.core.compat import shard_map
         from jax.sharding import PartitionSpec as P
         def step(x, r):
             return h.compressed_cross_pod_mean(x, "pod", r)
         f = shard_map(step, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                      out_specs=(P("pod"), P("pod")), check_vma=False)
+                      out_specs=(P("pod"), P("pod")), check=False)
         xs = jax.random.normal(jax.random.PRNGKey(1), (2, 64))
         true_mean = jnp.mean(xs, axis=0)
         r = jnp.zeros((2, 64))
@@ -112,6 +112,7 @@ def test_train_step_hierarchical_matches_auto():
         from repro.configs import SMOKE_ARCHS
         from repro.models.api import build_model, input_specs
         from repro.models.config import ShapeConfig
+        from repro.core.compat import mesh_context
         from repro.optim.adamw import AdamW
         from repro.runtime import train as tr
         from repro.sharding.partition import use_rules
@@ -133,7 +134,7 @@ def test_train_step_hierarchical_matches_auto():
             state = tr.init_state(model, opt, rng, tcfg)
             step, _ = tr.make_train_step(model, opt, shape, mesh=mesh,
                                          rules=rules, tcfg=tcfg)
-            with use_rules(rules, mesh), jax.set_mesh(mesh):
+            with use_rules(rules, mesh), mesh_context(mesh):
                 new_state, metrics = jax.jit(step)(state, batch)
             results[mode] = (float(metrics["loss"]),
                              np.asarray(jax.tree.leaves(new_state.params)[0],

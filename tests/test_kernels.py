@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.kernels import ops, ref
 from repro.models import mamba2

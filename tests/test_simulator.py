@@ -5,7 +5,7 @@ invariants."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import costmodel as cm
 from repro.core import fabric as fb
