@@ -1,0 +1,77 @@
+"""Allocator scale guard — heap free-lists must keep large traces linear.
+
+The fig8 scheduler is pure python; the per-pod heap free-list
+(``repro.pool.allocator.FreeList``) replaced O(n) ``list.remove`` scans
+so 10^5-job traces stay tractable.  This micro-benchmark churns a large
+estate through allocate/release cycles and checks
+
+  * throughput: a generous absolute floor (catches accidental
+    quadratic regressions by orders of magnitude, not noise);
+  * scaling: doubling the op count must not much more than double the
+    runtime (ratio < 3.5 — an O(n^2) allocator scores ~4+).
+
+    PYTHONPATH=src python -m benchmarks.run --only poolscale
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.pool import JobRequest, build_inventory
+from repro.pool.allocator import Allocator
+
+GB = 1e9
+
+
+def _churn(n_ops: int) -> float:
+    """Deterministic allocate/release churn on a 64-pod x 64-accel estate;
+    returns elapsed seconds."""
+    inv = build_inventory(n_pods=64, pod_size=64, n_memory_nodes=8,
+                          memory_node_gb=4096, interconnect="scalepool")
+    a = Allocator(inv)
+    live: List[str] = []
+    sizes = (3, 17, 64, 130, 9)     # mix of sub-pod / pod / multi-pod
+    t0 = time.time()
+    for i in range(n_ops):
+        if len(live) > 48 or (live and i % 3 == 2):
+            a.release(live.pop(0))
+            continue
+        name = f"j{i}"
+        req = JobRequest(name, sizes[i % len(sizes)],
+                         tier2_bytes=(i % 4) * 128 * GB,
+                         tier2_bw=(i % 2) * 4 * GB)
+        if a.allocate(req) is not None:
+            live.append(name)
+    return time.time() - t0
+
+
+def run() -> Tuple[List[str], Dict]:
+    n = 20_000
+    t_half = _churn(n // 2)
+    t_full = _churn(n)
+    ops_per_s = n / t_full
+    ratio = t_full / max(t_half, 1e-9)
+
+    ok_tput = ops_per_s > 2_000       # generous: heap path does >20k op/s
+    ok_scale = ratio < 3.5            # linear-ish; quadratic scores ~4+
+    lines = [
+        f"poolscale.churn{n // 2},{t_half * 1e6 / (n // 2):.1f},"
+        f"ops_per_s={(n // 2) / max(t_half, 1e-9):.0f}",
+        f"poolscale.churn{n},{t_full * 1e6 / n:.1f},ops_per_s={ops_per_s:.0f}",
+        f"poolscale.claim.throughput,0,got={ops_per_s:.0f};floor=2000;"
+        f"{'PASS' if ok_tput else 'FAIL'}",
+        f"poolscale.claim.linear_scaling,0,ratio={ratio:.2f};bound=3.5;"
+        f"{'PASS' if ok_scale else 'FAIL'}",
+    ]
+    summary = {"ops_per_s": ops_per_s, "scaling_ratio": ratio,
+               "all_claims_pass": ok_tput and ok_scale}
+    return lines, summary
+
+
+if __name__ == "__main__":
+    lines, summary = run()
+    for line in lines:
+        print(line)
+    print(summary)
+    raise SystemExit(0 if summary["all_claims_pass"] else 1)

@@ -11,14 +11,17 @@ import json
 import sys
 
 from benchmarks import (ablations, collectives_bench, fig6_llm_training,
-                        fig7_tiered_memory, fig8_composability, roofline,
+                        fig7_serving_engine, fig7_tiered_memory,
+                        fig8_composability, pool_scale, roofline,
                         table1_links)
 
 SUITES = {
     "fig6": fig6_llm_training,
     "fig7": fig7_tiered_memory,
+    "fig7serve": fig7_serving_engine,
     "fig8": fig8_composability,
     "table1": table1_links,
+    "poolscale": pool_scale,
     "collectives": collectives_bench,
     "roofline": roofline,
     "ablations": ablations,

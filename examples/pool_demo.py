@@ -27,16 +27,20 @@ print(f"pods per CXL leaf switch: {inv.pods_per_leaf}; "
 # 2. composable allocation: accels + tier-2 capacity, independently
 # ---------------------------------------------------------------------------
 pool = ResourcePool(inv)
-train = pool.lease("train-gpt", 128, tier2_gb=2800, model_parallel=8)
-serve = pool.lease("serve-qwen", 16, tier2_gb=512, kv_spill=True)
+train = pool.lease("train-gpt", 128, tier2_gb=2800, tier2_gbps=200,
+                   model_parallel=8)
+serve = pool.lease("serve-qwen", 16, tier2_gb=512, kv_gb=128, tier2_gbps=50)
 print(f"\ntrain lease: {train.n_accels} accels over pods "
       f"{list(train.allocation.pod_ids)} + "
-      f"{train.tier2_bytes / GB:.0f}GB tier-2 -> {train.tiering_policy()}")
-print(f"serve lease: {serve.n_accels} accels + KV spill -> "
-      f"{serve.tiering_policy()}")
+      f"{train.tier2_bytes / GB:.0f}GB tier-2 @ {train.tier2_bw / GB:.0f}GB/s "
+      f"-> {train.tiering_policy()}")
+print(f"serve lease: {serve.n_accels} accels + {serve.kv_bytes / GB:.0f}GB KV "
+      f"grant -> {serve.tiering_policy()}")
 m = pool.metrics()
 print(f"pool: utilization={m.utilization:.0%} stranded={m.stranded_frac:.0%} "
-      f"tier2 reserved={m.tier2_reserved / GB:.0f}GB")
+      f"tier2 reserved={m.tier2_reserved / GB:.0f}GB "
+      f"({m.tier2_kv_reserved / GB:.0f}GB KV), "
+      f"tier2 bw {m.tier2_bw_reserved / GB:.0f}/{m.tier2_bw_total / GB:.0f}GB/s")
 
 # elastic grow with a checkpoint re-sharding plan (ckpt.elastic)
 train, plan = pool.resize("train-gpt", 256)

@@ -1,52 +1,62 @@
-"""Serving example with tier-2 KV paging (deliverable b / paper §5):
-generate with a paged KV cache whose cold pages live in the capacity
-tier, and report the tier traffic a ScalePool fabric would carry.
+"""repro.serve quickstart — request-level serving with lease-budgeted
+tier-2 KV paging (paper §5/§6, Fig. 7 at request granularity).
 
     PYTHONPATH=src python examples/serve_tiered.py
 """
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs import get_config
-from repro.core import fabric as fb
-from repro.core.simulator import make_mem_system, avg_access_latency
-from repro.core.tiering import PagedKV, TieringPolicy, tier_traffic_report
+from repro.core.simulator import avg_access_latency, make_mem_system
+from repro.core.tiering import KVBudget, TieringPolicy, tier_traffic_report
 from repro.models.api import build_model
+from repro.pool import smoke_pool
+from repro.serve import (Engine, EngineConfig, Request, burst_trace,
+                         latency_summary, run_trace)
 
 cfg = get_config("qwen1.5-0.5b", smoke=True)
 model = build_model(cfg)
-rng = jax.random.PRNGKey(0)
-params = model.init(rng)
 
-B, prompt, gen = 2, 32, 16
-max_seq = prompt + gen
-tokens = jax.random.randint(rng, (B, prompt), 1, cfg.vocab)
+# ---------------------------------------------------------------------------
+# 1. local engine: submit requests, step continuous batching, read stats
+# ---------------------------------------------------------------------------
+engine = Engine.local(model, EngineConfig(max_slots=4, max_seq=96,
+                                          page_size=16))
+handles = [engine.submit(Request(prompt_tokens=tuple(range(1, 1 + n)),
+                                 max_new_tokens=8))
+           for n in (12, 20, 28)]
+engine.run_until_idle()
+print("generated:", [h.result() for h in handles])
+print("stats:", {k: v for k, v in engine.stats().items()
+                 if k in ("completed", "tokens_decoded", "kv")})
 
-cache = model.init_cache(B, max_seq, dtype=jnp.float32)
-logits, cache = model.prefill(params, {"tokens": tokens}, cache)
-tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
-outs = [int(tok[0, 0])]
-for i in range(gen - 1):
-    logits, cache = model.decode(params, tok, cache, jnp.int32(prompt + i))
-    tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
-    outs.append(int(tok[0, 0]))
-print("generated:", outs)
+# ---------------------------------------------------------------------------
+# 2. lease-backed engine: the pool grants the tier-2 KV byte budget and a
+#    tight tier-1 page quota forces spills over the capacity fabric
+# ---------------------------------------------------------------------------
+pool = smoke_pool("scalepool")
+lease = pool.lease("svc", 4, tier2_gb=64, kv_gb=2.0)
+print(f"\nlease: {lease.n_accels} accels, "
+      f"{lease.kv_bytes / 1e9:.0f}GB KV grant -> {lease.tiering_policy()}")
 
-# page the (synthetic) long-context KV pool across tiers
-kv = PagedKV.create(n_layers=cfg.n_layers, batch=B, max_seq=4096,
-                    kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                    page_size=256, hot_fraction=0.25)
-kv.spill(hot_slot=0, cold_slot=0)
-kv = kv.fetch(cold_slot=0, hot_slot=1, logical_page=9)
-print(f"paged KV: {kv.hot_pages} hot pages (tier-1), "
-      f"{kv.cold_pages} cold pages (tier-2)")
+budget = KVBudget(tier1_pages=10, tier2_bytes=lease.kv_bytes, page_size=16)
+tiered = Engine.from_lease(model, lease, EngineConfig(max_slots=4,
+                                                      max_seq=96,
+                                                      page_size=16),
+                           budget=budget)
+trace = burst_trace(8, prompt_len=32, max_new_tokens=32, vocab=cfg.vocab,
+                    seed=0)
+hs = run_trace(tiered, trace)
+stats = tiered.stats()
+print(f"tiered run: {stats['completed']} done, "
+      f"{stats['preempt_swaps']} tier-2 swaps, "
+      f"residency={stats['kv']}")
+print("modeled latency:", latency_summary(hs))
 
-# the paper's Fig-7 story for this working set
+# ---------------------------------------------------------------------------
+# 3. the paper's Fig-7 story for this working set (analytic §5 model)
+# ---------------------------------------------------------------------------
 ms_base = make_mem_system("baseline")
 ms_sp = make_mem_system("tiered")
 ws = 768e9
-print(f"working set 768GB: baseline {avg_access_latency(ms_base, ws)*1e6:.2f}us"
+print(f"\nworking set 768GB: baseline {avg_access_latency(ms_base, ws)*1e6:.2f}us"
       f" vs ScalePool {avg_access_latency(ms_sp, ws)*1e6:.2f}us per 4KiB block")
 print(tier_traffic_report(TieringPolicy(), n_params=0.5e9))

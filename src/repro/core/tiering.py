@@ -11,7 +11,9 @@ The manager provides:
   * placement policy: which training/serving state lives in which tier
     (optimizer moments, master params, cold KV pages, embedding spill);
   * sharding transforms (``to_tier2(sharding)``) usable at jit boundaries;
-  * a paged KV-cache spill/fetch pair for serving;
+  * a budget-enforcing paged KV pool (``KVBudget`` + ``PagedKV``) for the
+    ``repro.serve`` engine: tier-1 page quotas and tier-2 byte budgets as
+    first-class, contended resources;
   * capability detection so the same code runs on CPU (tests) and TPU.
 """
 
@@ -55,14 +57,49 @@ def to_tier2(sharding):
 
 
 @dataclasses.dataclass(frozen=True)
+class KVBudget:
+    """Budgeted KV-cache residency: serving capacity is an explicitly
+    *quota'd*, contended resource (the DFabric / CXL-pooling framing),
+    not a boolean.
+
+    ``tier1_pages``: hot page quota across all engine slots (None =
+    derived by the consumer, e.g. the engine's full slot capacity).
+    ``tier2_bytes``: cold-pool byte budget on the capacity fabric —
+    a lease derives this from its actual tier-2 KV grant.
+    ``page_size``: tokens per KV page (bulk-friendly spill granularity).
+    """
+
+    tier1_pages: Optional[int] = None
+    tier2_bytes: float = 0.0
+    page_size: int = 64
+
+    def pages_for(self, n_tokens) -> int:
+        return max(1, -(-int(n_tokens) // self.page_size))
+
+    def tier2_pages(self, page_bytes: float) -> int:
+        if page_bytes <= 0:
+            return 0
+        return int(self.tier2_bytes // page_bytes)
+
+
+class KVBudgetExceeded(RuntimeError):
+    """A KV allocation would overrun the tier-1 page quota or the tier-2
+    byte budget."""
+
+
+@dataclasses.dataclass(frozen=True)
 class TieringPolicy:
     """Which state lives in the capacity tier (§6: the paper evaluates
     weight + optimizer offloading as the common training optimization)."""
 
     offload_optimizer: bool = True      # AdamW moments → tier-2
     offload_master_params: bool = False # fp32 masters → tier-2
-    kv_spill: bool = False              # cold KV pages → tier-2
-    kv_hot_fraction: float = 0.25       # fraction of pages kept in tier-1
+    kv_budget: Optional[KVBudget] = None  # serving: budgeted KV paging
+
+    @property
+    def kv_spill(self) -> bool:
+        """Deprecated boolean view of ``kv_budget`` (pre-engine API)."""
+        return self.kv_budget is not None and self.kv_budget.tier2_bytes > 0
 
 
 def offload_state_shardings(state_shardings, policy: TieringPolicy):
@@ -84,75 +121,129 @@ def offload_state_shardings(state_shardings, policy: TieringPolicy):
 
 
 # ---------------------------------------------------------------------------
-# paged KV cache with tier-2 spill (serving-side tiering)
+# paged KV pool: budget-enforcing page table + tier-2 cold store
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
 class PagedKV:
-    """Fixed-size-page KV pool: hot pages in tier-1 (device arrays), cold
-    pages in the tier-2 capacity pool.  Page granularity keeps spill
-    traffic bulk-friendly (the paper's capacity-oriented CXL carries
-    large flits efficiently).
+    """Budgeted paged KV pool (serving-side tiering, paper §5).
 
-    The cold pool is HOST-side storage (numpy): paging decisions are host
-    bookkeeping, and the spill/fetch transfers are explicit device<->pool
-    bulk copies — exactly the paper's CXL.io (no-coherence) tier-2 path.
-    ``spill``/``fetch`` mutate the cold pool in place (it is a pool, not
-    a functional value) and return ``self`` for chaining.
+    Tracks, per sequence (``rid``), how many fixed-size KV pages it holds
+    and in which tier, and enforces a ``KVBudget``: hot pages count
+    against ``budget.tier1_pages`` (accelerator HBM), spilled sequences
+    count against ``budget.tier2_bytes`` (the capacity pool).  Page
+    granularity keeps spill traffic bulk-friendly (the capacity-oriented
+    CXL carries large flits efficiently).
 
-    Logical layout per layer: (n_pages, page, kv_heads, head_dim).
+    The cold store is HOST-side (numpy pytrees): paging decisions are
+    host bookkeeping, and the spill/fetch payloads are explicit
+    device↔pool bulk copies — the paper's CXL.io (no-coherence) tier-2
+    path.  The caller (``repro.serve.Engine``) owns the device arrays;
+    ``spill`` takes the host copy it made, ``fetch`` returns it for the
+    caller to write back.  Operations that would overrun either budget
+    raise ``KVBudgetExceeded`` and leave state untouched.
     """
 
-    page_size: int
-    hot: Dict[str, jax.Array]           # (L, B, hot_pages, page, KV, hd)
-    cold: Dict[str, "np.ndarray"]       # (L, B, cold_pages, page, KV, hd)
-    hot_map: jax.Array                  # (B, hot_pages) -> logical page id
+    def __init__(self, budget: KVBudget, page_bytes: float):
+        if budget.tier1_pages is None:
+            raise ValueError("PagedKV needs a concrete tier-1 page quota")
+        self.budget = budget
+        self.page_bytes = float(page_bytes)
+        self._hot: Dict[Any, int] = {}          # rid -> pages in tier-1
+        self._cold: Dict[Any, Tuple[int, Any]] = {}  # rid -> (pages, payload)
+        self.spills = 0
+        self.fetches = 0
 
-    @staticmethod
-    def create(n_layers: int, batch: int, max_seq: int, kv_heads: int,
-               head_dim: int, *, page_size: int = 512,
-               hot_fraction: float = 0.25, dtype=jnp.bfloat16) -> "PagedKV":
-        import numpy as np
-        n_pages = max(1, max_seq // page_size)
-        hot_pages = max(1, int(n_pages * hot_fraction))
-        cold_pages = max(1, n_pages - hot_pages)
-        mk = lambda p: jnp.zeros((n_layers, batch, p, page_size, kv_heads,
-                                  head_dim), dtype)
-        mk_np = lambda p: np.zeros((n_layers, batch, p, page_size, kv_heads,
-                                    head_dim), np.float32)
-        return PagedKV(
-            page_size=page_size,
-            hot={"k": mk(hot_pages), "v": mk(hot_pages)},
-            cold={"k": mk_np(cold_pages), "v": mk_np(cold_pages)},
-            hot_map=jnp.tile(jnp.arange(hot_pages)[None], (batch, 1)),
-        )
+    # ---- occupancy -------------------------------------------------------
+    @property
+    def hot_pages_used(self) -> int:
+        return sum(self._hot.values())
 
     @property
-    def hot_pages(self) -> int:
-        return self.hot["k"].shape[2]
+    def hot_free(self) -> int:
+        return self.budget.tier1_pages - self.hot_pages_used
 
     @property
-    def cold_pages(self) -> int:
-        return self.cold["k"].shape[2]
+    def cold_pages_used(self) -> int:
+        return sum(n for n, _ in self._cold.values())
 
-    def spill(self, hot_slot: int, cold_slot) -> "PagedKV":
-        """Move one hot page to the cold (tier-2) pool: an explicit
-        tier-1 → tier-2 bulk transfer (the paper's CXL.io path)."""
-        import numpy as np
-        for key in ("k", "v"):
-            page = np.asarray(self.hot[key][:, :, hot_slot], np.float32)
-            self.cold[key][:, :, int(cold_slot)] = page
-        return self
+    @property
+    def cold_bytes_used(self) -> float:
+        return self.cold_pages_used * self.page_bytes
 
-    def fetch(self, cold_slot, hot_slot: int, logical_page) -> "PagedKV":
-        """Bring one cold page back into tier-1 at ``hot_slot``."""
-        new_hot = {}
-        for key in ("k", "v"):
-            page = jnp.asarray(self.cold[key][:, :, int(cold_slot)])
-            new_hot[key] = jax.lax.dynamic_update_index_in_dim(
-                self.hot[key], page.astype(self.hot[key].dtype), hot_slot, 2)
-        new_map = self.hot_map.at[:, hot_slot].set(logical_page)
-        return dataclasses.replace(self, hot=new_hot, hot_map=new_map)
+    def is_hot(self, rid) -> bool:
+        return rid in self._hot
+
+    def holds(self, rid) -> bool:
+        return rid in self._hot or rid in self._cold
+
+    def pages_of(self, rid) -> int:
+        if rid in self._hot:
+            return self._hot[rid]
+        return self._cold[rid][0]
+
+    # ---- lifecycle -------------------------------------------------------
+    def alloc(self, rid, n_pages: int) -> None:
+        """Admit ``rid`` with ``n_pages`` hot pages."""
+        if rid in self._hot or rid in self._cold:
+            raise KeyError(f"{rid!r} already holds KV pages")
+        if n_pages > self.hot_free:
+            raise KVBudgetExceeded(
+                f"{rid!r}: {n_pages} pages > {self.hot_free} free of "
+                f"{self.budget.tier1_pages}-page tier-1 quota")
+        self._hot[rid] = n_pages
+
+    def grow(self, rid, n_pages: int) -> None:
+        """Raise ``rid``'s hot page count (decode crossed a page boundary)."""
+        extra = n_pages - self._hot[rid]
+        if extra <= 0:
+            return
+        if extra > self.hot_free:
+            raise KVBudgetExceeded(
+                f"{rid!r}: growth to {n_pages} pages overruns the "
+                f"{self.budget.tier1_pages}-page tier-1 quota")
+        self._hot[rid] = n_pages
+
+    def spill(self, rid, payload) -> None:
+        """Move ``rid`` hot → cold, storing the caller's host copy of its
+        cache region (an explicit tier-1 → tier-2 bulk transfer)."""
+        pages = self._hot[rid]
+        if (self.cold_pages_used + pages) * self.page_bytes \
+                > self.budget.tier2_bytes + 1e-6:
+            raise KVBudgetExceeded(
+                f"{rid!r}: spill of {pages} pages overruns the "
+                f"{self.budget.tier2_bytes / 1e9:.2f}GB tier-2 budget")
+        del self._hot[rid]
+        self._cold[rid] = (pages, payload)
+        self.spills += 1
+
+    def fetch(self, rid):
+        """Move ``rid`` cold → hot; returns the stored payload for the
+        caller to copy back into device memory."""
+        pages, payload = self._cold[rid]
+        if pages > self.hot_free:
+            raise KVBudgetExceeded(
+                f"{rid!r}: fetch of {pages} pages overruns the tier-1 quota")
+        del self._cold[rid]
+        self._hot[rid] = pages
+        self.fetches += 1
+        return payload
+
+    def free(self, rid) -> None:
+        self._hot.pop(rid, None)
+        self._cold.pop(rid, None)
+
+    def residency(self) -> Dict[str, float]:
+        """KV tier residency — the quantity ``Engine.stats()`` reports."""
+        return {
+            "tier1_pages_used": self.hot_pages_used,
+            "tier1_pages_quota": self.budget.tier1_pages,
+            "tier2_bytes_used": self.cold_bytes_used,
+            "tier2_bytes_budget": self.budget.tier2_bytes,
+            "hot_seqs": len(self._hot),
+            "cold_seqs": len(self._cold),
+            "spills": self.spills,
+            "fetches": self.fetches,
+        }
 
 
 def tier_traffic_report(policy: TieringPolicy, n_params: float,

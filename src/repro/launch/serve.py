@@ -1,5 +1,20 @@
-"""Batched serving driver: prefill + decode over a sharded KV cache with
-optional tier-2 page spilling.
+"""Serving driver over the ``repro.serve`` engine.
+
+Request-level modes (continuous batching + budgeted KV tiering):
+
+    # synthetic request trace through the engine
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --requests 16 --max-new 16 --slots 4
+
+    # trace file (JSONL: prompt_tokens / max_new_tokens / arrival_time)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --trace /path/to/trace.jsonl --tier2-kv-gb 1
+
+    # lease-backed: the pool grants the tier-2 KV budget
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --requests 16 --pool scalepool --pool-accels 4 --tier2-kv-gb 1
+
+Legacy fixed-batch mode (pre-engine path, kept for encdec archs):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --batch 4 --prompt 64 --generate 32
@@ -17,6 +32,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.compat import mesh_context
+from repro.core.tiering import KVBudget
 from repro.launch.mesh import make_smoke_mesh
 from repro.models.api import build_model
 from repro.models.config import ShapeConfig
@@ -25,17 +41,55 @@ from repro.sharding.partition import use_rules
 from repro.sharding.profiles import make_rules
 
 
-def main(argv=None):
-    p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="qwen1.5-0.5b")
-    p.add_argument("--smoke", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
-    p.add_argument("--prompt", type=int, default=64)
-    p.add_argument("--generate", type=int, default=32)
-    args = p.parse_args(argv)
+def _engine_mode(args, cfg, model) -> int:
+    from repro.serve import (Engine, EngineConfig, latency_summary,
+                             load_trace, run_trace, synthetic_trace)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
+    ecfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                        page_size=args.page_size)
+    budget = None
+    if args.tier1_pages or args.tier2_kv_gb:
+        budget = KVBudget(
+            tier1_pages=args.tier1_pages or None,
+            tier2_bytes=args.tier2_kv_gb * 1e9,
+            page_size=args.page_size)
+
+    if args.pool != "none":
+        from repro.pool import smoke_pool
+        pool = smoke_pool(args.pool)
+        lease = pool.lease("cli-serve", args.pool_accels,
+                           tier2_gb=max(args.pool_tier2_gb, args.tier2_kv_gb),
+                           kv_gb=args.tier2_kv_gb,
+                           model_parallel=args.pool_model_parallel)
+        engine = Engine.from_lease(model, lease, ecfg, budget=budget)
+    else:
+        engine = Engine.local(model, ecfg, budget=budget)
+
+    if args.trace:
+        trace = load_trace(args.trace)
+    else:
+        trace = synthetic_trace(
+            args.requests, mean_interarrival_s=args.interarrival,
+            prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
+            max_new_tokens=args.max_new, vocab=cfg.vocab, seed=args.seed)
+
+    t0 = time.time()
+    handles = run_trace(engine, trace)
+    wall = time.time() - t0
+    stats = engine.stats()
+    print(json.dumps({
+        "arch": cfg.name, "mode": "engine",
+        "lease": args.pool if args.pool != "none" else None,
+        "requests": len(handles),
+        "latency": latency_summary(handles),
+        "stats": stats,
+        "wall_s": round(wall, 2),
+        "sample_tokens": handles[0].tokens[:8] if handles else [],
+    }, indent=2, default=str))
+    return 0 if stats["failed_oom"] == 0 else 1
+
+
+def _legacy_batch_mode(args, cfg, model) -> int:
     max_seq = args.prompt + args.generate
     shape = ShapeConfig("cli", "decode", max_seq, args.batch)
     mesh = make_smoke_mesh()
@@ -77,13 +131,52 @@ def main(argv=None):
     toks = np.concatenate(generated, axis=1)
     tokens_per_s = args.batch * (args.generate - 1) / max(t_decode, 1e-9)
     print(json.dumps({
-        "arch": cfg.name, "batch": args.batch, "prompt": args.prompt,
+        "arch": cfg.name, "mode": "batch",
+        "batch": args.batch, "prompt": args.prompt,
         "generated": toks.shape[1],
         "prefill_s": round(t_prefill, 3),
         "decode_tok_per_s": round(tokens_per_s, 1),
         "sample_tokens": toks[0, :8].tolist(),
     }, indent=2))
     return 0
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen1.5-0.5b")
+    p.add_argument("--smoke", action="store_true")
+    # engine (request-level) mode
+    p.add_argument("--requests", type=int, default=0,
+                   help="serve N synthetic requests through the engine")
+    p.add_argument("--trace", default=None,
+                   help="JSONL request trace driven through the engine")
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--max-seq", type=int, default=256)
+    p.add_argument("--page-size", type=int, default=32)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--prompt-lens", default="16,32,64")
+    p.add_argument("--interarrival", type=float, default=0.05)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--tier1-pages", type=int, default=0,
+                   help="tier-1 KV page quota (0 = full slot capacity)")
+    p.add_argument("--tier2-kv-gb", type=float, default=0.0,
+                   help="tier-2 KV byte budget (spill target)")
+    p.add_argument("--pool", default="none",
+                   choices=["none", "scalepool", "baseline"])
+    p.add_argument("--pool-accels", type=int, default=4)
+    p.add_argument("--pool-tier2-gb", type=float, default=0.0)
+    p.add_argument("--pool-model-parallel", type=int, default=1)
+    # legacy fixed-batch mode
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt", type=int, default=64)
+    p.add_argument("--generate", type=int, default=32)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    if args.requests or args.trace:
+        return _engine_mode(args, cfg, model)
+    return _legacy_batch_mode(args, cfg, model)
 
 
 if __name__ == "__main__":

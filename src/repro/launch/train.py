@@ -35,7 +35,7 @@ from repro.optim.adamw import AdamW
 from repro.runtime import train as train_rt
 from repro.runtime.ft import FaultTolerantLoop, StragglerMonitor
 from repro.sharding.partition import use_rules
-from repro.sharding.profiles import make_rules
+from repro.sharding.profiles import hierarchical_unsafe, make_rules
 
 
 def main(argv=None):
@@ -92,8 +92,14 @@ def main(argv=None):
     else:
         mesh = make_smoke_mesh()
     multi_pod = "pod" in mesh.axis_names
-    rules = make_rules(cfg, shape, mesh, fsdp=False)
     dp_mode = args.dp_mode if multi_pod else "auto"
+    if dp_mode == "hierarchical":
+        reason = hierarchical_unsafe(cfg)
+        if reason:
+            print(f"warning: {reason}; falling back to dp_mode=auto",
+                  file=sys.stderr)
+            dp_mode = "auto"
+    rules = make_rules(cfg, shape, mesh, fsdp=False, dp_mode=dp_mode)
     tcfg = train_rt.TrainStepConfig(dp_mode=dp_mode,
                                     compress_pod=args.compress_pod,
                                     microbatches=args.microbatches)

@@ -13,16 +13,16 @@ policies for the runtime.
 """
 
 from repro.pool.allocator import (Allocation, AllocationError, Allocator,
-                                  JobRequest, PoolMetrics)
+                                  FreeList, JobRequest, PoolMetrics)
 from repro.pool.inventory import (Inventory, MemoryNodeSpec, PodSpec,
                                   build_inventory)
 from repro.pool.lease import Lease, ResourcePool, smoke_pool
 from repro.pool.scheduler import (JobRecord, PoolJob, ScheduleResult,
-                                  Scheduler, offload_bytes)
+                                  Scheduler, offload_bw, offload_bytes)
 
 __all__ = [
-    "Allocation", "AllocationError", "Allocator", "Inventory", "JobRecord",
-    "JobRequest", "Lease", "MemoryNodeSpec", "PodSpec", "PoolJob",
-    "PoolMetrics", "ResourcePool", "ScheduleResult", "Scheduler",
-    "build_inventory", "offload_bytes", "smoke_pool",
+    "Allocation", "AllocationError", "Allocator", "FreeList", "Inventory",
+    "JobRecord", "JobRequest", "Lease", "MemoryNodeSpec", "PodSpec",
+    "PoolJob", "PoolMetrics", "ResourcePool", "ScheduleResult", "Scheduler",
+    "build_inventory", "offload_bw", "offload_bytes", "smoke_pool",
 ]

@@ -6,7 +6,13 @@ Two policies realize the paper's §6 comparison at the *resource* level:
     Composable disaggregation: accelerators are allocated at single-accel
     granularity, pod selection minimizes CXL hop count (single pod →
     shared leaf switch → full fabric), and capacity requests are
-    reserved on tier-2 memory nodes independently of compute.
+    reserved on tier-2 memory nodes independently of compute.  Tier-2
+    *bandwidth* is a second per-node schedulable resource: concurrent
+    offload-heavy jobs contend on the capacity fabric, so a job reserves
+    bytes/s alongside bytes and admission fails when the fabric is
+    oversubscribed.  A slice of the tier-2 byte reservation may be
+    earmarked as a KV grant (``kv_bytes``) — the quantity a serving
+    lease turns into a ``KVBudget`` for the ``repro.serve`` engine.
 
 ``baseline``
     RDMA-era static partitioning: jobs receive *whole pods* (the unit of
@@ -16,6 +22,10 @@ Two policies realize the paper's §6 comparison at the *resource* level:
     compute.  This is the paper's "sharing data beyond static partitions"
     problem made quantitative.
 
+Free accelerators are tracked per pod in a heap-backed free-list
+(O(log n) take/put), so 10^5-job schedules stay tractable — see
+``benchmarks/pool_scale.py`` for the guard.
+
 The allocator is the bookkeeping core; admission/timing lives in
 ``repro.pool.scheduler``.
 """
@@ -23,12 +33,61 @@ The allocator is the bookkeeping core; admission/timing lives in
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.pool.inventory import Inventory
 
 GB = 1e9
+
+
+class FreeList:
+    """Free accelerator ids of one pod: a min-heap plus a membership set.
+
+    ``take(k)`` pops the k smallest free ids in O(k log n); ``put``
+    returns ids in O(log n) each — replacing the O(n) ``list.remove``
+    scans that made 10^5-job traces quadratic.
+    """
+
+    __slots__ = ("_heap", "_live")
+
+    def __init__(self, ids):
+        self._heap = list(ids)
+        heapq.heapify(self._heap)
+        self._live = set(self._heap)
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    def take(self, k: int) -> Tuple[int, ...]:
+        # invariant: _heap and _live hold exactly the same ids (take pops
+        # both; put raises on double-free before pushing), so every popped
+        # id is live — no lazy-deletion sweep is needed.
+        if k > len(self._live):
+            raise AssertionError("caller must check capacity before take()")
+        out: List[int] = []
+        for _ in range(k):
+            i = heapq.heappop(self._heap)
+            self._live.discard(i)
+            out.append(i)
+        return tuple(out)
+
+    def put(self, ids) -> None:
+        for i in ids:
+            if i in self._live:
+                raise AssertionError(f"double free of accel {i}")
+            self._live.add(i)
+            heapq.heappush(self._heap, i)
+
+    def ids(self) -> List[int]:
+        return sorted(self._live)
+
+    def clone(self) -> "FreeList":
+        fl = FreeList.__new__(FreeList)
+        fl._heap = list(self._heap)
+        fl._live = set(self._live)
+        return fl
 
 
 @dataclass(frozen=True)
@@ -38,12 +97,20 @@ class JobRequest:
     name: str
     n_accels: int
     tier2_bytes: float = 0.0      # capacity-tier reservation (offload state)
+    kv_bytes: float = 0.0         # slice of tier2_bytes granted to KV paging
+    tier2_bw: float = 0.0         # capacity-fabric bandwidth, bytes/s
 
     def __post_init__(self):
         if self.n_accels <= 0:
             raise ValueError(f"{self.name}: n_accels must be positive")
         if self.tier2_bytes < 0:
             raise ValueError(f"{self.name}: negative tier2_bytes")
+        if self.tier2_bw < 0:
+            raise ValueError(f"{self.name}: negative tier2_bw")
+        if not 0 <= self.kv_bytes <= self.tier2_bytes + 1e-6:
+            raise ValueError(
+                f"{self.name}: kv_bytes must lie within the tier-2 "
+                f"reservation ({self.kv_bytes} vs {self.tier2_bytes})")
 
 
 @dataclass(frozen=True)
@@ -59,6 +126,12 @@ class Allocation:
     # scalepool; under baseline it is backed by scavenged idle-accel HBM
     # (tier2 stays empty) but the demand is still real.
     tier2_requested: float = 0.0
+    # KV slice of the capacity grant (drives serving KVBudgets)
+    kv_bytes: float = 0.0
+    # capacity-fabric bandwidth: node id -> reserved bytes/s (scalepool);
+    # under baseline the demand is recorded but rides the IB fabric.
+    tier2_bw: Dict[int, float] = field(default_factory=dict)
+    tier2_bw_requested: float = 0.0
 
     @property
     def n_granted(self) -> int:
@@ -82,6 +155,10 @@ class Allocation:
     def tier2_bytes(self) -> float:
         return sum(self.tier2.values())
 
+    @property
+    def tier2_bw_total(self) -> float:
+        return sum(self.tier2_bw.values())
+
 
 @dataclass
 class PoolMetrics:
@@ -92,6 +169,9 @@ class PoolMetrics:
     accels_busy: int           # actually computing (requested)
     tier2_total: float
     tier2_reserved: float
+    tier2_bw_total: float      # capacity-fabric bandwidth, bytes/s
+    tier2_bw_reserved: float
+    tier2_kv_reserved: float   # KV slice of the byte reservations
     fragmentation: float       # 1 - largest free block / min(free, pod size)
     n_jobs: int
 
@@ -108,6 +188,11 @@ class PoolMetrics:
         return (self.accels_granted - self.accels_busy) / self.accels_total \
             if self.accels_total else 0.0
 
+    @property
+    def tier2_bw_frac(self) -> float:
+        return (self.tier2_bw_reserved / self.tier2_bw_total
+                if self.tier2_bw_total else 0.0)
+
 
 class AllocationError(RuntimeError):
     pass
@@ -121,11 +206,14 @@ class Allocator:
         self.policy = policy or inventory.interconnect
         if self.policy not in ("scalepool", "baseline"):
             raise ValueError(f"unknown policy {self.policy!r}")
-        # free local accel ids per pod, kept sorted for determinism
-        self._free: Dict[int, List[int]] = {
-            p.id: list(p.accel_ids()) for p in inventory.pods}
+        # free local accel ids per pod, heap-backed (smallest id first for
+        # determinism — the same order the old sorted-list scans produced)
+        self._free: Dict[int, FreeList] = {
+            p.id: FreeList(p.accel_ids()) for p in inventory.pods}
         self._free_t2: Dict[int, float] = {
             m.id: m.capacity for m in inventory.memory_nodes}
+        self._free_t2bw: Dict[int, float] = {
+            m.id: m.bandwidth for m in inventory.memory_nodes}
         self.live: Dict[str, Allocation] = {}
 
     # ---- queries ---------------------------------------------------------
@@ -136,6 +224,9 @@ class Allocator:
 
     def free_tier2(self) -> float:
         return sum(self._free_t2.values())
+
+    def free_tier2_bw(self) -> float:
+        return sum(self._free_t2bw.values())
 
     def fully_free_pods(self) -> List[int]:
         return [p.id for p in self.inv.pods
@@ -151,7 +242,7 @@ class Allocator:
         else:
             alloc = self._allocate_scalepool(req)
         if alloc is not None:
-            self._commit(alloc)
+            self.live[alloc.job] = alloc
         return alloc
 
     def release(self, job: str) -> None:
@@ -159,56 +250,57 @@ class Allocator:
         if alloc is None:
             raise AllocationError(f"job {job!r} holds no allocation")
         for pod_id, ids in alloc.accels.items():
-            self._free[pod_id] = sorted(self._free[pod_id] + list(ids))
+            self._free[pod_id].put(ids)
         for node_id, nbytes in alloc.tier2.items():
             self._free_t2[node_id] += nbytes
+        for node_id, bw in alloc.tier2_bw.items():
+            self._free_t2bw[node_id] += bw
 
     # ---- transactional snapshot (for preemption / resize trials) ---------
     def snapshot(self):
         """Opaque copy of the allocation state; pair with ``restore`` to
         roll back a failed multi-step operation."""
-        import copy
-        return (copy.deepcopy(self._free), dict(self._free_t2),
-                dict(self.live))
+        return ({k: v.clone() for k, v in self._free.items()},
+                dict(self._free_t2), dict(self._free_t2bw), dict(self.live))
 
     def restore(self, snap) -> None:
-        self._free = {k: list(v) for k, v in snap[0].items()}
+        self._free = {k: v.clone() for k, v in snap[0].items()}
         self._free_t2 = dict(snap[1])
-        self.live = dict(snap[2])
-
-    def _commit(self, alloc: Allocation) -> None:
-        for pod_id, ids in alloc.accels.items():
-            pool = self._free[pod_id]
-            for i in ids:
-                pool.remove(i)   # raises if double-allocated
-        for node_id, nbytes in alloc.tier2.items():
-            if self._free_t2[node_id] < nbytes - 1e-6:
-                raise AllocationError("tier-2 over-reservation")
-            self._free_t2[node_id] -= nbytes
-        self.live[alloc.job] = alloc
+        self._free_t2bw = dict(snap[2])
+        self.live = dict(snap[3])
 
     # ---- scalepool: composable, hop-minimizing ---------------------------
     def _allocate_scalepool(self, req: JobRequest) -> Optional[Allocation]:
-        tier2 = self._reserve_tier2(req.tier2_bytes)
+        tier2 = self._reserve_pool(self._free_t2, req.tier2_bytes)
         if tier2 is None:
+            return None
+        tier2_bw = self._reserve_pool(self._free_t2bw, req.tier2_bw)
+        if tier2_bw is None:
             return None
         pods = self._pick_pods_min_hops(req.n_accels)
         if pods is None:
             return None
+        # commit: pop the smallest free ids from the chosen pods
         accels: Dict[int, Tuple[int, ...]] = {}
         remaining = req.n_accels
         for pod_id in pods:
             take = min(remaining, len(self._free[pod_id]))
-            accels[pod_id] = tuple(self._free[pod_id][:take])
+            accels[pod_id] = self._free[pod_id].take(take)
             remaining -= take
         assert remaining == 0
+        for node_id, nbytes in tier2.items():
+            self._free_t2[node_id] -= nbytes
+        for node_id, bw in tier2_bw.items():
+            self._free_t2bw[node_id] -= bw
         return Allocation(req.name, accels, tier2, req.n_accels,
-                          whole_pods=False, tier2_requested=req.tier2_bytes)
+                          whole_pods=False, tier2_requested=req.tier2_bytes,
+                          kv_bytes=req.kv_bytes, tier2_bw=tier2_bw,
+                          tier2_bw_requested=req.tier2_bw)
 
     def _pick_pods_min_hops(self, n: int) -> Optional[List[int]]:
         """Pod set minimizing (span hops, pod count): single pod best-fit,
         then one leaf-switch group, then greedy across the fabric."""
-        free = {pid: len(v) for pid, v in self._free.items() if v}
+        free = {pid: len(v) for pid, v in self._free.items() if len(v)}
         if sum(free.values()) < n:
             return None
         # 1. tightest single pod that fits (best-fit limits fragmentation)
@@ -236,19 +328,21 @@ class Allocator:
                 return chosen
         raise AssertionError("caller guaranteed capacity")
 
-    def _reserve_tier2(self, nbytes: float) -> Optional[Dict[int, float]]:
-        if nbytes <= 0:
+    @staticmethod
+    def _reserve_pool(free: Dict[int, float], amount: float) \
+            -> Optional[Dict[int, float]]:
+        """Plan a reservation of ``amount`` over a per-node scalar resource
+        (bytes or bytes/s): fewest nodes, drain the fullest first."""
+        if amount <= 0:
             return {}
-        if self.free_tier2() < nbytes:
+        if sum(free.values()) < amount:
             return None
         out: Dict[int, float] = {}
-        remaining = nbytes
-        # fewest nodes: drain the fullest first (deterministic tie on id)
-        for node_id in sorted(self._free_t2,
-                              key=lambda i: (-self._free_t2[i], i)):
+        remaining = amount
+        for node_id in sorted(free, key=lambda i: (-free[i], i)):
             if remaining <= 0:
                 break
-            take = min(remaining, self._free_t2[node_id])
+            take = min(remaining, free[node_id])
             if take > 0:
                 out[node_id] = take
                 remaining -= take
@@ -272,9 +366,12 @@ class Allocator:
         if len(free_pods) < pods_needed:
             return None
         chosen = sorted(free_pods)[:pods_needed]   # first-fit, contiguous ids
-        accels = {pid: tuple(self.inv.pods[pid].accel_ids()) for pid in chosen}
+        accels = {pid: self._free[pid].take(len(self._free[pid]))
+                  for pid in chosen}
         return Allocation(req.name, accels, {}, req.n_accels, whole_pods=True,
-                          tier2_requested=req.tier2_bytes)
+                          tier2_requested=req.tier2_bytes,
+                          kv_bytes=req.kv_bytes,
+                          tier2_bw_requested=req.tier2_bw)
 
     # ---- metrics & invariants --------------------------------------------
     def metrics(self) -> PoolMetrics:
@@ -292,6 +389,9 @@ class Allocator:
             accels_total=total, accels_granted=granted, accels_busy=busy,
             tier2_total=self.inv.total_tier2,
             tier2_reserved=self.inv.total_tier2 - self.free_tier2(),
+            tier2_bw_total=self.inv.total_tier2_bw,
+            tier2_bw_reserved=self.inv.total_tier2_bw - self.free_tier2_bw(),
+            tier2_kv_reserved=sum(a.kv_bytes for a in self.live.values()),
             fragmentation=frag, n_jobs=len(self.live))
 
     def check_conservation(self) -> None:
@@ -306,7 +406,7 @@ class Allocator:
                     seen.add(key)
         for p in self.inv.pods:
             held = {(p.id, i) for i in p.accel_ids()}
-            free = {(p.id, i) for i in self._free[p.id]}
+            free = {(p.id, i) for i in self._free[p.id].ids()}
             alloced = {k for k in seen if k[0] == p.id}
             if free | alloced != held or free & alloced:
                 raise AssertionError(f"pod {p.id}: conservation violated")
@@ -314,3 +414,7 @@ class Allocator:
             reserved = sum(a.tier2.get(m.id, 0.0) for a in self.live.values())
             if abs(reserved + self._free_t2[m.id] - m.capacity) > 1e-3:
                 raise AssertionError(f"memory node {m.id}: conservation violated")
+            bw = sum(a.tier2_bw.get(m.id, 0.0) for a in self.live.values())
+            if abs(bw + self._free_t2bw[m.id] - m.bandwidth) > 1e-3:
+                raise AssertionError(
+                    f"memory node {m.id}: bandwidth conservation violated")

@@ -42,10 +42,17 @@ class PodSpec:
 
 @dataclass(frozen=True)
 class MemoryNodeSpec:
-    """A CPU-less tier-2 memory node on the capacity CXL fabric (§5)."""
+    """A CPU-less tier-2 memory node on the capacity CXL fabric (§5).
+
+    ``bandwidth`` is the node's sustainable capacity-fabric throughput
+    (bytes/s) — a schedulable resource alongside capacity: concurrent
+    offload-heavy jobs contend on it and the allocator admission-controls
+    reservations (ROADMAP: tier-2 bandwidth, not just bytes).
+    """
 
     id: int
     capacity: float               # bytes
+    bandwidth: float = 0.0        # bytes/s sustainable on the CXL.io path
 
 
 @dataclass(frozen=True)
@@ -84,6 +91,10 @@ class Inventory:
     @property
     def total_tier2(self) -> float:
         return sum(m.capacity for m in self.memory_nodes)
+
+    @property
+    def total_tier2_bw(self) -> float:
+        return sum(m.bandwidth for m in self.memory_nodes)
 
     # ---- topology distance ----------------------------------------------
     @property
@@ -132,6 +143,7 @@ def build_inventory(
     hbm_per_accel_gb: float = 192.0,
     n_memory_nodes: int = 8,
     memory_node_gb: float = 4096.0,
+    memory_node_gbps: Optional[float] = None,
     interconnect: str = "scalepool",
     xlink: fb.LinkSpec = fb.NVLINK5,
 ) -> Inventory:
@@ -147,7 +159,11 @@ def build_inventory(
     if interconnect == "scalepool":
         inter = fb.cxl_fabric(n_endpoints, link=fb.CXL_COHERENCE)
         tier2 = fb.tier2_memory_fabric(max(8, n_memory_nodes))
-        nodes = tuple(MemoryNodeSpec(i, memory_node_gb * GB)
+        # per-node sustainable bandwidth defaults to the capacity fabric's
+        # effective large-message rate (CXL.io bulk path, §5)
+        node_bw = (memory_node_gbps * GB if memory_node_gbps is not None
+                   else tier2.bandwidth() * GB)
+        nodes = tuple(MemoryNodeSpec(i, memory_node_gb * GB, node_bw)
                       for i in range(n_memory_nodes))
     elif interconnect == "baseline":
         inter = fb.infiniband_fabric(n_endpoints)

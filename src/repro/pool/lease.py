@@ -21,7 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 
 from repro.ckpt.elastic import resize_plan
-from repro.core.tiering import TieringPolicy
+from repro.core.tiering import KVBudget, TieringPolicy
 from repro.pool.allocator import (Allocation, AllocationError, Allocator,
                                   JobRequest)
 from repro.pool.inventory import Inventory, build_inventory
@@ -42,7 +42,6 @@ class Lease:
 
     allocation: Allocation
     model_parallel: int = 1
-    kv_spill: bool = False        # serving leases spill cold KV pages
 
     @property
     def job(self) -> str:
@@ -57,19 +56,38 @@ class Lease:
         return self.allocation.tier2_bytes
 
     @property
+    def kv_bytes(self) -> float:
+        """The KV slice of the tier-2 grant (drives serving KV budgets)."""
+        return self.allocation.kv_bytes
+
+    @property
+    def tier2_bw(self) -> float:
+        return self.allocation.tier2_bw_total
+
+    @property
     def spans_pods(self) -> bool:
         return self.allocation.n_pods > 1
 
     # ---- runtime binding -------------------------------------------------
+    def kv_budget(self, *, page_size: int = 64) -> Optional[KVBudget]:
+        """The lease's KV grant as an engine-consumable ``KVBudget``:
+        tier-2 bytes are the allocator's actual grant; the tier-1 page
+        quota is left for the engine to derive from its slot geometry."""
+        if self.kv_bytes <= 0:
+            return None
+        return KVBudget(tier1_pages=None, tier2_bytes=self.kv_bytes,
+                        page_size=page_size)
+
     def tiering_policy(self) -> TieringPolicy:
         """Capacity demand → offload policy: a lease with capacity
-        backing offloads optimizer state (train) / cold KV (serve).
-        Under the baseline policy that backing is scavenged idle-accel
-        HBM (``tier2_requested`` with an empty reservation) — the demand
-        still offloads, it just lands in the stranded partition."""
+        backing offloads optimizer state (train) / budgets KV paging
+        (serve).  Under the baseline policy that backing is scavenged
+        idle-accel HBM (``tier2_requested`` with an empty reservation) —
+        the demand still offloads, it just lands in the stranded
+        partition."""
         has_t2 = self.allocation.tier2_requested > 0 or self.tier2_bytes > 0
         return TieringPolicy(offload_optimizer=has_t2,
-                             kv_spill=has_t2 and self.kv_spill)
+                             kv_budget=self.kv_budget())
 
     def mesh_shape(self, n_devices: int) -> Tuple[Tuple[int, ...],
                                                   Tuple[str, ...]]:
@@ -106,19 +124,24 @@ class ResourcePool:
         self.leases: Dict[str, Lease] = {}
 
     def lease(self, name: str, n_accels: int, *, tier2_gb: float = 0.0,
-              model_parallel: int = 1, kv_spill: bool = False) -> Lease:
+              kv_gb: float = 0.0, tier2_gbps: float = 0.0,
+              model_parallel: int = 1) -> Lease:
+        """Take a lease: ``kv_gb`` earmarks a slice of the tier-2
+        reservation as a KV-paging grant (serving engines turn it into a
+        ``KVBudget``); ``tier2_gbps`` reserves capacity-fabric bandwidth."""
         allocation = self.alloc.allocate(
-            JobRequest(name, n_accels, tier2_gb * GB))
+            JobRequest(name, n_accels, tier2_gb * GB, kv_bytes=kv_gb * GB,
+                       tier2_bw=tier2_gbps * GB))
         if allocation is None:
             m = self.alloc.metrics()
             raise AllocationError(
                 f"pool cannot satisfy {name!r}: wanted {n_accels} accels + "
-                f"{tier2_gb:.0f}GB tier-2; free: "
+                f"{tier2_gb:.0f}GB tier-2 + {tier2_gbps:.0f}GB/s; free: "
                 f"{self.alloc.free_accels()} accels, "
-                f"{self.alloc.free_tier2() / GB:.0f}GB "
+                f"{self.alloc.free_tier2() / GB:.0f}GB, "
+                f"{self.alloc.free_tier2_bw() / GB:.0f}GB/s "
                 f"(utilization {m.utilization:.0%})")
-        lease = Lease(allocation, model_parallel=model_parallel,
-                      kv_spill=kv_spill)
+        lease = Lease(allocation, model_parallel=model_parallel)
         self.leases[name] = lease
         return lease
 
@@ -142,7 +165,10 @@ class ResourcePool:
                            model_parallel=old.model_parallel)
         snapshot = self.alloc.snapshot()
         self.alloc.release(name)
-        allocation = self.alloc.allocate(JobRequest(name, n_accels, t2))
+        allocation = self.alloc.allocate(JobRequest(
+            name, n_accels, t2,
+            kv_bytes=min(old.allocation.kv_bytes, t2),
+            tier2_bw=old.allocation.tier2_bw_requested))
         if allocation is None:
             self.alloc.restore(snapshot)
             raise AllocationError(

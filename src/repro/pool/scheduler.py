@@ -36,6 +36,7 @@ class PoolJob:
     par: sim.ParallelismConfig
     n_steps: int
     tier2_bytes: float = 0.0
+    tier2_bw: float = 0.0         # capacity-fabric bandwidth demand, bytes/s
     submit_t: float = 0.0
     priority: int = 0
     elastic: bool = False
@@ -51,6 +52,15 @@ def offload_bytes(model: sim.LLMConfig,
     """Capacity-tier demand of an offloaded optimizer for ``model`` —
     the same constant the §6 step simulator charges per step."""
     return calib.optimizer_bytes_per_param * model.n_params
+
+
+def offload_bw(model: sim.LLMConfig, calib: sim.Calibration,
+               steps_per_sec: float) -> float:
+    """Sustained capacity-fabric bandwidth (bytes/s) an offloaded
+    optimizer streams: moments read + written back every step.  Feed
+    this into ``PoolJob.tier2_bw`` so concurrent offload-heavy jobs
+    contend on tier-2 bandwidth, not just bytes."""
+    return 2.0 * offload_bytes(model, calib) * steps_per_sec
 
 
 @dataclass
@@ -227,7 +237,8 @@ class Scheduler:
 
     # ---- admission -------------------------------------------------------
     def _request(self, job: PoolJob, par: sim.ParallelismConfig) -> JobRequest:
-        return JobRequest(job.name, par.tp * par.pp * par.dp, job.tier2_bytes)
+        return JobRequest(job.name, par.tp * par.pp * par.dp, job.tier2_bytes,
+                          tier2_bw=job.tier2_bw)
 
     def _try_admit(self, job: PoolJob) -> bool:
         """Full size, then elastic shrink (dp halving) if allowed."""

@@ -2,9 +2,15 @@
 KV/state cache.  These are the functions the decode_* / long_* dry-run
 cells lower (``serve_step``, not ``train_step``, per the assignment).
 
-``make_lease_session`` binds a ``repro.pool`` allocation lease to a
-concrete serving setup (mesh, sharding rules, jitted decode step, KV
-tiering policy) — the orchestrator-to-runtime path for serving jobs."""
+.. deprecated::
+    The request-level serving API now lives in ``repro.serve``: build an
+    ``Engine`` (``Engine.from_lease`` / ``Engine.local``), ``submit``
+    ``Request`` objects, and drive ``engine.step()`` — continuous
+    batching, slot recycling, and lease-budgeted paged-KV tiering
+    (``KVBudget``) are handled there.  The step factories below remain
+    as the engine's building blocks and for the dry-run lowering cells;
+    ``make_lease_session`` remains for encdec models and single-batch
+    deployments but new code should prefer the engine."""
 
 from __future__ import annotations
 
@@ -77,7 +83,10 @@ def decode_carry_specs(model: Model, shape: ShapeConfig,
 
 @dataclasses.dataclass(frozen=True)
 class LeaseServeSession:
-    """Everything a serving worker needs from its pool lease."""
+    """Everything a serving worker needs from its pool lease.
+
+    .. deprecated:: superseded by ``repro.serve.Engine.from_lease`` for
+       request-level serving; kept for encdec and fixed-batch loops."""
 
     mesh: Mesh
     rules: Rules

@@ -1,0 +1,36 @@
+"""repro.serve — request-level serving engine over the XLink-CXL pool.
+
+The serving API everything downstream (multi-tenant serving, fair-share
+queueing, multi-host binding) builds on:
+
+    api     — Request / RequestHandle / EngineConfig / ServeCostModel
+    engine  — Engine: continuous batching + lease-budgeted KV tiering
+    trace   — arrival traces and the trace → engine driver
+
+Quickstart::
+
+    from repro.serve import Engine, EngineConfig, Request
+    eng = Engine.local(model, EngineConfig(max_slots=4, max_seq=128))
+    h = eng.submit(Request(prompt_tokens=(1, 2, 3), max_new_tokens=8))
+    eng.run_until_idle()
+    print(h.result(), eng.stats())
+
+Lease-backed (the orchestrator composes capacity + KV budget)::
+
+    lease = pool.lease("svc", 8, tier2_gb=256, kv_gb=64)
+    eng = Engine.from_lease(model, lease, EngineConfig(max_slots=8))
+"""
+
+from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
+from repro.serve.api import (EngineConfig, Request, RequestHandle,
+                             RequestStatus, ServeCostModel)
+from repro.serve.engine import Engine
+from repro.serve.trace import (burst_trace, latency_summary, load_trace,
+                               run_trace, synthetic_trace)
+
+__all__ = [
+    "Engine", "EngineConfig", "KVBudget", "KVBudgetExceeded", "PagedKV",
+    "Request", "RequestHandle", "RequestStatus", "ServeCostModel",
+    "burst_trace", "latency_summary", "load_trace", "run_trace",
+    "synthetic_trace",
+]

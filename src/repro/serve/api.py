@@ -1,0 +1,140 @@
+"""Request-level serving API types (paper §6, Fig. 7 at request granularity).
+
+A ``Request`` is what a client submits; a ``RequestHandle`` is the
+engine's live view of it (status, generated tokens, latency clocks).
+``EngineConfig`` sizes the slot array and page geometry; ``ServeCostModel``
+prices engine events in *modeled* seconds from the paper's fabric
+constants, so latency sweeps are hardware-derived rather than CPU-smoke
+wall-clock noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.core import fabric as fb
+
+GB = 1e9
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    SWAPPED = "swapped"        # KV parked in the tier-2 capacity pool
+    DONE = "done"
+    FAILED_OOM = "failed_oom"  # can never fit the tier-1 page quota
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: a prompt plus a decode budget."""
+
+    prompt_tokens: Tuple[int, ...]
+    max_new_tokens: int
+    arrival_time: float = 0.0          # modeled seconds (trace-driven)
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt_tokens",
+                           tuple(int(t) for t in self.prompt_tokens))
+        if len(self.prompt_tokens) == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """Live engine-side state of a submitted request."""
+
+    rid: int
+    request: Request
+    status: RequestStatus = RequestStatus.QUEUED
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submit_clock: float = 0.0
+    first_token_clock: Optional[float] = None
+    done_clock: Optional[float] = None
+    swaps: int = 0                     # tier-2 round trips
+    recomputes: int = 0                # tier-1-only preemptions (re-prefill)
+
+    @property
+    def done(self) -> bool:
+        return self.status in (RequestStatus.DONE, RequestStatus.FAILED_OOM)
+
+    @property
+    def latency(self) -> Optional[float]:
+        return (None if self.done_clock is None
+                else self.done_clock - self.submit_clock)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (None if self.first_token_clock is None
+                else self.first_token_clock - self.submit_clock)
+
+    def result(self) -> List[int]:
+        if self.status is RequestStatus.FAILED_OOM:
+            raise RuntimeError(f"request {self.rid} failed: tier-1 KV quota "
+                               f"cannot ever hold it")
+        if not self.done:
+            raise RuntimeError(f"request {self.rid} still {self.status.value}")
+        return list(self.tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Slot-array and page geometry of the engine."""
+
+    max_slots: int = 4                 # concurrent decode slots
+    max_seq: int = 256                 # per-slot KV capacity (tokens)
+    page_size: int = 64                # tokens per KV page
+    cache_dtype: Any = "float32"       # jnp dtype name or dtype
+    eos_token: Optional[int] = None    # early stop (None = run to budget)
+    # classic tier-1-only serving: reserve a request's full-lifetime KV at
+    # admission (no growth, no preemption risk).  Safe without a spill
+    # target, but concurrency collapses to quota // lifetime_pages — the
+    # static alternative optimistic paging + tier-2 swap relieves.
+    reserve_lifetime: bool = False
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_seq // self.page_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCostModel:
+    """Modeled event costs (seconds).  Defaults derive from the paper's
+    hardware constants: decode steps are weight-read bound on HBM, swap
+    traffic rides the capacity-oriented CXL fabric (§5)."""
+
+    prefill_s_per_token: float = 2e-5
+    decode_s_per_step: float = 2e-3    # batched step, weight-bound floor
+    decode_s_per_token: float = 5e-5   # marginal per resident sequence
+    tier2_bw: float = 0.0              # bytes/s, 0 = derive from fabric
+    tier2_lat: float = 0.0             # per-transfer setup latency
+
+    @staticmethod
+    def from_fabric(n_param_bytes: float,
+                    hbm_bw: float = 8000.0 * GB,
+                    tier2: Optional[fb.FabricSpec] = None) -> "ServeCostModel":
+        t2 = tier2 or fb.tier2_memory_fabric(8)
+        return ServeCostModel(
+            prefill_s_per_token=max(1e-6, n_param_bytes / hbm_bw / 8),
+            decode_s_per_step=max(1e-5, n_param_bytes / hbm_bw),
+            decode_s_per_token=max(1e-6, n_param_bytes / hbm_bw / 32),
+            tier2_bw=t2.bandwidth() * GB,
+            tier2_lat=t2.latency())
+
+    def swap_s(self, nbytes: float) -> float:
+        bw = self.tier2_bw or fb.tier2_memory_fabric(8).bandwidth() * GB
+        return self.tier2_lat + nbytes / bw
+
+    def prefill_s(self, n_tokens: int) -> float:
+        return self.prefill_s_per_token * n_tokens
+
+    def decode_s(self, n_resident: int) -> float:
+        return self.decode_s_per_step + self.decode_s_per_token * n_resident

@@ -1,0 +1,449 @@
+"""Request-level continuous-batching engine over a budgeted paged KV pool.
+
+The serving counterpart of ``runtime.train``: one ``Engine`` owns a
+fixed array of decode slots (a stacked per-slot KV cache), admits queued
+requests FIFO into free slots (prefill), advances every running slot one
+token per ``step()`` (a single vmapped, jitted decode over the slot
+axis), recycles slots on completion, and enforces a ``KVBudget``:
+
+* every running slot's pages live in tier-1 (HBM) — decode attends the
+  whole prefix, so residency is a hard requirement;
+* when decode growth overruns the tier-1 page quota, the newest-admitted
+  slot is preempted: with a tier-2 byte budget its cache region is
+  *swapped* to the capacity pool (bit-exact, bulk CXL.io traffic) and
+  swapped back when pages free up; with no tier-2 budget its KV is
+  dropped and the request re-queued for full re-prefill (the recompute
+  storm the paper's Fig. 7 tier-2 relief avoids);
+* a request whose lifetime page demand can never fit the quota fails
+  deterministically at admission (``FAILED_OOM``).
+
+Each slot is an independent batch=1 program under ``jax.vmap``, so a
+request's tokens depend only on its own prompt — output is identical
+for any arrival interleaving and for lease-backed vs local construction
+(the engine's determinism contract, enforced by tests).
+
+Time is *modeled*: a ``ServeCostModel`` prices prefill/decode/swap
+events from the paper's fabric constants, so latency distributions are
+hardware-derived even when the host is a CPU smoke run.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
+from repro.models.api import Model
+from repro.models.config import ShapeConfig
+from repro.serve.api import (EngineConfig, Request, RequestHandle,
+                             RequestStatus, ServeCostModel)
+
+
+def _dtype(d):
+    return jnp.dtype(d) if not isinstance(d, str) else {
+        "float32": jnp.float32, "bfloat16": jnp.bfloat16,
+        "float16": jnp.float16}[d]
+
+
+@dataclasses.dataclass
+class _SlotState:
+    """Host-side bookkeeping for one in-flight request."""
+
+    handle: RequestHandle
+    index: int = 0                 # next KV write position
+    cur_tok: int = 0               # last emitted token (decode input)
+    slot: Optional[int] = None
+    admit_seq: int = -1            # admission order (preemption victims
+                                   # are chosen newest-first)
+
+    @property
+    def rid(self) -> int:
+        return self.handle.rid
+
+    @property
+    def request(self) -> Request:
+        return self.handle.request
+
+    def effective_prompt(self) -> Tuple[int, ...]:
+        """Prompt for (re-)prefill: original prompt plus everything
+        already generated (the recompute-preemption continuation)."""
+        return self.request.prompt_tokens + tuple(self.handle.tokens)
+
+    @property
+    def target_len(self) -> int:
+        return self.request.prompt_len + self.request.max_new_tokens
+
+
+class Engine:
+    """Continuous-batching serving engine.  Build with ``Engine.local``
+    (explicit config) or ``Engine.from_lease`` (a ``repro.pool`` lease
+    supplies the mesh, sharding rules, and the tier-2 KV byte budget)."""
+
+    def __init__(self, model: Model, params, cfg: EngineConfig, *,
+                 budget: Optional[KVBudget] = None,
+                 cost_model: Optional[ServeCostModel] = None,
+                 mesh=None, rules=None):
+        if model.cfg.family == "encdec":
+            raise NotImplementedError(
+                "Engine drives decoder-style models; encdec serving still "
+                "goes through runtime.serve step factories")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.mesh, self.rules = mesh, rules
+        self.cost = cost_model or ServeCostModel.from_fabric(
+            2.0 * model.cfg.param_count())
+
+        dt = _dtype(cfg.cache_dtype)
+        self._cache_dtype = dt
+        slot_shapes = jax.eval_shape(
+            lambda: model.init_cache(1, cfg.max_seq, dtype=dt))
+        slot_bytes = sum(l.size * l.dtype.itemsize
+                         for l in jax.tree.leaves(slot_shapes))
+        page_bytes = slot_bytes * cfg.page_size / max(1, cfg.max_seq)
+        self.slot_bytes = float(slot_bytes)
+
+        full = budget or KVBudget(page_size=cfg.page_size)
+        tier1 = (full.tier1_pages if full.tier1_pages is not None
+                 else cfg.max_slots * cfg.pages_per_slot)
+        self.budget = KVBudget(tier1_pages=tier1,
+                               tier2_bytes=full.tier2_bytes,
+                               page_size=cfg.page_size)
+        self.kv = PagedKV(self.budget, page_bytes)
+
+        # stacked per-slot cache: leading axis = slot, each slot batch=1
+        self._cache = jax.tree.map(
+            lambda l: jnp.zeros((cfg.max_slots,) + l.shape, l.dtype),
+            slot_shapes)
+        self._slots: List[Optional[_SlotState]] = [None] * cfg.max_slots
+        self._slot_index = [0] * cfg.max_slots   # stale values are harmless
+        self._slot_tok = [0] * cfg.max_slots     # (masked / overwritten)
+
+        self._queue: deque = deque()     # _SlotState, FIFO (+preempted front)
+        self._swapped: List[_SlotState] = []
+        self.handles: Dict[int, RequestHandle] = {}
+        self._next_rid = 0
+        self._admit_seq = 0
+
+        self.clock = 0.0
+        self.steps = 0
+        self._decoded_tokens = 0
+        self._prefill_fn = self._scoped(model.prefill)
+
+        def slot_decode(params, tok, cache, index):
+            logits, new_cache = model.decode(params, tok, cache, index)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt[:, None], new_cache
+
+        self._decode_fn = self._scoped(
+            jax.vmap(slot_decode, in_axes=(None, 0, 0, 0)))
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def local(cls, model: Model, cfg: EngineConfig = EngineConfig(), *,
+              params=None, rng=None,
+              budget: Optional[KVBudget] = None,
+              cost_model: Optional[ServeCostModel] = None) -> "Engine":
+        """Engine over local devices, no orchestrator: the KV budget is
+        whatever the caller passes (default: unbudgeted tier-1, no tier-2)."""
+        if params is None:
+            params = model.init(rng if rng is not None
+                                else jax.random.PRNGKey(0))
+        return cls(model, params, cfg, budget=budget, cost_model=cost_model)
+
+    @classmethod
+    def from_lease(cls, model: Model, lease,
+                   cfg: EngineConfig = EngineConfig(), *,
+                   params=None, rng=None,
+                   budget: Optional[KVBudget] = None,
+                   cost_model: Optional[ServeCostModel] = None) -> "Engine":
+        """Bind a ``repro.pool.Lease``: the lease's mesh shapes the
+        sharding rules and its tier-2 KV grant becomes the engine's
+        ``KVBudget.tier2_bytes`` — serving capacity is composed by the
+        orchestrator, not hard-coded per deployment."""
+        from repro.sharding.profiles import make_rules
+
+        mesh, policy = lease.materialize()
+        shape = ShapeConfig("engine", "decode", cfg.max_seq, cfg.max_slots)
+        rules = make_rules(model.cfg, shape, mesh, fsdp=False)
+        if budget is None:
+            base = policy.kv_budget or KVBudget(page_size=cfg.page_size)
+            budget = KVBudget(tier1_pages=base.tier1_pages,
+                              tier2_bytes=base.tier2_bytes,
+                              page_size=cfg.page_size)
+        if params is None:
+            params = model.init(rng if rng is not None
+                                else jax.random.PRNGKey(0))
+        return cls(model, params, cfg, budget=budget, cost_model=cost_model,
+                   mesh=mesh, rules=rules)
+
+    def _scoped(self, fn):
+        jitted = jax.jit(fn)
+
+        def call(*args):
+            with contextlib.ExitStack() as stack:
+                if self.mesh is not None:
+                    from repro.core.compat import mesh_context
+                    from repro.sharding.partition import use_rules
+                    stack.enter_context(use_rules(self.rules, self.mesh))
+                    stack.enter_context(mesh_context(self.mesh))
+                return jitted(*args)
+        return call
+
+    # ---- client API ------------------------------------------------------
+    def submit(self, request: Request) -> RequestHandle:
+        """Enqueue a request (deterministic FIFO admission order)."""
+        if request.prompt_len + request.max_new_tokens > self.cfg.max_seq:
+            raise ValueError(
+                f"prompt {request.prompt_len} + max_new "
+                f"{request.max_new_tokens} exceeds max_seq {self.cfg.max_seq}")
+        rid = self._next_rid
+        self._next_rid += 1
+        handle = RequestHandle(rid=rid, request=request,
+                               submit_clock=max(self.clock,
+                                                request.arrival_time))
+        self.handles[rid] = handle
+        self._queue.append(_SlotState(handle))
+        return handle
+
+    @property
+    def idle(self) -> bool:
+        return (not self._queue and not self._swapped
+                and all(s is None for s in self._slots))
+
+    def advance_clock(self, t: float) -> None:
+        """Idle-advance modeled time (trace drivers jump to next arrival)."""
+        self.clock = max(self.clock, t)
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if self.idle:
+                return
+            self.step()
+        raise RuntimeError(f"engine not idle after {max_steps} steps")
+
+    # ---- the engine loop -------------------------------------------------
+    def step(self) -> float:
+        """One scheduling round: relieve KV pressure, swap in, admit,
+        decode every running slot one token.  Returns modeled seconds."""
+        dt = 0.0
+        dt += self._relieve_pressure()
+        dt += self._swap_in()
+        dt += self._admit()
+        dt += self._decode_once()
+        self.clock += dt
+        self.steps += 1
+        return dt
+
+    # ---- internals -------------------------------------------------------
+    def _running(self) -> List[_SlotState]:
+        return sorted((s for s in self._slots if s is not None),
+                      key=lambda s: s.admit_seq)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def _pages_next(self, st: _SlotState) -> int:
+        # pages needed to write the next token at position st.index; under
+        # static reservation the full lifetime is held from admission on
+        if self.cfg.reserve_lifetime:
+            return self.budget.pages_for(st.target_len)
+        return self.budget.pages_for(st.index + 1)
+
+    def _relieve_pressure(self) -> float:
+        """Preempt newest-admitted slots until every remaining running
+        slot can write its next token within the tier-1 quota."""
+        dt = 0.0
+        running = self._running()
+        while running:
+            demand = sum(self._pages_next(s) for s in running)
+            if demand <= self.budget.tier1_pages:
+                break
+            victim = running.pop()          # newest admission
+            dt += self._preempt(victim)
+        for st in running:
+            self.kv.grow(st.rid, self._pages_next(st))
+        return dt
+
+    def _preempt(self, st: _SlotState) -> float:
+        """Swap to tier-2 when the byte budget allows, else drop + requeue
+        for recompute (the tier-1-only failure mode)."""
+        slot = st.slot
+        pages = self.kv.pages_of(st.rid)
+        dt = 0.0
+        spilled = False
+        if self.budget.tier2_bytes > 0:     # skip the copy when spill-less
+            payload = jax.tree.map(lambda l: np.asarray(l[slot]), self._cache)
+            try:
+                self.kv.spill(st.rid, payload)
+                spilled = True
+            except KVBudgetExceeded:
+                pass                        # tier-2 full: fall back to drop
+        if spilled:
+            st.handle.status = RequestStatus.SWAPPED
+            st.handle.swaps += 1
+            self._swapped.append(st)
+            self._swapped.sort(key=lambda s: s.rid)
+            dt = self.cost.swap_s(pages * self.kv.page_bytes)
+        else:
+            self.kv.free(st.rid)
+            st.handle.status = RequestStatus.QUEUED
+            st.handle.recomputes += 1
+            st.index = 0
+            self._queue.appendleft(st)
+        # zero the region so any bookkeeping bug is observable, not silent
+        self._cache = jax.tree.map(lambda l: l.at[slot].set(0), self._cache)
+        self._slots[slot] = None
+        st.slot = None
+        return dt
+
+    def _swap_in(self) -> float:
+        """Oldest swapped requests re-enter free slots before any fresh
+        admission (they hold tier-2 bytes the pool wants back)."""
+        dt = 0.0
+        while self._swapped:
+            st = self._swapped[0]
+            slot = self._free_slot()
+            if slot is None or self._pages_next(st) > self.kv.hot_free:
+                break
+            self._swapped.pop(0)
+            payload = self.kv.fetch(st.rid)
+            # reserve the next-token page now (the admission check above
+            # sized against it) so a same-step admission can't steal it
+            self.kv.grow(st.rid, self._pages_next(st))
+            self._cache = jax.tree.map(
+                lambda l, h: l.at[slot].set(jnp.asarray(h, l.dtype)),
+                self._cache, payload)
+            self._place(st, slot)
+            dt += self.cost.swap_s(self.kv.pages_of(st.rid)
+                                   * self.kv.page_bytes)
+        return dt
+
+    def _admit(self) -> float:
+        """FIFO prefill admission (head-of-line blocking keeps the order
+        deterministic; a request that can never fit fails immediately)."""
+        dt = 0.0
+        while self._queue:
+            st = self._queue[0]
+            if self.budget.pages_for(st.target_len) > self.budget.tier1_pages:
+                self._queue.popleft()
+                st.handle.status = RequestStatus.FAILED_OOM
+                st.handle.done_clock = self.clock + dt
+                continue
+            slot = self._free_slot()
+            eff = st.effective_prompt()
+            need = (self.budget.pages_for(st.target_len)
+                    if self.cfg.reserve_lifetime
+                    else self.budget.pages_for(len(eff) + 1))
+            if slot is None or need > self.kv.hot_free:
+                break
+            self._queue.popleft()
+            dt += self._prefill_into(st, slot, eff)
+        return dt
+
+    def _prefill_into(self, st: _SlotState, slot: int,
+                      eff: Tuple[int, ...]) -> float:
+        # exact-length prefill: jit caches one program per distinct prompt
+        # length (prefill returns last-position logits only, so padding
+        # would discard the true next-token distribution)
+        plen = len(eff)
+        tokens = np.asarray(eff, np.int32)[None, :]
+        slot_cache = self.model.init_cache(1, self.cfg.max_seq,
+                                           dtype=self._cache_dtype)
+        logits, cache = self._prefill_fn(self.params,
+                                         {"tokens": jnp.asarray(tokens)},
+                                         slot_cache)
+        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        self._emit(st, tok)
+        if st.handle.done:
+            return self.cost.prefill_s(plen)
+        self.kv.alloc(st.rid,
+                      self.budget.pages_for(st.target_len)
+                      if self.cfg.reserve_lifetime
+                      else self.budget.pages_for(plen + 1))
+        self._cache = jax.tree.map(lambda l, s: l.at[slot].set(s),
+                                   self._cache, cache)
+        st.index = plen
+        st.cur_tok = tok
+        self._place(st, slot)
+        return self.cost.prefill_s(plen)
+
+    def _place(self, st: _SlotState, slot: int) -> None:
+        st.slot = slot
+        st.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self._slots[slot] = st
+        self._slot_index[slot] = st.index
+        self._slot_tok[slot] = st.cur_tok
+        st.handle.status = RequestStatus.RUNNING
+
+    def _emit(self, st: _SlotState, tok: int) -> None:
+        st.handle.tokens.append(tok)
+        if st.handle.first_token_clock is None:
+            st.handle.first_token_clock = self.clock
+        eos_hit = (self.cfg.eos_token is not None
+                   and tok == self.cfg.eos_token)
+        if len(st.handle.tokens) >= st.request.max_new_tokens or eos_hit:
+            st.handle.status = RequestStatus.DONE
+            st.handle.done_clock = self.clock
+            if self.kv.holds(st.rid):
+                self.kv.free(st.rid)
+            if st.slot is not None:
+                self._slots[st.slot] = None
+                st.slot = None
+
+    def _decode_once(self) -> float:
+        running = self._running()
+        if not running:
+            return 0.0
+        for st in running:
+            self._slot_index[st.slot] = st.index
+            self._slot_tok[st.slot] = st.cur_tok
+        toks = jnp.asarray(self._slot_tok, jnp.int32).reshape(
+            self.cfg.max_slots, 1, 1)
+        idx = jnp.asarray(self._slot_index, jnp.int32)
+        new_toks, self._cache = self._decode_fn(self.params, toks,
+                                                self._cache, idx)
+        new_toks = np.asarray(new_toks)
+        for st in running:
+            tok = int(new_toks[st.slot, 0, 0])
+            st.index += 1
+            st.cur_tok = tok
+            self._decoded_tokens += 1
+            self._emit(st, tok)
+        return self.cost.decode_s(len(running))
+
+    # ---- observability ---------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Throughput, queue depth, and KV tier residency."""
+        n_running = sum(s is not None for s in self._slots)
+        done = [h for h in self.handles.values()
+                if h.status is RequestStatus.DONE]
+        failed = [h for h in self.handles.values()
+                  if h.status is RequestStatus.FAILED_OOM]
+        recomputes = sum(h.recomputes for h in self.handles.values())
+        swaps = sum(h.swaps for h in self.handles.values())
+        return {
+            "clock_s": self.clock,
+            "steps": self.steps,
+            "queue_depth": len(self._queue),
+            "running": n_running,
+            "swapped": len(self._swapped),
+            "completed": len(done),
+            "failed_oom": len(failed),
+            "tokens_decoded": self._decoded_tokens,
+            "throughput_tok_s": (self._decoded_tokens / self.clock
+                                 if self.clock > 0 else 0.0),
+            "preempt_swaps": swaps,
+            "preempt_recomputes": recomputes,
+            "kv": self.kv.residency(),
+        }

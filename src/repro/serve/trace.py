@@ -1,0 +1,90 @@
+"""Request-arrival traces and the trace → engine driver.
+
+Traces are deterministic (seeded numpy), expressed in *modeled* seconds
+— the same clock the engine's ``ServeCostModel`` advances — so a trace
+run is exactly reproducible across hosts and arrival interleavings.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.api import Request, RequestHandle
+
+
+def synthetic_trace(n_requests: int, *,
+                    mean_interarrival_s: float = 0.05,
+                    prompt_lens: Sequence[int] = (16, 32, 64),
+                    max_new_tokens: int = 16,
+                    vocab: int = 256,
+                    seed: int = 0) -> List[Request]:
+    """Poisson-ish arrivals, cycling prompt lengths, random token ids."""
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    out = []
+    for i in range(n_requests):
+        t += float(rng.exponential(mean_interarrival_s))
+        plen = prompt_lens[i % len(prompt_lens)]
+        prompt = rng.randint(1, vocab, size=plen).tolist()
+        out.append(Request(prompt_tokens=tuple(prompt),
+                           max_new_tokens=max_new_tokens,
+                           arrival_time=t))
+    return out
+
+
+def burst_trace(n_requests: int, *, prompt_len: int = 32,
+                max_new_tokens: int = 32, vocab: int = 256,
+                seed: int = 0) -> List[Request]:
+    """Everything arrives at t=0 — the heaviest contention shape."""
+    rng = np.random.RandomState(seed)
+    return [Request(tuple(rng.randint(1, vocab, size=prompt_len).tolist()),
+                    max_new_tokens, arrival_time=0.0)
+            for _ in range(n_requests)]
+
+
+def load_trace(path: str) -> List[Request]:
+    """JSONL: {"prompt_tokens": [...], "max_new_tokens": n, "arrival_time": t}."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            out.append(Request(tuple(d["prompt_tokens"]),
+                               int(d["max_new_tokens"]),
+                               float(d.get("arrival_time", 0.0))))
+    return out
+
+
+def run_trace(engine, trace: Sequence[Request], *,
+              max_steps: int = 200_000) -> List[RequestHandle]:
+    """Feed arrivals as modeled time passes; step until drained."""
+    pending = sorted(trace, key=lambda r: r.arrival_time)
+    handles: List[RequestHandle] = []
+    i = 0
+    for _ in range(max_steps):
+        while i < len(pending) and pending[i].arrival_time <= engine.clock:
+            handles.append(engine.submit(pending[i]))
+            i += 1
+        if engine.idle:
+            if i >= len(pending):
+                return handles
+            engine.advance_clock(pending[i].arrival_time)
+            continue
+        engine.step()
+    raise RuntimeError(f"trace not drained after {max_steps} steps")
+
+
+def latency_summary(handles: Sequence[RequestHandle]) -> Dict[str, float]:
+    lats = sorted(h.latency for h in handles if h.latency is not None
+                  and h.status.value == "done")
+    if not lats:
+        return {"n": 0, "p50_s": float("inf"), "p95_s": float("inf"),
+                "mean_s": float("inf")}
+    pct = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))]
+    return {"n": len(lats), "p50_s": pct(0.50), "p95_s": pct(0.95),
+            "mean_s": sum(lats) / len(lats)}

@@ -150,6 +150,48 @@ def test_train_step_hierarchical_matches_auto():
     assert "OK" in out
 
 
+def test_tied_parametric_norm_arch_refused_not_crashed():
+    """jax 0.4.x landmine (ROADMAP): hierarchical dp with the tied-
+    embedding qwen family used to SIGABRT the whole process inside XLA
+    (IsManualSubgroup CHECK).  make_rules must now detect the combination
+    and raise a catchable error instead, and the launcher falls back to
+    flat dp; on new-XLA jax the hierarchical path stays available."""
+    out = run_with_devices("""
+        import jax, pytest
+        from repro.configs import SMOKE_ARCHS
+        from repro.core.compat import IS_OLD_JAX
+        from repro.models.config import ShapeConfig
+        from repro.sharding.profiles import hierarchical_unsafe, make_rules
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        shape = ShapeConfig("t", "train", 32, 8)
+        qwen = SMOKE_ARCHS["qwen1.5-0.5b"]   # tied + rmsnorm: the landmine
+        olmo = SMOKE_ARCHS["olmo-1b"]        # tied + nonparam LN: safe
+
+        assert hierarchical_unsafe(olmo) is None
+        # safe combos always construct
+        make_rules(qwen, shape, mesh, fsdp=False)
+        make_rules(qwen, shape, mesh, fsdp=False, dp_mode="auto")
+        make_rules(olmo, shape, mesh, fsdp=False, dp_mode="hierarchical")
+
+        if IS_OLD_JAX:
+            assert hierarchical_unsafe(qwen) is not None
+            try:
+                make_rules(qwen, shape, mesh, fsdp=False,
+                           dp_mode="hierarchical")
+            except ValueError as e:
+                assert "IsManualSubgroup" in str(e)
+            else:
+                raise AssertionError("unsafe combo was not refused")
+        else:
+            assert hierarchical_unsafe(qwen) is None
+            make_rules(qwen, shape, mesh, fsdp=False,
+                       dp_mode="hierarchical")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_dryrun_smoke_cells():
     """End-to-end dry-run on reduced configs for one arch per family."""
     env = dict(os.environ)

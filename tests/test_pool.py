@@ -217,6 +217,84 @@ def test_lease_tiering_policy_follows_reservation():
     assert not without.tiering_policy().offload_optimizer
 
 
+def test_lease_kv_grant_becomes_budget():
+    """kv_gb earmarks a slice of the tier-2 reservation; the lease turns
+    it into a KVBudget with the engine-side page quota left open."""
+    pool = smoke_pool()
+    lease = pool.lease("svc", 4, tier2_gb=64, kv_gb=16)
+    assert lease.kv_bytes == pytest.approx(16 * GB)
+    budget = lease.kv_budget(page_size=32)
+    assert budget.tier2_bytes == pytest.approx(16 * GB)
+    assert budget.tier1_pages is None and budget.page_size == 32
+    policy = lease.tiering_policy()
+    assert policy.kv_budget is not None and policy.kv_spill
+    assert pool.metrics().tier2_kv_reserved == pytest.approx(16 * GB)
+    # no grant -> no budget
+    assert pool.lease("plain", 4, tier2_gb=8).kv_budget() is None
+    with pytest.raises(ValueError, match="kv_bytes"):
+        pool.lease("bad", 2, tier2_gb=4, kv_gb=8)   # kv > reservation
+
+
+def test_tier2_bandwidth_is_schedulable():
+    """Bandwidth is admission-controlled per memory node and conserved
+    through churn (ROADMAP: concurrent offload-heavy leases contend)."""
+    inv = build_inventory(n_pods=4, pod_size=8, n_memory_nodes=2,
+                          memory_node_gb=1024.0, memory_node_gbps=50.0,
+                          interconnect="scalepool")
+    a = Allocator(inv)
+    assert a.free_tier2_bw() == pytest.approx(100 * GB)
+    big = a.allocate(JobRequest("bw-hog", 4, 64 * GB, tier2_bw=80 * GB))
+    assert big is not None and big.tier2_bw_total == pytest.approx(80 * GB)
+    # the fabric has only 20GB/s left: an offload-heavy peer is refused
+    assert a.allocate(JobRequest("late", 4, 64 * GB, tier2_bw=40 * GB)) is None
+    ok = a.allocate(JobRequest("light", 4, 64 * GB, tier2_bw=10 * GB))
+    assert ok is not None
+    m = a.metrics()
+    assert m.tier2_bw_reserved == pytest.approx(90 * GB)
+    assert 0.89 < m.tier2_bw_frac < 0.91
+    a.check_conservation()
+    a.release("bw-hog")
+    a.release("light")
+    assert a.free_tier2_bw() == pytest.approx(100 * GB)
+    a.check_conservation()
+
+
+def test_scheduler_threads_tier2_bandwidth():
+    """Two offload-heavy jobs that together oversubscribe the capacity
+    fabric must run serially, not concurrently."""
+    inv = build_inventory(n_pods=4, pod_size=8, n_memory_nodes=2,
+                          memory_node_gb=4096.0, memory_node_gbps=40.0,
+                          interconnect="scalepool")
+    sched = Scheduler(inv)
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=2, global_batch_seqs=64)
+    for i in range(2):
+        sched.submit(PoolJob(f"offl-{i}", sim.MEGATRON, par, n_steps=5,
+                             tier2_bytes=256 * GB, tier2_bw=60 * GB))
+    res = sched.run()
+    recs = list(res.records.values())
+    assert all(r.finish_t is not None for r in recs)
+    # second job cannot start until the first releases its bandwidth
+    starts = sorted(r.start_t for r in recs)
+    finishes = sorted(r.finish_t for r in recs)
+    assert starts[1] >= finishes[0]
+
+
+def test_freelist_heap_semantics():
+    from repro.pool import FreeList
+    fl = FreeList(range(8))
+    assert fl.take(3) == (0, 1, 2)
+    fl.put((1,))
+    assert fl.take(2) == (1, 3)
+    assert len(fl) == 4 and fl.ids() == [4, 5, 6, 7]
+    with pytest.raises(AssertionError):
+        fl.put((4,))                     # double free
+    with pytest.raises(AssertionError):
+        fl.take(99)                      # over-take
+    clone = fl.clone()
+    clone.take(4)
+    assert fl.ids() == [4, 5, 6, 7]      # clone is independent
+
+
 def test_lease_mesh_shape_mirrors_topology():
     pool = smoke_pool()
     wide = pool.lease("wide", 12, model_parallel=2)   # spans 2 pods
@@ -283,7 +361,7 @@ def test_lease_serve_session(rng):
     from repro.runtime import serve as serve_rt
 
     pool = smoke_pool()
-    lease = pool.lease("serve", 4, tier2_gb=64, kv_spill=True)
+    lease = pool.lease("serve", 4, tier2_gb=64, kv_gb=8)
     cfg = SMOKE_ARCHS["qwen1.5-0.5b"]
     model = build_model(cfg)
     shape = ShapeConfig("serve_smoke", "decode", 32, 2)

@@ -178,15 +178,26 @@ def test_tiering_policy_traffic():
 
 
 def test_paged_kv_spill_fetch():
-    kv = tiering.PagedKV.create(n_layers=2, batch=2, max_seq=64, kv_heads=2,
-                                head_dim=4, page_size=16, hot_fraction=0.5)
-    assert kv.hot_pages == 2 and kv.cold_pages == 2
-    kv.hot["k"] = kv.hot["k"].at[:, :, 1].set(7.0)
-    kv2 = kv.spill(hot_slot=1, cold_slot=jnp.int32(0))
-    np.testing.assert_allclose(np.asarray(kv2.cold["k"][:, :, 0],
-                                          np.float32), 7.0)
-    kv3 = kv2.fetch(cold_slot=jnp.int32(0), hot_slot=0,
-                    logical_page=jnp.int32(3))
-    np.testing.assert_allclose(np.asarray(kv3.hot["k"][:, :, 0], np.float32),
-                               7.0)
-    assert int(kv3.hot_map[0, 0]) == 3
+    budget = tiering.KVBudget(tier1_pages=4, tier2_bytes=2048.0, page_size=16)
+    kv = tiering.PagedKV(budget, page_bytes=512.0)
+    kv.alloc("seq0", 2)
+    payload = {"k": jnp.full((2, 16, 2, 4), 7.0), "v": jnp.zeros((2, 16, 2, 4))}
+    host = {k: np.asarray(v) for k, v in payload.items()}
+    kv.spill("seq0", host)
+    assert not kv.is_hot("seq0") and kv.cold_bytes_used == 1024.0
+    back = kv.fetch("seq0")
+    np.testing.assert_array_equal(back["k"], np.asarray(payload["k"]))
+    assert kv.is_hot("seq0") and kv.cold_pages_used == 0
+    res = kv.residency()
+    assert res["spills"] == 1 and res["fetches"] == 1
+    assert res["tier1_pages_used"] == 2
+
+
+def test_kv_budget_pages_and_policy_view():
+    b = tiering.KVBudget(tier1_pages=8, tier2_bytes=1e6, page_size=64)
+    assert b.pages_for(1) == 1 and b.pages_for(64) == 1
+    assert b.pages_for(65) == 2
+    assert b.tier2_pages(page_bytes=1e5) == 10
+    pol = tiering.TieringPolicy(kv_budget=b)
+    assert pol.kv_spill                      # deprecated boolean view
+    assert not tiering.TieringPolicy().kv_spill
