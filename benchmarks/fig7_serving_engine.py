@@ -13,14 +13,21 @@ under four KV configurations:
     the trace backlogs and p95 explodes (requests whose lifetime exceeds
     the quota outright fail).
 ``paged_tier1``
-    Optimistic paging, still no tier-2: preemption under page pressure
+    Optimistic paging, still no tier-2: eviction under page pressure
     must drop KV and re-prefill (recompute churn).
 ``paged_tier2``
-    Optimistic paging with a lease-sized tier-2 byte budget: preempted
-    sequences are *swapped* over the capacity-oriented CXL fabric
-    (bulk, bit-exact) and resumed.
+    Optimistic paging with a lease-sized tier-2 byte budget: the
+    coldest *pages* of descheduled sequences are evicted over the
+    capacity-oriented CXL fabric (bulk, bit-exact) and fetched back
+    into whatever physical pages are free — sequences resume with
+    scattered, non-contiguous page tables the Pallas paged-attention
+    kernel gathers through.
 ``unbudgeted``
     Reference: tier-1 quota = full slot capacity (no pressure).
+
+Latency percentiles use nearest-rank indexing (``ceil(p*n) - 1``) and
+every event clock is attributed to the event's modeled completion time
+— the claim thresholds below were re-validated after both fixes.
 
 Event costs are modeled seconds priced at the FULL-SIZE architecture
 (weights-read-bound decode on HBM, capacity-fabric swap bandwidth), so

@@ -52,7 +52,25 @@ print(f"tiered run: {stats['completed']} done, "
 print("modeled latency:", latency_summary(hs))
 
 # ---------------------------------------------------------------------------
-# 3. the paper's Fig-7 story for this working set (analytic §5 model)
+# 3. paged KV under the hood: the engine owns a shared physical page
+#    pool (tier1_pages pages + a trash page) and a per-row page table
+#    the Pallas paged-attention kernel gathers through — a sequence
+#    needs neither contiguous physical pages nor full tier-1 residency.
+#    Under pressure the coldest *pages* are evicted to tier-2 and later
+#    fetched back into different physical pages; prefill pads prompts
+#    to power-of-two page buckets so the jit program count is bounded
+#    by the bucket list, not by distinct prompt lengths.
+# ---------------------------------------------------------------------------
+res = stats["kv"]
+print(f"\npage pool: {res['tier1_pages_used']}/{res['tier1_pages_quota']} "
+      f"pages hot, {res['spills']} page evictions / {res['fetches']} "
+      f"fetches over the capacity fabric, "
+      f"{res['partial_seqs']} partially-resident seqs right now")
+print(f"prefill buckets {stats['prefill_buckets']} -> "
+      f"{stats['prefill_compiles']} compiled prefill programs")
+
+# ---------------------------------------------------------------------------
+# 4. the paper's Fig-7 story for this working set (analytic §5 model)
 # ---------------------------------------------------------------------------
 ms_base = make_mem_system("baseline")
 ms_sp = make_mem_system("tiered")

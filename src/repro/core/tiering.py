@@ -20,7 +20,7 @@ The manager provides:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,26 +121,42 @@ def offload_state_shardings(state_shardings, policy: TieringPolicy):
 
 
 # ---------------------------------------------------------------------------
-# paged KV pool: budget-enforcing page table + tier-2 cold store
+# paged KV pool: physical page allocator + page-granular tier-2 cold store
 # ---------------------------------------------------------------------------
 
-class PagedKV:
-    """Budgeted paged KV pool (serving-side tiering, paper §5).
+@dataclasses.dataclass
+class _Page:
+    """One logical KV page of one sequence: hot (a physical page id in
+    the device pool) or cold (a host-side payload in the tier-2 store)."""
 
-    Tracks, per sequence (``rid``), how many fixed-size KV pages it holds
-    and in which tier, and enforces a ``KVBudget``: hot pages count
-    against ``budget.tier1_pages`` (accelerator HBM), spilled sequences
-    count against ``budget.tier2_bytes`` (the capacity pool).  Page
-    granularity keeps spill traffic bulk-friendly (the capacity-oriented
-    CXL carries large flits efficiently).
+    phys: Optional[int] = None      # physical pool page id; None = cold
+    payload: Any = None             # host pytree while cold
+
+    @property
+    def hot(self) -> bool:
+        return self.phys is not None
+
+
+class PagedKV:
+    """Physical paged KV pool (serving-side tiering, paper §5).
+
+    Owns the *allocation state* of a device-side page pool of
+    ``budget.tier1_pages`` physical pages (accelerator HBM, the coherent
+    tier-1): a free-page stack plus, per sequence (``rid``), the
+    logical→physical page mapping the decode kernel's page table is
+    built from.  Sequences need neither contiguous physical pages nor
+    full residency: individual pages can be evicted to the tier-2 cold
+    store (page-granular spill, counted against ``budget.tier2_bytes``)
+    and fetched back into *different* physical pages later.
 
     The cold store is HOST-side (numpy pytrees): paging decisions are
-    host bookkeeping, and the spill/fetch payloads are explicit
+    host bookkeeping, and the evict/fetch payloads are explicit
     device↔pool bulk copies — the paper's CXL.io (no-coherence) tier-2
     path.  The caller (``repro.serve.Engine``) owns the device arrays;
-    ``spill`` takes the host copy it made, ``fetch`` returns it for the
-    caller to write back.  Operations that would overrun either budget
-    raise ``KVBudgetExceeded`` and leave state untouched.
+    ``evict`` takes the host copy it made of one page, ``fetch``
+    allocates a fresh physical page and returns the payload for the
+    caller to scatter back.  Operations that would overrun either
+    budget raise ``KVBudgetExceeded`` and leave state untouched.
     """
 
     def __init__(self, budget: KVBudget, page_bytes: float):
@@ -148,99 +164,143 @@ class PagedKV:
             raise ValueError("PagedKV needs a concrete tier-1 page quota")
         self.budget = budget
         self.page_bytes = float(page_bytes)
-        self._hot: Dict[Any, int] = {}          # rid -> pages in tier-1
-        self._cold: Dict[Any, Tuple[int, Any]] = {}  # rid -> (pages, payload)
-        self.spills = 0
-        self.fetches = 0
+        self.num_pages = int(budget.tier1_pages)
+        # stack: low ids pop first, so fresh allocations after churn land
+        # on non-contiguous, reused pages (the layout the kernel must not
+        # care about)
+        self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self._seqs: Dict[Any, List[_Page]] = {}
+        self.spills = 0                 # pages evicted tier-1 -> tier-2
+        self.fetches = 0                # pages fetched tier-2 -> tier-1
 
     # ---- occupancy -------------------------------------------------------
     @property
-    def hot_pages_used(self) -> int:
-        return sum(self._hot.values())
+    def hot_free(self) -> int:
+        return len(self._free)
 
     @property
-    def hot_free(self) -> int:
-        return self.budget.tier1_pages - self.hot_pages_used
+    def hot_pages_used(self) -> int:
+        return self.num_pages - len(self._free)
 
     @property
     def cold_pages_used(self) -> int:
-        return sum(n for n, _ in self._cold.values())
+        return sum(1 for pages in self._seqs.values()
+                   for p in pages if not p.hot)
 
     @property
     def cold_bytes_used(self) -> float:
         return self.cold_pages_used * self.page_bytes
 
-    def is_hot(self, rid) -> bool:
-        return rid in self._hot
+    def tier2_free_pages(self) -> int:
+        """How many more pages the tier-2 byte budget can absorb."""
+        if self.page_bytes <= 0:
+            return 0
+        room = self.budget.tier2_bytes - self.cold_bytes_used
+        return max(0, int((room + 1e-6) // self.page_bytes))
 
     def holds(self, rid) -> bool:
-        return rid in self._hot or rid in self._cold
+        return rid in self._seqs
 
     def pages_of(self, rid) -> int:
-        if rid in self._hot:
-            return self._hot[rid]
-        return self._cold[rid][0]
+        """Total logical pages (hot + cold) held by ``rid``."""
+        return len(self._seqs[rid])
+
+    def hot_count(self, rid) -> int:
+        return sum(1 for p in self._seqs[rid] if p.hot)
+
+    def cold_logicals(self, rid) -> List[int]:
+        """Logical indices of ``rid``'s cold pages (ascending)."""
+        return [i for i, p in enumerate(self._seqs[rid]) if not p.hot]
+
+    def hot_logicals(self, rid) -> List[int]:
+        return [i for i, p in enumerate(self._seqs[rid]) if p.hot]
+
+    def is_fully_hot(self, rid) -> bool:
+        return all(p.hot for p in self._seqs[rid])
+
+    def page_table(self, rid) -> List[Optional[int]]:
+        """Logical -> physical ids (None where cold) — the row the engine
+        writes into the device page-table array."""
+        return [p.phys for p in self._seqs[rid]]
 
     # ---- lifecycle -------------------------------------------------------
-    def alloc(self, rid, n_pages: int) -> None:
-        """Admit ``rid`` with ``n_pages`` hot pages."""
-        if rid in self._hot or rid in self._cold:
+    def _take(self, n: int, what: str) -> List[int]:
+        if n > len(self._free):
+            raise KVBudgetExceeded(
+                f"{what}: {n} pages > {len(self._free)} free of "
+                f"{self.num_pages}-page tier-1 pool")
+        return [self._free.pop() for _ in range(n)]
+
+    def alloc(self, rid, n_pages: int) -> List[int]:
+        """Admit ``rid`` with ``n_pages`` hot pages; returns their
+        physical ids (in logical order)."""
+        if rid in self._seqs:
             raise KeyError(f"{rid!r} already holds KV pages")
-        if n_pages > self.hot_free:
-            raise KVBudgetExceeded(
-                f"{rid!r}: {n_pages} pages > {self.hot_free} free of "
-                f"{self.budget.tier1_pages}-page tier-1 quota")
-        self._hot[rid] = n_pages
+        phys = self._take(n_pages, repr(rid))
+        self._seqs[rid] = [_Page(phys=p) for p in phys]
+        return phys
 
-    def grow(self, rid, n_pages: int) -> None:
-        """Raise ``rid``'s hot page count (decode crossed a page boundary)."""
-        extra = n_pages - self._hot[rid]
+    def grow(self, rid, n_total: int) -> List[int]:
+        """Extend ``rid`` to ``n_total`` logical pages (decode crossed a
+        page boundary); returns the new physical ids."""
+        pages = self._seqs[rid]
+        extra = n_total - len(pages)
         if extra <= 0:
-            return
-        if extra > self.hot_free:
-            raise KVBudgetExceeded(
-                f"{rid!r}: growth to {n_pages} pages overruns the "
-                f"{self.budget.tier1_pages}-page tier-1 quota")
-        self._hot[rid] = n_pages
+            return []
+        phys = self._take(extra, f"{rid!r} growth to {n_total}")
+        pages.extend(_Page(phys=p) for p in phys)
+        return phys
 
-    def spill(self, rid, payload) -> None:
-        """Move ``rid`` hot → cold, storing the caller's host copy of its
-        cache region (an explicit tier-1 → tier-2 bulk transfer)."""
-        pages = self._hot[rid]
-        if (self.cold_pages_used + pages) * self.page_bytes \
+    def evict(self, rid, logical: int, payload) -> int:
+        """Spill one hot page to the tier-2 cold store; returns the freed
+        physical id.  ``payload`` is the caller's host copy of the page."""
+        page = self._seqs[rid][logical]
+        if not page.hot:
+            raise KeyError(f"{rid!r} page {logical} already cold")
+        if (self.cold_pages_used + 1) * self.page_bytes \
                 > self.budget.tier2_bytes + 1e-6:
             raise KVBudgetExceeded(
-                f"{rid!r}: spill of {pages} pages overruns the "
+                f"{rid!r}: evicting page {logical} overruns the "
                 f"{self.budget.tier2_bytes / 1e9:.2f}GB tier-2 budget")
-        del self._hot[rid]
-        self._cold[rid] = (pages, payload)
+        phys = page.phys
+        self._free.append(phys)
+        page.phys, page.payload = None, payload
         self.spills += 1
+        return phys
 
-    def fetch(self, rid):
-        """Move ``rid`` cold → hot; returns the stored payload for the
-        caller to copy back into device memory."""
-        pages, payload = self._cold[rid]
-        if pages > self.hot_free:
-            raise KVBudgetExceeded(
-                f"{rid!r}: fetch of {pages} pages overruns the tier-1 quota")
-        del self._cold[rid]
-        self._hot[rid] = pages
+    def fetch(self, rid, logical: int) -> Tuple[int, Any]:
+        """Bring one cold page back: allocates a fresh physical page
+        (almost surely a *different* id) and returns ``(phys, payload)``
+        for the caller to scatter into the device pool."""
+        page = self._seqs[rid][logical]
+        if page.hot:
+            raise KeyError(f"{rid!r} page {logical} already hot")
+        phys = self._take(1, f"{rid!r} fetch of page {logical}")[0]
+        payload = page.payload
+        page.phys, page.payload = phys, None
         self.fetches += 1
-        return payload
+        return phys, payload
 
     def free(self, rid) -> None:
-        self._hot.pop(rid, None)
-        self._cold.pop(rid, None)
+        """Release every page (hot ids back to the free stack, cold
+        payloads dropped)."""
+        for page in self._seqs.pop(rid, []):
+            if page.hot:
+                self._free.append(page.phys)
 
     def residency(self) -> Dict[str, float]:
-        """KV tier residency — the quantity ``Engine.stats()`` reports."""
+        """Page-pool residency — the quantity ``Engine.stats()`` reports."""
+        hot_seqs = sum(1 for pages in self._seqs.values()
+                       if all(p.hot for p in pages))
         return {
             "tier1_pages_used": self.hot_pages_used,
-            "tier1_pages_quota": self.budget.tier1_pages,
+            "tier1_pages_free": self.hot_free,
+            "tier1_pages_quota": self.num_pages,
             "tier2_bytes_used": self.cold_bytes_used,
             "tier2_bytes_budget": self.budget.tier2_bytes,
-            "hot_seqs": len(self._hot),
-            "cold_seqs": len(self._cold),
+            "seqs": len(self._seqs),
+            "hot_seqs": hot_seqs,
+            "partial_seqs": len(self._seqs) - hot_seqs,
             "spills": self.spills,
             "fetches": self.fetches,
         }

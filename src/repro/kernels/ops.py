@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import ssd_scan as _ssd
 
@@ -47,6 +48,21 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if pad_q:
         out = out[:, :, :Sq]
     return jnp.moveaxis(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("sliding_window",))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array, *,
+                    sliding_window: Optional[int] = None) -> jax.Array:
+    """Model layout: q (B,1,H,D) single decode token per sequence;
+    k/v pages (P,ps,KV,D); page_table (B,PMAX); lengths (B,) valid KV
+    tokens (including the just-written one) -> (B,1,H,D)."""
+    B, S, H, D = q.shape
+    assert S == 1, "paged attention is a decode (one-query) kernel"
+    out = _pa.paged_decode_attention(
+        q[:, 0], k_pages, v_pages, page_table, lengths,
+        sm_scale=1.0 / (D ** 0.5), sliding_window=sliding_window)
+    return out[:, None]
 
 
 rmsnorm = jax.jit(_rn.rmsnorm, static_argnames=("eps", "block_rows"))

@@ -1,0 +1,147 @@
+"""Paged decode-attention Pallas TPU kernel.
+
+Decode-time attention where each sequence's K/V lives in fixed-size
+pages scattered across a shared device-side page pool (the vLLM /
+PagedAttention layout, realized on the paper's tier-1 HBM pool): a
+per-sequence page table maps logical page ``i`` to a physical page id,
+and the kernel gathers K/V pages *through the table* — no contiguity
+and no per-sequence slab reservation.  This is the kernel that lets
+``repro.serve`` drop the whole-sequence-resident requirement.
+
+Layouts (kernel-native):
+  q            (B, H, D)        one query token per sequence
+  k/v pages    (P, ps, KV, D)   the shared pool; P physical pages of
+                                ``ps`` tokens each (pool row P-1 may be
+                                a scratch/trash page — the kernel never
+                                reads positions >= lengths[b])
+  page_table   (B, PMAX) int32  logical -> physical page ids; entries
+                                past a sequence's live pages must still
+                                be *valid* pool indices (point them at
+                                the trash page)
+  lengths      (B,) int32       valid KV tokens per sequence (0 for an
+                                idle row: output is all-zeros)
+  out          (B, H, D)
+
+Grid: (B, KV-heads, PMAX) with the page dimension sequential
+("arbitrary") — online-softmax state persists across pages in fp32
+VMEM scratch exactly like the flash kernel.  The page table and the
+lengths ride in as scalar-prefetch operands so the K/V BlockSpec index
+maps can resolve the physical page id before the body runs (one DMA
+per logical page, skipped pages cost a no-op body via ``pl.when``).
+
+GQA is native: the H query heads are blocked per KV head (group G =
+H // KV), so K/V is never replicated in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, sm_scale: float, page_size: int,
+            n_pages_max: int, sliding_window: Optional[int]):
+    b = pl.program_id(0)
+    j = pl.program_id(2)                       # logical page (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(j * page_size < length)           # page holds live tokens
+    def _update():
+        q = q_ref[0].astype(jnp.float32)       # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (ps, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                       # (G, ps)
+
+        pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        if sliding_window is not None:
+            # the (single) query sits at absolute position length - 1
+            mask &= pos > (length - 1 - sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                    # (G,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)            # fully-masked cols stay dead
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(j == n_pages_max - 1)
+    def _finish():
+        # length == 0 rows never update: l == 0 -> output exactly 0
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *,
+                           sm_scale: Optional[float] = None,
+                           sliding_window: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """q (B,H,D); k/v pages (P,ps,KV,D); page_table (B,PMAX) int32;
+    lengths (B,) int32 -> (B,H,D)."""
+    B, H, D = q.shape
+    P, ps, KV, _ = k_pages.shape
+    PMAX = page_table.shape[1]
+    assert H % KV == 0, (H, KV)
+    assert v_pages.shape == k_pages.shape
+    assert page_table.shape[0] == B and lengths.shape == (B,)
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _kernel, sm_scale=sm_scale, page_size=ps, n_pages_max=PMAX,
+        sliding_window=sliding_window)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # page_table, lengths
+        grid=(B, KV, PMAX),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, h, j, pt, ln: (b, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, h, j, pt, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

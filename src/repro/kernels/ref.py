@@ -34,6 +34,36 @@ def attention_ref(q, k, v, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                        sm_scale: Optional[float] = None,
+                        sliding_window: Optional[int] = None) -> jax.Array:
+    """Dense-gather oracle for the paged decode-attention kernel.
+
+    q: (B,H,D); k/v pages: (P,ps,KV,D); page_table: (B,PMAX) int32;
+    lengths: (B,) int32 -> (B,H,D), fp32 math.  Rows with length 0
+    return exact zeros (the kernel's idle-slot contract).
+    """
+    B, H, D = q.shape
+    P, ps, KV, _ = k_pages.shape
+    PMAX = page_table.shape[1]
+    G = H // KV
+    if sm_scale is None:
+        sm_scale = 1.0 / (D ** 0.5)
+    k = k_pages[page_table].reshape(B, PMAX * ps, KV, D)   # logical order
+    v = v_pages[page_table].reshape(B, PMAX * ps, KV, D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * sm_scale
+    pos = jnp.arange(PMAX * ps)[None, :]
+    mask = pos < lengths[:, None]
+    if sliding_window is not None:
+        mask &= pos > (lengths[:, None] - 1 - sliding_window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    out = jnp.where((lengths > 0)[:, None, None, None], out, 0.0)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)

@@ -66,7 +66,7 @@ def _engine_mode(args, cfg, model) -> int:
         engine = Engine.local(model, ecfg, budget=budget)
 
     if args.trace:
-        trace = load_trace(args.trace)
+        trace = load_trace(args.trace, vocab=cfg.vocab)
     else:
         trace = synthetic_trace(
             args.requests, mean_interarrival_s=args.interarrival,
@@ -175,6 +175,12 @@ def main(argv=None):
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
     if args.requests or args.trace:
+        if not model.supports_paged_kv:
+            print(f"error: the request-level engine serves paged-KV "
+                  f"families (dense/moe); {cfg.family!r} is not supported "
+                  f"yet — use the fixed-batch mode (--batch/--prompt/"
+                  f"--generate) instead", flush=True)
+            return 2
         return _engine_mode(args, cfg, model)
     return _legacy_batch_mode(args, cfg, model)
 

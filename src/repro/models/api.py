@@ -35,6 +35,19 @@ class Model:
     cache_axes: Callable[[], Any]
     prefill: Callable[..., Any]
     decode: Callable[..., Any]
+    # paged-KV serving surface (attention-KV families only; None for
+    # recurrent-state families whose O(1) cache has nothing to page):
+    #   prefill_at(params, batch, cache, last_pos) -> (logits, cache)
+    #     bucketed prefill — logits at the last *real* position of a
+    #     right-padded prompt
+    #   decode_paged(params, tokens, pools, page_table, lengths)
+    #     -> (logits, pools) — decode over a shared physical page pool
+    prefill_at: Optional[Callable[..., Any]] = None
+    decode_paged: Optional[Callable[..., Any]] = None
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        return self.decode_paged is not None
 
 
 def build_model(cfg: ModelConfig, *, moe_groups: int = 1) -> Model:
@@ -49,6 +62,9 @@ def build_model(cfg: ModelConfig, *, moe_groups: int = 1) -> Model:
             cache_axes=lambda: m.cache_axes(),
             prefill=lambda p, b, c: m.prefill(p, cfg, b, c),
             decode=lambda p, t, c, i: m.decode_step(p, cfg, t, c, i),
+            prefill_at=lambda p, b, c, lp: m.prefill_at(p, cfg, b, c, lp),
+            decode_paged=lambda p, t, pl, pt, ln: m.decode_paged(
+                p, cfg, t, pl, pt, ln),
         )
     if cfg.family == "moe":
         m = moe
@@ -62,6 +78,10 @@ def build_model(cfg: ModelConfig, *, moe_groups: int = 1) -> Model:
             prefill=lambda p, b, c: m.prefill(p, cfg, b, c, groups=moe_groups),
             decode=lambda p, t, c, i: m.decode_step(p, cfg, t, c, i,
                                                     groups=moe_groups),
+            prefill_at=lambda p, b, c, lp: m.prefill_at(p, cfg, b, c, lp,
+                                                        groups=moe_groups),
+            decode_paged=lambda p, t, pl, pt, ln: m.decode_paged(
+                p, cfg, t, pl, pt, ln, groups=moe_groups),
         )
     if cfg.family == "ssm":
         m = mamba2

@@ -201,6 +201,31 @@ def attention_axes(cfg: AttentionConfig) -> Dict[str, Any]:
     return p
 
 
+def project_qkv(params, x: jax.Array, cfg: AttentionConfig, *,
+                positions: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared QKV prologue for the dense and paged attention paths:
+    projections (+ optional bias), head reshape, optional qk-norm,
+    RoPE at ``positions``.  q: (B,S,H,hd); k, v: (B,S,KV,hd)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
 def attention_fwd(params, x: jax.Array, cfg: AttentionConfig, *,
                   positions: jax.Array,
                   kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
@@ -216,28 +241,22 @@ def attention_fwd(params, x: jax.Array, cfg: AttentionConfig, *,
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
 
-    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
-    if cfg.qkv_bias:
-        q = q + params["bq"]
-    q = q.reshape(B, S, H, hd)
-
     if kv_override is not None:
+        # cross-attention: q-only projection, K/V precomputed elsewhere
+        q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+        if cfg.qkv_bias:
+            q = q + params["bq"]
+        q = q.reshape(B, S, H, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        if cfg.use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
         k, v = kv_override
         new_cache = None
         q_offset = 0
         kv_len = None
     else:
-        k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
-        v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
-        if cfg.qkv_bias:
-            k = k + params["bk"]
-            v = v + params["bv"]
-        k = k.reshape(B, S, KV, hd)
-        v = v.reshape(B, S, KV, hd)
-        if cfg.qk_norm:
-            k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
-        if cfg.use_rope:
-            k = apply_rope(k, positions, cfg.rope_theta)
+        q, k, v = project_qkv(params, x, cfg, positions=positions)
         if kv_cache is not None:
             ck, cv = kv_cache
             ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
@@ -251,11 +270,6 @@ def attention_fwd(params, x: jax.Array, cfg: AttentionConfig, *,
             q_offset = 0
             kv_len = None
 
-    if cfg.qk_norm:
-        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
-    if cfg.use_rope:
-        q = apply_rope(q, positions, cfg.rope_theta)
-
     q = constrain(q, "batch", "seq_attn", "heads", "head_dim")
     k = constrain(k, "batch", "seq_kv", "kv_heads", "head_dim")
     v = constrain(v, "batch", "seq_kv", "kv_heads", "head_dim")
@@ -265,6 +279,45 @@ def attention_fwd(params, x: jax.Array, cfg: AttentionConfig, *,
     out = constrain(out, "batch", "seq_attn", "heads", "head_dim")
     out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
     return out, new_cache
+
+
+def attention_fwd_paged(params, x: jax.Array, cfg: AttentionConfig, *,
+                        positions: jax.Array,
+                        k_pages: jax.Array, v_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array,
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode attention over a *paged* KV pool (one layer's pages).
+
+    x: (B, 1, d) — one new token per sequence.  k/v pages: (P, ps, KV, hd),
+    the shared physical page pool for this layer.  page_table: (B, PMAX)
+    int32 logical->physical ids.  lengths: (B,) current KV length per
+    sequence — also the write position of this token (idle rows carry
+    length 0 and a page table full of trash-page ids; their writes land
+    in the trash page and their output is ignored by the caller).
+
+    The new token's K/V is scattered into each row's current page, then
+    the Pallas kernel gathers the whole prefix through the page table.
+    Returns (out (B,1,d), k_pages, v_pages).
+    """
+    from repro.kernels.ops import paged_attention
+
+    B, S, _ = x.shape
+    assert S == 1, "paged attention serves decode (one token per step)"
+    H, hd = cfg.n_heads, cfg.head_dim
+    ps = k_pages.shape[1]
+
+    q, k, v = project_qkv(params, x, cfg, positions=positions)
+
+    # scatter this token's K/V into each row's current physical page
+    phys = page_table[jnp.arange(B), lengths // ps]        # (B,)
+    off = lengths % ps
+    k_pages = k_pages.at[phys, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v[:, 0].astype(v_pages.dtype))
+
+    out = paged_attention(q, k_pages, v_pages, page_table, lengths + 1,
+                          sliding_window=cfg.sliding_window)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), params["wo"])
+    return out, k_pages, v_pages
 
 
 # ---------------------------------------------------------------------------

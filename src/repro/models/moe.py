@@ -251,6 +251,17 @@ def prefill(params, cfg: ModelConfig, batch, cache, *, groups: int = 1):
     return logits, new_cache
 
 
+def prefill_at(params, cfg: ModelConfig, batch, cache, last_pos, *,
+               groups: int = 1):
+    """Bucketed prefill: logits taken at ``last_pos`` (the last real
+    position of a right-padded prompt) instead of the padded end."""
+    hidden, new_cache, _ = forward(params, cfg, batch, cache=cache,
+                                   cache_index=jnp.int32(0), remat=True,
+                                   groups=groups)
+    h_last = lax.dynamic_slice_in_dim(hidden, last_pos, 1, axis=1)
+    return L.unembed(params["embedding"], h_last, cfg.vocab), new_cache
+
+
 def decode_step(params, cfg: ModelConfig, tokens, cache, cache_index, *,
                 groups: int = 1):
     hidden, new_cache, _ = forward(params, cfg, {"tokens": tokens},
@@ -258,3 +269,29 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, cache_index, *,
                                    groups=groups)
     logits = L.unembed(params["embedding"], hidden, cfg.vocab)
     return logits, new_cache
+
+
+def decode_paged(params, cfg: ModelConfig, tokens, pools, page_table,
+                 lengths, *, groups: int = 1):
+    """One-token decode over the shared paged KV pool (see
+    ``transformer.decode_paged``); MoE blocks, same page mechanics."""
+    params = T.cast_params(params, cfg)
+    x = T._embed_inputs(params, cfg, {"tokens": tokens})
+    positions = lengths[:, None].astype(jnp.int32)
+
+    def body(x, scanned):
+        layer_params, kp, vp = scanned
+        h = L.apply_norm(x, layer_params["norm1"], cfg.norm_type)
+        attn_out, kp, vp = L.attention_fwd_paged(
+            layer_params["attn"], h, T.attn_config(cfg), positions=positions,
+            k_pages=kp, v_pages=vp, page_table=page_table, lengths=lengths)
+        x = x + attn_out
+        h2 = L.apply_norm(x, layer_params["norm2"], cfg.norm_type)
+        moe_out, _ = moe_mlp_fwd(layer_params["moe"], h2, cfg, groups=groups)
+        x = x + moe_out
+        return x, (kp, vp)
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
+                                     pools["v"]), unroll=scan_unroll())
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return L.unembed(params["embedding"], x, cfg.vocab), {"k": nk, "v": nv}

@@ -87,6 +87,27 @@ def block_fwd(params, x: jax.Array, cfg: ModelConfig, *,
     return x, new_cache
 
 
+def block_fwd_paged(params, x: jax.Array, cfg: ModelConfig, *,
+                    positions: jax.Array, k_pages: jax.Array,
+                    v_pages: jax.Array, page_table: jax.Array,
+                    lengths: jax.Array):
+    """``block_fwd`` for decode over a paged KV pool (one token/row)."""
+    acfg = attn_config(cfg)
+    h = L.apply_norm(x, params["norm1"], cfg.norm_type)
+    attn_out, k_pages, v_pages = L.attention_fwd_paged(
+        params["attn"], h, acfg, positions=positions,
+        k_pages=k_pages, v_pages=v_pages,
+        page_table=page_table, lengths=lengths)
+    if cfg.parallel_block:
+        mlp_out = L.mlp_fwd(params["mlp"], h, mlp_config(cfg))
+        x = x + attn_out + mlp_out
+    else:
+        x = x + attn_out
+        h2 = L.apply_norm(x, params["norm2"], cfg.norm_type)
+        x = x + L.mlp_fwd(params["mlp"], h2, mlp_config(cfg))
+    return x, k_pages, v_pages
+
+
 # ---------------------------------------------------------------------------
 # full model
 # ---------------------------------------------------------------------------
@@ -211,6 +232,21 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     return logits, new_cache
 
 
+def prefill_at(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               cache: Dict[str, jax.Array], last_pos: jax.Array,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Bucketed prefill: the prompt is right-padded to a bucket length,
+    so the true next-token distribution sits at ``last_pos`` (the last
+    *real* position), not at the padded end.  Causality keeps real
+    positions blind to the trailing pads; pad K/V beyond ``last_pos``
+    is garbage the consumer must mask (the paged engine never copies
+    or attends past the real prompt length)."""
+    hidden, new_cache = forward(params, cfg, batch, cache=cache,
+                                cache_index=jnp.int32(0), remat=True)
+    h_last = lax.dynamic_slice_in_dim(hidden, last_pos, 1, axis=1)
+    return logits_fn(params, cfg, h_last), new_cache
+
+
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Dict[str, jax.Array], cache_index: jax.Array,
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
@@ -219,3 +255,33 @@ def decode_step(params, cfg: ModelConfig, tokens: jax.Array,
                                 cache=cache, cache_index=cache_index)
     logits = logits_fn(params, cfg, hidden)
     return logits, new_cache
+
+
+def decode_paged(params, cfg: ModelConfig, tokens: jax.Array,
+                 pools: Dict[str, jax.Array], page_table: jax.Array,
+                 lengths: jax.Array,
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode over the shared paged KV pool.
+
+    tokens: (B, 1); pools: {"k","v"} each (L, P, ps, KV, hd) — the
+    device-side physical page pool shared by every sequence;
+    page_table: (B, PMAX) int32 logical->physical; lengths: (B,) int32
+    current KV length per row (idle rows: 0 + trash-page table entries).
+    Returns (logits (B, 1, V), updated pools).
+    """
+    params = cast_params(params, cfg)
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    positions = lengths[:, None].astype(jnp.int32)          # (B, 1)
+
+    def body(x, scanned):
+        layer_params, kp, vp = scanned
+        x, kp, vp = block_fwd_paged(layer_params, x, cfg,
+                                    positions=positions,
+                                    k_pages=kp, v_pages=vp,
+                                    page_table=page_table, lengths=lengths)
+        return x, (kp, vp)
+
+    x, (nk, nv) = lax.scan(body, x, (params["layers"], pools["k"],
+                                     pools["v"]), unroll=scan_unroll())
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type)
+    return logits_fn(params, cfg, x), {"k": nk, "v": nv}

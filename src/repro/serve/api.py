@@ -22,7 +22,9 @@ GB = 1e9
 class RequestStatus(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
-    SWAPPED = "swapped"        # KV parked in the tier-2 capacity pool
+    SWAPPED = "swapped"        # descheduled under page pressure; its KV
+                               # pages are evictable (coldest-first) to
+                               # the tier-2 capacity pool
     DONE = "done"
     FAILED_OOM = "failed_oom"  # can never fit the tier-1 page quota
 
@@ -59,8 +61,13 @@ class RequestHandle:
     submit_clock: float = 0.0
     first_token_clock: Optional[float] = None
     done_clock: Optional[float] = None
-    swaps: int = 0                     # tier-2 round trips
-    recomputes: int = 0                # tier-1-only preemptions (re-prefill)
+    preempts: int = 0                  # descheduled under page pressure
+                                       # (costless until pages actually move)
+    swaps: int = 0                     # tier-2 spill episodes: batches of
+                                       # this request's pages that really
+                                       # rode the capacity fabric
+    recomputes: int = 0                # KV dropped + re-prefilled (no
+                                       # tier-2 headroom to spill into)
 
     @property
     def done(self) -> bool:

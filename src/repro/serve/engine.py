@@ -1,28 +1,49 @@
-"""Request-level continuous-batching engine over a budgeted paged KV pool.
+"""Request-level continuous-batching engine over a *physically paged*,
+budgeted KV pool.
 
 The serving counterpart of ``runtime.train``: one ``Engine`` owns a
-fixed array of decode slots (a stacked per-slot KV cache), admits queued
-requests FIFO into free slots (prefill), advances every running slot one
-token per ``step()`` (a single vmapped, jitted decode over the slot
-axis), recycles slots on completion, and enforces a ``KVBudget``:
+shared device-side KV **page pool** (``KVBudget.tier1_pages`` physical
+pages of ``page_size`` tokens, plus one trash page that absorbs idle
+rows' writes), a slot array of decode rows, and a per-row page table
+(``int32[max_slots, pages_per_slot]``) mapping each sequence's logical
+pages onto arbitrary physical pages.  Decode is ONE batched call into
+the model's paged path: the Pallas paged-attention kernel gathers K/V
+through the page table, so a sequence needs neither contiguous pages
+nor a reserved slab — the PR-2 contiguous-slot residency ceiling is
+gone.
 
-* every running slot's pages live in tier-1 (HBM) — decode attends the
-  whole prefix, so residency is a hard requirement;
-* when decode growth overruns the tier-1 page quota, the newest-admitted
-  slot is preempted: with a tier-2 byte budget its cache region is
-  *swapped* to the capacity pool (bit-exact, bulk CXL.io traffic) and
-  swapped back when pages free up; with no tier-2 budget its KV is
-  dropped and the request re-queued for full re-prefill (the recompute
+Scheduling per ``step()``:
+
+* pressure relief: if the running rows' next-token page demand exceeds
+  the pool, the newest-admitted rows are *paused* (descheduled — their
+  pages stay hot until somebody needs them: lazy, page-granular
+  eviction).  Growth allocations then evict the **coldest pages**
+  (least-recently-scheduled paused sequence first; within it the
+  oldest-written, lowest-logical pages first) to the tier-2 cold store
+  over the capacity fabric — or, with no tier-2 byte headroom, drop the
+  victim's KV entirely and requeue it for re-prefill (the recompute
   storm the paper's Fig. 7 tier-2 relief avoids);
-* a request whose lifetime page demand can never fit the quota fails
-  deterministically at admission (``FAILED_OOM``).
+* swap-in: paused sequences re-enter in pause order (oldest first —
+  insertion-ordered, no re-sorting); only their *cold* pages ride the
+  fabric back, into whatever physical pages are free — resuming a
+  sequence whose pages were never evicted costs nothing;
+* admission: FIFO prefill, padded to a power-of-two page-aligned
+  *bucket* (one XLA program per bucket, not per prompt length) with the
+  next-token logits read at the last real position;
+* decode: every running row advances one token in a single jitted call.
 
-Each slot is an independent batch=1 program under ``jax.vmap``, so a
-request's tokens depend only on its own prompt — output is identical
-for any arrival interleaving and for lease-backed vs local construction
-(the engine's determinism contract, enforced by tests).
+Every event clock is attributed to the event's **modeled completion
+time** (``engine.clock`` at step start + modeled seconds elapsed within
+the step), so TTFT/latency are consistent across prefill, decode, swap
+and OOM paths.
 
-Time is *modeled*: a ``ServeCostModel`` prices prefill/decode/swap
+Each row is an independent batch entry of one fused program and the
+page table fully determines what it attends to, so output is identical
+for any arrival interleaving, any physical page layout, and for
+lease-backed vs local construction (the engine's determinism contract,
+enforced by tests).
+
+Time is *modeled*: a ``ServeCostModel`` prices prefill/decode/page-swap
 events from the paper's fabric constants, so latency distributions are
 hardware-derived even when the host is a CPU smoke run.
 """
@@ -32,7 +53,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,16 +72,18 @@ def _dtype(d):
         "float16": jnp.float16}[d]
 
 
-@dataclasses.dataclass
-class _SlotState:
+@dataclasses.dataclass(eq=False)        # identity semantics: these live in
+class _SlotState:                        # queues/sets and are never "equal"
     """Host-side bookkeeping for one in-flight request."""
 
     handle: RequestHandle
-    index: int = 0                 # next KV write position
+    index: int = 0                 # next KV write position (= current length)
     cur_tok: int = 0               # last emitted token (decode input)
-    slot: Optional[int] = None
-    admit_seq: int = -1            # admission order (preemption victims
-                                   # are chosen newest-first)
+    slot: Optional[int] = None     # row in the slot array, None when off
+    admit_seq: int = -1            # admission order (pressure pauses
+                                   # newest-admitted rows first)
+    last_sched: int = -1           # step() count of the last decode — the
+                                   # page-coldness signal for eviction
 
     @property
     def rid(self) -> int:
@@ -93,6 +116,13 @@ class Engine:
             raise NotImplementedError(
                 "Engine drives decoder-style models; encdec serving still "
                 "goes through runtime.serve step factories")
+        if not model.supports_paged_kv:
+            raise NotImplementedError(
+                f"Engine serves through the paged decode kernel, which "
+                f"{model.cfg.family!r} does not implement yet (ssm keeps "
+                f"an O(1) recurrent state with nothing to page; hybrid "
+                f"interleaves recurrent state with its KV layers) — use "
+                f"the runtime.serve step factories for this family")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -104,6 +134,12 @@ class Engine:
         self._cache_dtype = dt
         slot_shapes = jax.eval_shape(
             lambda: model.init_cache(1, cfg.max_seq, dtype=dt))
+        for leaf in jax.tree.leaves(slot_shapes):
+            if len(leaf.shape) < 3 or leaf.shape[1] != 1 \
+                    or leaf.shape[2] != cfg.max_seq:
+                raise NotImplementedError(
+                    f"paged serving expects (layers, batch=1, seq, ...) "
+                    f"KV cache leaves, got {leaf.shape}")
         slot_bytes = sum(l.size * l.dtype.itemsize
                          for l in jax.tree.leaves(slot_shapes))
         page_bytes = slot_bytes * cfg.page_size / max(1, cfg.max_seq)
@@ -117,16 +153,25 @@ class Engine:
                                page_size=cfg.page_size)
         self.kv = PagedKV(self.budget, page_bytes)
 
-        # stacked per-slot cache: leading axis = slot, each slot batch=1
-        self._cache = jax.tree.map(
-            lambda l: jnp.zeros((cfg.max_slots,) + l.shape, l.dtype),
+        # shared physical page pool: leaf (layers, num_pages + 1, page,
+        # ...).  The extra page (id == num_pages) is the TRASH page: idle
+        # rows' page tables point at it, so their decode writes land
+        # somewhere harmless and their gathers stay in bounds.
+        self._trash = self.kv.num_pages
+        self._pool = jax.tree.map(
+            lambda l: jnp.zeros(
+                (l.shape[0], self.kv.num_pages + 1, cfg.page_size)
+                + l.shape[3:], l.dtype),
             slot_shapes)
+        self._table = np.full((cfg.max_slots, cfg.pages_per_slot),
+                              self._trash, np.int32)
+        self._lengths = np.zeros(cfg.max_slots, np.int32)
+        self._slot_tok = np.zeros(cfg.max_slots, np.int32)
         self._slots: List[Optional[_SlotState]] = [None] * cfg.max_slots
-        self._slot_index = [0] * cfg.max_slots   # stale values are harmless
-        self._slot_tok = [0] * cfg.max_slots     # (masked / overwritten)
 
-        self._queue: deque = deque()     # _SlotState, FIFO (+preempted front)
-        self._swapped: List[_SlotState] = []
+        self._queue: deque = deque()     # _SlotState, FIFO (+recompute front)
+        self._paused: deque = deque()    # insertion-ordered: pause order IS
+                                         # the resume order (oldest first)
         self.handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._admit_seq = 0
@@ -134,15 +179,32 @@ class Engine:
         self.clock = 0.0
         self.steps = 0
         self._decoded_tokens = 0
-        self._prefill_fn = self._scoped(model.prefill)
 
-        def slot_decode(params, tok, cache, index):
-            logits, new_cache = model.decode(params, tok, cache, index)
+        # prefill buckets: page-aligned powers of two capped at the slot
+        # capacity — the jit program count is bounded by len(buckets),
+        # not by the number of distinct prompt lengths in the trace
+        cap = cfg.pages_per_slot * cfg.page_size
+        self._buckets: List[int] = []
+        b = cfg.page_size
+        while b < cap:
+            self._buckets.append(b)
+            b *= 2
+        self._buckets.append(cap)
+        self._buckets_used: set = set()
+
+        self._prefill_jit = jax.jit(
+            lambda p, batch, cache, last: model.prefill_at(
+                p, batch, cache, last))
+        self._prefill_fn = self._scoped(self._prefill_jit)
+
+        def paged_decode(params, toks, pool, table, lengths):
+            logits, new_pool = model.decode_paged(params, toks, pool,
+                                                  table, lengths)
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt[:, None], new_cache
+            return nxt[:, None], new_pool
 
-        self._decode_fn = self._scoped(
-            jax.vmap(slot_decode, in_axes=(None, 0, 0, 0)))
+        self._decode_jit = jax.jit(paged_decode)
+        self._decode_fn = self._scoped(self._decode_jit)
 
     # ---- construction ----------------------------------------------------
     @classmethod
@@ -183,9 +245,7 @@ class Engine:
         return cls(model, params, cfg, budget=budget, cost_model=cost_model,
                    mesh=mesh, rules=rules)
 
-    def _scoped(self, fn):
-        jitted = jax.jit(fn)
-
+    def _scoped(self, jitted):
         def call(*args):
             with contextlib.ExitStack() as stack:
                 if self.mesh is not None:
@@ -198,11 +258,23 @@ class Engine:
 
     # ---- client API ------------------------------------------------------
     def submit(self, request: Request) -> RequestHandle:
-        """Enqueue a request (deterministic FIFO admission order)."""
+        """Enqueue a request (deterministic FIFO admission order).
+
+        Token ids are validated against the model vocab here: JAX's
+        out-of-bounds gather semantics would otherwise *clamp* a bad id
+        to the last embedding row and serve a silently-wrong completion.
+        """
         if request.prompt_len + request.max_new_tokens > self.cfg.max_seq:
             raise ValueError(
                 f"prompt {request.prompt_len} + max_new "
                 f"{request.max_new_tokens} exceeds max_seq {self.cfg.max_seq}")
+        vocab = self.model.cfg.vocab
+        bad = [t for t in request.prompt_tokens if not 0 <= t < vocab]
+        if bad:
+            raise ValueError(
+                f"prompt token id {bad[0]} outside the model vocab "
+                f"[0, {vocab}) — JAX would clamp it to a wrong embedding "
+                f"instead of failing")
         rid = self._next_rid
         self._next_rid += 1
         handle = RequestHandle(rid=rid, request=request,
@@ -214,7 +286,7 @@ class Engine:
 
     @property
     def idle(self) -> bool:
-        return (not self._queue and not self._swapped
+        return (not self._queue and not self._paused
                 and all(s is None for s in self._slots))
 
     def advance_clock(self, t: float) -> None:
@@ -230,13 +302,15 @@ class Engine:
 
     # ---- the engine loop -------------------------------------------------
     def step(self) -> float:
-        """One scheduling round: relieve KV pressure, swap in, admit,
-        decode every running slot one token.  Returns modeled seconds."""
+        """One scheduling round: relieve page pressure, swap in, admit,
+        decode every running row one token.  Returns modeled seconds.
+        Sub-phases receive the seconds already elapsed *within* this
+        step so every event clock lands on the event's modeled time."""
         dt = 0.0
-        dt += self._relieve_pressure()
-        dt += self._swap_in()
-        dt += self._admit()
-        dt += self._decode_once()
+        dt += self._relieve_pressure(dt)
+        dt += self._swap_in(dt)
+        dt += self._admit(dt)
+        dt += self._decode_once(dt)
         self.clock += dt
         self.steps += 1
         return dt
@@ -259,85 +333,171 @@ class Engine:
             return self.budget.pages_for(st.target_len)
         return self.budget.pages_for(st.index + 1)
 
-    def _relieve_pressure(self) -> float:
-        """Preempt newest-admitted slots until every remaining running
-        slot can write its next token within the tier-1 quota."""
+    def _bucket_len(self, plen: int) -> int:
+        for b in self._buckets:
+            if b >= plen:
+                return b
+        raise ValueError(f"prompt of {plen} exceeds slot capacity "
+                         f"{self._buckets[-1]}")
+
+    def prefill_compiles(self) -> int:
+        """Compiled prefill program count (the CI guard asserts this
+        stays <= len(buckets) regardless of the trace's prompt lengths).
+        Without jit cache introspection this is only a lower bound (the
+        buckets actually requested) — the guard test skips rather than
+        pass vacuously in that case."""
+        if hasattr(self._prefill_jit, "_cache_size"):
+            return self._prefill_jit._cache_size()
+        return len(self._buckets_used)  # pragma: no cover
+
+    # ---- pressure relief / paging ----------------------------------------
+    def _relieve_pressure(self, elapsed: float) -> float:
+        """Deschedule newest-admitted rows until the remaining running
+        rows' next-token demand fits the pool, then allocate this step's
+        growth pages — evicting the coldest paused pages as needed."""
         dt = 0.0
         running = self._running()
         while running:
             demand = sum(self._pages_next(s) for s in running)
-            if demand <= self.budget.tier1_pages:
+            if demand <= self.kv.num_pages:
                 break
-            victim = running.pop()          # newest admission
-            dt += self._preempt(victim)
+            self._pause(running.pop())          # newest admission
         for st in running:
-            self.kv.grow(st.rid, self._pages_next(st))
+            want = self._pages_next(st)
+            have = self.kv.pages_of(st.rid)
+            if want > have:
+                dt += self._make_room(want - have)
+                new_phys = self.kv.grow(st.rid, want)
+                for lp, phys in zip(range(have, want), new_phys):
+                    self._table[st.slot, lp] = phys
         return dt
 
-    def _preempt(self, st: _SlotState) -> float:
-        """Swap to tier-2 when the byte budget allows, else drop + requeue
-        for recompute (the tier-1-only failure mode)."""
+    def _pause(self, st: _SlotState) -> None:
+        """Deschedule a running row.  Costless: its pages STAY hot until
+        an allocation actually needs them (lazy eviction) — pausing and
+        resuming without intervening pressure moves zero bytes."""
         slot = st.slot
-        pages = self.kv.pages_of(st.rid)
-        dt = 0.0
-        spilled = False
-        if self.budget.tier2_bytes > 0:     # skip the copy when spill-less
-            payload = jax.tree.map(lambda l: np.asarray(l[slot]), self._cache)
-            try:
-                self.kv.spill(st.rid, payload)
-                spilled = True
-            except KVBudgetExceeded:
-                pass                        # tier-2 full: fall back to drop
-        if spilled:
-            st.handle.status = RequestStatus.SWAPPED
-            st.handle.swaps += 1
-            self._swapped.append(st)
-            self._swapped.sort(key=lambda s: s.rid)
-            dt = self.cost.swap_s(pages * self.kv.page_bytes)
-        else:
-            self.kv.free(st.rid)
-            st.handle.status = RequestStatus.QUEUED
-            st.handle.recomputes += 1
-            st.index = 0
-            self._queue.appendleft(st)
-        # zero the region so any bookkeeping bug is observable, not silent
-        self._cache = jax.tree.map(lambda l: l.at[slot].set(0), self._cache)
+        self._table[slot, :] = self._trash
+        self._lengths[slot] = 0
         self._slots[slot] = None
         st.slot = None
-        return dt
+        st.handle.status = RequestStatus.SWAPPED
+        st.handle.preempts += 1     # swaps counts actual tier-2 traffic,
+                                    # charged at eviction time
+        self._paused.append(st)     # insertion order == pause order; the
+                                    # resume policy pops from the front
 
-    def _swap_in(self) -> float:
-        """Oldest swapped requests re-enter free slots before any fresh
-        admission (they hold tier-2 bytes the pool wants back)."""
+    def _make_room(self, n_pages: int, protect: Sequence[_SlotState] = ()
+                   ) -> float:
+        """Free physical pages by evicting the coldest paused pages to
+        tier-2 (or dropping victims for recompute when the byte budget
+        is exhausted).  Coldness: least-recently-scheduled sequence
+        first (admission order breaking ties); within a victim, the
+        oldest-written (lowest-logical) pages go first."""
         dt = 0.0
-        while self._swapped:
-            st = self._swapped[0]
-            slot = self._free_slot()
-            if slot is None or self._pages_next(st) > self.kv.hot_free:
-                break
-            self._swapped.pop(0)
-            payload = self.kv.fetch(st.rid)
-            # reserve the next-token page now (the admission check above
-            # sized against it) so a same-step admission can't steal it
-            self.kv.grow(st.rid, self._pages_next(st))
-            self._cache = jax.tree.map(
-                lambda l, h: l.at[slot].set(jnp.asarray(h, l.dtype)),
-                self._cache, payload)
-            self._place(st, slot)
-            dt += self.cost.swap_s(self.kv.pages_of(st.rid)
-                                   * self.kv.page_bytes)
+        while self.kv.hot_free < n_pages:
+            victims = [s for s in self._paused
+                       if s not in protect and self.kv.hot_count(s.rid) > 0]
+            if not victims:
+                break               # nothing evictable; caller re-checks
+            victim = min(victims, key=lambda s: (s.last_sched, s.admit_seq))
+            dt += self._evict_or_drop(victim, n_pages - self.kv.hot_free)
         return dt
 
-    def _admit(self) -> float:
+    def _evict_or_drop(self, st: _SlotState, need: int) -> float:
+        hot = self.kv.hot_logicals(st.rid)
+        k = min(need, len(hot), self.kv.tier2_free_pages())
+        if k <= 0:
+            # no tier-2 headroom (or no tier-2 budget at all): page-
+            # granular spill is impossible, and a partial prefix is
+            # useless for recompute — drop the whole sequence's KV and
+            # requeue it for re-prefill
+            self._drop_for_recompute(st)
+            return 0.0
+        table = self.kv.page_table(st.rid)
+        chosen = hot[:k]
+        idx = jnp.asarray(np.asarray([table[lp] for lp in chosen], np.int32))
+        gathered = jax.tree.map(lambda l: np.asarray(l[:, idx]), self._pool)
+        for i, lp in enumerate(chosen):
+            self.kv.evict(st.rid, lp,
+                          jax.tree.map(lambda g, i=i: g[:, i], gathered))
+        st.handle.swaps += 1        # one spill episode: k pages, one bulk
+                                    # transfer over the capacity fabric
+        return self.cost.swap_s(k * self.kv.page_bytes)
+
+    def _drop_for_recompute(self, st: _SlotState) -> None:
+        self.kv.free(st.rid)
+        st.index = 0
+        st.handle.status = RequestStatus.QUEUED
+        st.handle.recomputes += 1
+        self._paused.remove(st)
+        self._queue.appendleft(st)  # ahead of fresh arrivals (it already
+                                    # held a slot once; FIFO fairness)
+
+    def _swap_in(self, elapsed: float) -> float:
+        """Paused sequences re-enter free rows in pause order (oldest
+        paused first — they may hold tier-2 bytes the pool wants back).
+        Only their COLD pages ride the fabric; still-hot pages never
+        moved.  When nothing is running, liveness demands progress: the
+        head of the pause queue may evict newer-paused pages to fit."""
+        dt = 0.0
+        while self._paused:
+            st = self._paused[0]
+            slot = self._free_slot()
+            if slot is None:
+                break
+            want = self._pages_next(st)
+            missing = (len(self.kv.cold_logicals(st.rid))
+                       + max(0, want - self.kv.pages_of(st.rid)))
+            if missing > self.kv.hot_free:
+                if any(s is not None for s in self._slots):
+                    break           # decode will free pages; wait
+                dt += self._make_room(missing, protect=(st,))
+                if missing > self.kv.hot_free:
+                    break
+            self._paused.popleft()
+            dt += self._resume_into(st, slot, want)
+        return dt
+
+    def _resume_into(self, st: _SlotState, slot: int, want: int) -> float:
+        dt = 0.0
+        cold = self.kv.cold_logicals(st.rid)
+        if cold:
+            fetched = [self.kv.fetch(st.rid, lp) for lp in cold]
+            idx = jnp.asarray(np.asarray([p for p, _ in fetched], np.int32))
+
+            def put(pool_leaf, *pages):     # one batched scatter, not one
+                stacked = jnp.stack(         # whole-pool copy per page
+                    [jnp.asarray(pg, pool_leaf.dtype) for pg in pages],
+                    axis=1)
+                return pool_leaf.at[:, idx].set(stacked)
+
+            self._pool = jax.tree.map(put, self._pool,
+                                      *[pl for _, pl in fetched])
+            dt = self.cost.swap_s(len(cold) * self.kv.page_bytes)
+        self.kv.grow(st.rid, want)
+        for lp, phys in enumerate(self.kv.page_table(st.rid)):
+            self._table[slot, lp] = phys
+        self._place(st, slot)
+        return dt
+
+    # ---- admission / prefill ---------------------------------------------
+    def _admit(self, elapsed: float) -> float:
         """FIFO prefill admission (head-of-line blocking keeps the order
-        deterministic; a request that can never fit fails immediately)."""
+        deterministic; a request that can never fit fails immediately).
+        Admission never runs past a blocked pause queue: a fresh arrival
+        must not eat the free rows/pages the oldest paused sequence is
+        waiting for (it would starve behind a steady arrival stream) —
+        and it never evicts a paused sequence's residency either."""
         dt = 0.0
         while self._queue:
+            if self._paused:
+                break
             st = self._queue[0]
-            if self.budget.pages_for(st.target_len) > self.budget.tier1_pages:
+            if self.budget.pages_for(st.target_len) > self.kv.num_pages:
                 self._queue.popleft()
                 st.handle.status = RequestStatus.FAILED_OOM
-                st.handle.done_clock = self.clock + dt
+                st.handle.done_clock = self.clock + elapsed + dt
                 continue
             slot = self._free_slot()
             eff = st.effective_prompt()
@@ -347,84 +507,112 @@ class Engine:
             if slot is None or need > self.kv.hot_free:
                 break
             self._queue.popleft()
-            dt += self._prefill_into(st, slot, eff)
+            dt += self._prefill_into(st, slot, eff, elapsed + dt)
         return dt
 
     def _prefill_into(self, st: _SlotState, slot: int,
-                      eff: Tuple[int, ...]) -> float:
-        # exact-length prefill: jit caches one program per distinct prompt
-        # length (prefill returns last-position logits only, so padding
-        # would discard the true next-token distribution)
+                      eff: Tuple[int, ...], elapsed: float) -> float:
         plen = len(eff)
-        tokens = np.asarray(eff, np.int32)[None, :]
-        slot_cache = self.model.init_cache(1, self.cfg.max_seq,
+        bucket = self._bucket_len(plen)
+        self._buckets_used.add(bucket)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = eff
+        slot_cache = self.model.init_cache(1, bucket,
                                            dtype=self._cache_dtype)
         logits, cache = self._prefill_fn(self.params,
                                          {"tokens": jnp.asarray(tokens)},
-                                         slot_cache)
+                                         slot_cache, jnp.int32(plen - 1))
+        # the padded tail is real (wasted) compute on hardware: charge it
+        cost = self.cost.prefill_s(bucket)
         tok = int(np.argmax(np.asarray(logits)[0, -1]))
-        self._emit(st, tok)
+        self._emit(st, tok, self.clock + elapsed + cost)
         if st.handle.done:
-            return self.cost.prefill_s(plen)
-        self.kv.alloc(st.rid,
-                      self.budget.pages_for(st.target_len)
-                      if self.cfg.reserve_lifetime
-                      else self.budget.pages_for(plen + 1))
-        self._cache = jax.tree.map(lambda l, s: l.at[slot].set(s),
-                                   self._cache, cache)
+            return cost
+        need = (self.budget.pages_for(st.target_len)
+                if self.cfg.reserve_lifetime
+                else self.budget.pages_for(plen + 1))
+        phys = self.kv.alloc(st.rid, need)
+        self._write_prefill_pages(cache, phys, plen)
+        for lp, p in enumerate(phys):
+            self._table[slot, lp] = p
         st.index = plen
         st.cur_tok = tok
         self._place(st, slot)
-        return self.cost.prefill_s(plen)
+        return cost
+
+    def _write_prefill_pages(self, cache, phys: List[int],
+                             plen: int) -> None:
+        """Scatter the dense prefill cache into the allocated physical
+        pages.  Only pages holding real tokens are copied: the padded
+        bucket tail (and any growth/lifetime pages past the prompt) is
+        garbage the kernel's length mask never reads."""
+        ps = self.cfg.page_size
+        n_copy = -(-plen // ps)
+        idx = jnp.asarray(np.asarray(phys[:n_copy], np.int32))
+
+        def put(pool_leaf, cache_leaf):
+            lay = cache_leaf.shape[0]
+            tail = tuple(cache_leaf.shape[3:])
+            pages = cache_leaf[:, 0].reshape((lay, -1, ps) + tail)[:, :n_copy]
+            return pool_leaf.at[:, idx].set(pages.astype(pool_leaf.dtype))
+
+        self._pool = jax.tree.map(put, self._pool, cache)
 
     def _place(self, st: _SlotState, slot: int) -> None:
         st.slot = slot
         st.admit_seq = self._admit_seq
         self._admit_seq += 1
         self._slots[slot] = st
-        self._slot_index[slot] = st.index
+        self._lengths[slot] = st.index
         self._slot_tok[slot] = st.cur_tok
         st.handle.status = RequestStatus.RUNNING
 
-    def _emit(self, st: _SlotState, tok: int) -> None:
+    # ---- decode ----------------------------------------------------------
+    def _emit(self, st: _SlotState, tok: int, at: float) -> None:
+        """Record a generated token at its modeled completion time."""
         st.handle.tokens.append(tok)
         if st.handle.first_token_clock is None:
-            st.handle.first_token_clock = self.clock
+            st.handle.first_token_clock = at
         eos_hit = (self.cfg.eos_token is not None
                    and tok == self.cfg.eos_token)
         if len(st.handle.tokens) >= st.request.max_new_tokens or eos_hit:
             st.handle.status = RequestStatus.DONE
-            st.handle.done_clock = self.clock
+            st.handle.done_clock = at
             if self.kv.holds(st.rid):
                 self.kv.free(st.rid)
             if st.slot is not None:
+                self._table[st.slot, :] = self._trash
+                self._lengths[st.slot] = 0
                 self._slots[st.slot] = None
                 st.slot = None
 
-    def _decode_once(self) -> float:
+    def _decode_once(self, elapsed: float) -> float:
         running = self._running()
         if not running:
             return 0.0
         for st in running:
-            self._slot_index[st.slot] = st.index
+            self._lengths[st.slot] = st.index
             self._slot_tok[st.slot] = st.cur_tok
-        toks = jnp.asarray(self._slot_tok, jnp.int32).reshape(
-            self.cfg.max_slots, 1, 1)
-        idx = jnp.asarray(self._slot_index, jnp.int32)
-        new_toks, self._cache = self._decode_fn(self.params, toks,
-                                                self._cache, idx)
+            st.last_sched = self.steps
+        toks = jnp.asarray(self._slot_tok[:, None])
+        table = jnp.asarray(self._table)
+        lengths = jnp.asarray(self._lengths)
+        new_toks, self._pool = self._decode_fn(self.params, toks,
+                                               self._pool, table, lengths)
         new_toks = np.asarray(new_toks)
+        cost = self.cost.decode_s(len(running))
+        at = self.clock + elapsed + cost
         for st in running:
-            tok = int(new_toks[st.slot, 0, 0])
+            tok = int(new_toks[st.slot, 0])
             st.index += 1
             st.cur_tok = tok
             self._decoded_tokens += 1
-            self._emit(st, tok)
-        return self.cost.decode_s(len(running))
+            self._emit(st, tok, at)
+        return cost
 
     # ---- observability ---------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        """Throughput, queue depth, and KV tier residency."""
+        """Throughput, queue depth, page-pool residency, compile counts."""
         n_running = sum(s is not None for s in self._slots)
         done = [h for h in self.handles.values()
                 if h.status is RequestStatus.DONE]
@@ -432,18 +620,22 @@ class Engine:
                   if h.status is RequestStatus.FAILED_OOM]
         recomputes = sum(h.recomputes for h in self.handles.values())
         swaps = sum(h.swaps for h in self.handles.values())
+        preempts = sum(h.preempts for h in self.handles.values())
         return {
             "clock_s": self.clock,
             "steps": self.steps,
             "queue_depth": len(self._queue),
             "running": n_running,
-            "swapped": len(self._swapped),
+            "swapped": len(self._paused),
             "completed": len(done),
             "failed_oom": len(failed),
             "tokens_decoded": self._decoded_tokens,
             "throughput_tok_s": (self._decoded_tokens / self.clock
                                  if self.clock > 0 else 0.0),
+            "preempts": preempts,
             "preempt_swaps": swaps,
             "preempt_recomputes": recomputes,
+            "prefill_buckets": list(self._buckets),
+            "prefill_compiles": self.prefill_compiles(),
             "kv": self.kv.residency(),
         }

@@ -8,6 +8,7 @@ run is exactly reproducible across hosts and arrival interleavings.
 from __future__ import annotations
 
 import json
+import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -45,17 +46,30 @@ def burst_trace(n_requests: int, *, prompt_len: int = 32,
             for _ in range(n_requests)]
 
 
-def load_trace(path: str) -> List[Request]:
-    """JSONL: {"prompt_tokens": [...], "max_new_tokens": n, "arrival_time": t}."""
+def load_trace(path: str, *, vocab: Optional[int] = None) -> List[Request]:
+    """JSONL: {"prompt_tokens": [...], "max_new_tokens": n, "arrival_time": t}.
+
+    Pass ``vocab`` to validate token ids at load time: an id >= vocab
+    would be silently *clamped* by JAX's out-of-bounds gather semantics
+    (wrong embedding, wrong completion, no error), so a bad trace line
+    raises here with its line number instead.  ``Engine.submit``
+    re-validates as a backstop.
+    """
     out = []
     with open(path) as f:
-        for line in f:
+        for lineno, line in enumerate(f, start=1):
             line = line.strip()
             if not line:
                 continue
             d = json.loads(line)
-            out.append(Request(tuple(d["prompt_tokens"]),
-                               int(d["max_new_tokens"]),
+            toks = tuple(int(t) for t in d["prompt_tokens"])
+            if vocab is not None:
+                bad = [t for t in toks if not 0 <= t < vocab]
+                if bad:
+                    raise ValueError(
+                        f"{path}:{lineno}: prompt token id {bad[0]} outside "
+                        f"the model vocab [0, {vocab})")
+            out.append(Request(toks, int(d["max_new_tokens"]),
                                float(d.get("arrival_time", 0.0))))
     return out
 
@@ -80,11 +94,15 @@ def run_trace(engine, trace: Sequence[Request], *,
 
 
 def latency_summary(handles: Sequence[RequestHandle]) -> Dict[str, float]:
+    """Nearest-rank percentiles (ceil(p*n) - 1 into the sorted sample):
+    the p-th percentile is the smallest observation covering at least a
+    p fraction of the sample.  The old ``int(p * n)`` indexing biased a
+    rank high — for n = 2 it reported the *max* as the median."""
     lats = sorted(h.latency for h in handles if h.latency is not None
                   and h.status.value == "done")
     if not lats:
         return {"n": 0, "p50_s": float("inf"), "p95_s": float("inf"),
                 "mean_s": float("inf")}
-    pct = lambda p: lats[min(len(lats) - 1, int(p * len(lats)))]
+    pct = lambda p: lats[max(0, math.ceil(p * len(lats)) - 1)]
     return {"n": len(lats), "p50_s": pct(0.50), "p95_s": pct(0.95),
             "mean_s": sum(lats) / len(lats)}

@@ -181,15 +181,18 @@ def test_paged_kv_spill_fetch():
     budget = tiering.KVBudget(tier1_pages=4, tier2_bytes=2048.0, page_size=16)
     kv = tiering.PagedKV(budget, page_bytes=512.0)
     kv.alloc("seq0", 2)
-    payload = {"k": jnp.full((2, 16, 2, 4), 7.0), "v": jnp.zeros((2, 16, 2, 4))}
-    host = {k: np.asarray(v) for k, v in payload.items()}
-    kv.spill("seq0", host)
-    assert not kv.is_hot("seq0") and kv.cold_bytes_used == 1024.0
-    back = kv.fetch("seq0")
-    np.testing.assert_array_equal(back["k"], np.asarray(payload["k"]))
-    assert kv.is_hot("seq0") and kv.cold_pages_used == 0
+    page = {"k": np.full((2, 16, 2, 4), 7.0, np.float32),
+            "v": np.zeros((2, 16, 2, 4), np.float32)}
+    kv.evict("seq0", 0, page)
+    kv.evict("seq0", 1, page)
+    assert not kv.is_fully_hot("seq0") and kv.cold_bytes_used == 1024.0
+    phys, back = kv.fetch("seq0", 0)
+    np.testing.assert_array_equal(back["k"], page["k"])
+    assert kv.page_table("seq0")[0] == phys
+    kv.fetch("seq0", 1)
+    assert kv.is_fully_hot("seq0") and kv.cold_pages_used == 0
     res = kv.residency()
-    assert res["spills"] == 1 and res["fetches"] == 1
+    assert res["spills"] == 2 and res["fetches"] == 2
     assert res["tier1_pages_used"] == 2
 
 
