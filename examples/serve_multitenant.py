@@ -1,0 +1,71 @@
+"""Multi-tenant serving quickstart — two engines, ONE lease, ONE
+physical KV page pool (paper's composability at serving granularity).
+
+The pool grants a single lease whose KV bytes are shared by both
+tenants; a ``PoolArbiter`` owns the hot tier-1 pages and hands each
+tenant a *revocable max-min fair share* (work-conserving: an idle
+tenant's pages are borrowable; a bursting tenant claws its share back,
+with the swap clocks charged to the hog, not the burster).
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+"""
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.pool import smoke_pool
+from repro.serve import (Engine, EngineConfig, PoolArbiter, burst_trace,
+                         latency_summary, run_multi_trace)
+
+cfg = get_config("qwen1.5-0.5b", smoke=True)
+model = build_model(cfg)
+
+# ---------------------------------------------------------------------------
+# 1. one lease, two named tenants: the allocator grants ONE shared
+#    kv_gb pool; kv_share() is each tenant's static slice of the cold
+#    tier-2 bytes (hot pages stay dynamic, see below)
+# ---------------------------------------------------------------------------
+pool = smoke_pool("scalepool")
+lease = pool.lease("svc", 4, tier2_gb=64, kv_gb=2.0,
+                   tenants=("chat", "batch"))
+print(f"lease: {lease.n_accels} accels, {lease.kv_bytes / 1e9:.0f}GB shared "
+      f"KV grant, tenants={lease.tenants}")
+print(f"per-tenant cold budget: "
+      f"{lease.kv_share('chat').tier2_bytes / 1e9:.0f}GB")
+
+# ---------------------------------------------------------------------------
+# 2. the arbiter owns the physical page pool; each tenant engine joins
+#    it (first registration fixes the pool's cache geometry)
+# ---------------------------------------------------------------------------
+ecfg = EngineConfig(max_slots=4, max_seq=96, page_size=16)
+arb = PoolArbiter(tier1_pages=12, page_size=16)
+chat = Engine.from_lease(model, lease, ecfg, arbiter=arb, tenant="chat")
+batch = Engine.from_lease(model, lease, ecfg, arbiter=arb, tenant="batch")
+
+# skewed traffic: "batch" floods from t=0, "chat" bursts in later —
+# exactly the shape a static 1/N partition handles worst
+flood = burst_trace(8, prompt_len=32, max_new_tokens=32, vocab=cfg.vocab,
+                    seed=0)
+burst = [dataclasses.replace(r, arrival_time=2e-4)
+         for r in burst_trace(3, prompt_len=32, max_new_tokens=16,
+                              vocab=cfg.vocab, seed=1)]
+
+h_batch, h_chat = run_multi_trace([(batch, flood), (chat, burst)])
+print(f"\nbatch tenant: {latency_summary(h_batch)}")
+print(f"chat  tenant: {latency_summary(h_chat)}")
+
+# ---------------------------------------------------------------------------
+# 3. what the arbiter did: while "chat" was idle, "batch" borrowed its
+#    pages (work conservation); when the chat burst arrived, the
+#    arbiter revoked the coldest of batch's paused pages — the swap
+#    seconds were charged to BATCH's clock (it was over share), and
+#    chat's latency stayed at its guaranteed-slice level
+# ---------------------------------------------------------------------------
+s = arb.stats()
+print(f"\nrevocations: {s['revocations']} episodes, "
+      f"{s['revoked_pages']} pages")
+for name, t in s["tenants"].items():
+    print(f"  {name}: hot={t['hot_used']} share={t['share']} "
+          f"allowance={t['allowance']} spills={t['spills']} "
+          f"charged={t['revocation_charged_s'] * 1e6:.1f}us")

@@ -2,6 +2,9 @@
 tier-2 KV paging (paper §5/§6, Fig. 7 at request granularity).
 
     PYTHONPATH=src python examples/serve_tiered.py
+
+For N tenants fair-sharing ONE physical page pool (PoolArbiter), see
+``examples/serve_multitenant.py``.
 """
 
 from repro.configs import get_config

@@ -179,6 +179,26 @@ class PagedKV:
         return len(self._free)
 
     @property
+    def free_count(self) -> int:
+        """Pages literally on the free stack — ``hot_free`` minus any
+        revocation headroom a multi-tenant view folds in.  Cheap (no
+        fair-share recomputation), for hot loops."""
+        return len(self._free)
+
+    def allowance(self) -> int:
+        """Hot pages this pool's consumer may keep scheduled right now.
+        For a private pool that is the whole quota; a multi-tenant view
+        (``repro.serve.arbiter``) overrides it with the tenant's current
+        max-min fair share, which is what makes shares *revocable*."""
+        return self.num_pages
+
+    def hot_used(self) -> int:
+        """Hot pages held by this pool's own sequences (== pool-wide
+        usage for a private pool; per-tenant usage under an arbiter)."""
+        return sum(1 for pages in self._seqs.values()
+                   for p in pages if p.hot)
+
+    @property
     def hot_pages_used(self) -> int:
         return self.num_pages - len(self._free)
 
@@ -224,6 +244,13 @@ class PagedKV:
         return [p.phys for p in self._seqs[rid]]
 
     # ---- lifecycle -------------------------------------------------------
+    def prepare(self, n_pages: int) -> None:
+        """Hint that ``n_pages`` physical pages are about to be taken
+        one at a time (a fetch loop).  No-op for a private pool; a
+        multi-tenant view revokes the whole shortfall in ONE batched
+        episode here, so the victim is charged one bulk transfer rather
+        than a per-page setup latency per fetch."""
+
     def _take(self, n: int, what: str) -> List[int]:
         if n > len(self._free):
             raise KVBudgetExceeded(

@@ -14,6 +14,10 @@ Request-level modes (continuous batching + budgeted KV tiering):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --requests 16 --pool scalepool --pool-accels 4 --tier2-kv-gb 1
 
+    # multi-tenant: N engines fair-sharing ONE physical page pool
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --requests 16 --tenants 2 --tier1-pages 12 --tier2-kv-gb 1
+
 Legacy fixed-batch mode (pre-engine path, kept for encdec archs):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
@@ -54,6 +58,9 @@ def _engine_mode(args, cfg, model) -> int:
             tier2_bytes=args.tier2_kv_gb * 1e9,
             page_size=args.page_size)
 
+    if args.tenants > 1:
+        return _multitenant_mode(args, cfg, model, ecfg)
+
     if args.pool != "none":
         from repro.pool import smoke_pool
         pool = smoke_pool(args.pool)
@@ -87,6 +94,72 @@ def _engine_mode(args, cfg, model) -> int:
         "sample_tokens": handles[0].tokens[:8] if handles else [],
     }, indent=2, default=str))
     return 0 if stats["failed_oom"] == 0 else 1
+
+
+def _multitenant_mode(args, cfg, model, ecfg) -> int:
+    """--tenants N: N engines over ONE shared page pool (PoolArbiter),
+    traffic (synthetic or --trace JSONL) split round-robin across
+    tenants."""
+    from repro.serve import (Engine, PoolArbiter, latency_summary,
+                             load_trace, run_multi_trace, synthetic_trace)
+
+    if args.pool != "none" and args.tier2_kv_gb <= 0:
+        print("error: --tenants with --pool shares one KV grant across "
+              "the tenants — pass --tier2-kv-gb > 0 so the lease has "
+              "kv bytes to share", flush=True)
+        return 2
+
+    names = [f"t{i}" for i in range(args.tenants)]
+    tier1 = args.tier1_pages or args.tenants * args.slots * ecfg.pages_per_slot
+    arb = PoolArbiter(tier1, page_size=args.page_size)
+    per_tenant = KVBudget(tier2_bytes=args.tier2_kv_gb * 1e9 / args.tenants,
+                          page_size=args.page_size)
+    if args.pool != "none":
+        from repro.pool import smoke_pool
+        pool = smoke_pool(args.pool)
+        lease = pool.lease("cli-serve", args.pool_accels,
+                           tier2_gb=max(args.pool_tier2_gb, args.tier2_kv_gb),
+                           kv_gb=args.tier2_kv_gb,
+                           model_parallel=args.pool_model_parallel,
+                           tenants=tuple(names))
+        engines = {n: Engine.from_lease(model, lease, ecfg,
+                                        arbiter=arb, tenant=n)
+                   for n in names}
+    else:
+        engines = {n: Engine.local(model, ecfg, budget=per_tenant,
+                                   arbiter=arb, tenant=n)
+                   for n in names}
+
+    if args.trace:
+        trace = load_trace(args.trace, vocab=cfg.vocab)
+    else:
+        trace = synthetic_trace(
+            args.requests, mean_interarrival_s=args.interarrival,
+            prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
+            max_new_tokens=args.max_new, vocab=cfg.vocab, seed=args.seed)
+    split = {n: [r for j, r in enumerate(trace)
+                 if j % args.tenants == i]
+             for i, n in enumerate(names)}
+
+    t0 = time.time()
+    results = run_multi_trace([(engines[n], split[n]) for n in names])
+    wall = time.time() - t0
+    out = {"arch": cfg.name, "mode": "multitenant",
+           "tenants": args.tenants, "tier1_pages": tier1,
+           "wall_s": round(wall, 2), "arbiter": arb.stats(), "per_tenant": {}}
+    failed = 0
+    for n, handles in zip(names, results):
+        st = engines[n].stats()
+        failed += st["failed_oom"]
+        out["per_tenant"][n] = {
+            "requests": len(handles),
+            "latency": latency_summary(handles),
+            "swaps": st["preempt_swaps"],
+            "recomputes": st["preempt_recomputes"],
+            "tput_busy_tok_s": st["throughput_busy_tok_s"],
+        }
+    print(json.dumps(out, indent=2, default=str))
+    return 0 if failed == 0 else 1
 
 
 def _legacy_batch_mode(args, cfg, model) -> int:
@@ -161,6 +234,10 @@ def main(argv=None):
                    help="tier-1 KV page quota (0 = full slot capacity)")
     p.add_argument("--tier2-kv-gb", type=float, default=0.0,
                    help="tier-2 KV byte budget (spill target)")
+    p.add_argument("--tenants", type=int, default=1,
+                   help="N>1: N tenant engines over ONE shared page pool "
+                        "(PoolArbiter fair shares), traffic split "
+                        "round-robin")
     p.add_argument("--pool", default="none",
                    choices=["none", "scalepool", "baseline"])
     p.add_argument("--pool-accels", type=int, default=4)

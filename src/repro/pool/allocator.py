@@ -99,6 +99,12 @@ class JobRequest:
     tier2_bytes: float = 0.0      # capacity-tier reservation (offload state)
     kv_bytes: float = 0.0         # slice of tier2_bytes granted to KV paging
     tier2_bw: float = 0.0         # capacity-fabric bandwidth, bytes/s
+    # serving tenants sharing this job's kv_bytes as ONE pool: the grant
+    # stays a single reservation (no per-tenant carve-up at the
+    # allocator), and ``repro.serve.PoolArbiter`` divides the hot pages
+    # max-min fairly at runtime while ``lease.kv_share`` hands each
+    # tenant its static slice of the cold-store bytes.
+    tenants: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.n_accels <= 0:
@@ -111,6 +117,15 @@ class JobRequest:
             raise ValueError(
                 f"{self.name}: kv_bytes must lie within the tier-2 "
                 f"reservation ({self.kv_bytes} vs {self.tier2_bytes})")
+        object.__setattr__(self, "tenants",
+                           tuple(str(t) for t in self.tenants))
+        if len(set(self.tenants)) != len(self.tenants):
+            raise ValueError(f"{self.name}: duplicate tenant names "
+                             f"{self.tenants}")
+        if self.tenants and self.kv_bytes <= 0:
+            raise ValueError(
+                f"{self.name}: a multi-tenant lease shares a KV grant — "
+                f"request kv_bytes > 0 for tenants {self.tenants}")
 
 
 @dataclass(frozen=True)
@@ -132,6 +147,8 @@ class Allocation:
     # under baseline the demand is recorded but rides the IB fabric.
     tier2_bw: Dict[int, float] = field(default_factory=dict)
     tier2_bw_requested: float = 0.0
+    # serving tenants that share this allocation's kv_bytes as one pool
+    tenants: Tuple[str, ...] = ()
 
     @property
     def n_granted(self) -> int:
@@ -295,7 +312,8 @@ class Allocator:
         return Allocation(req.name, accels, tier2, req.n_accels,
                           whole_pods=False, tier2_requested=req.tier2_bytes,
                           kv_bytes=req.kv_bytes, tier2_bw=tier2_bw,
-                          tier2_bw_requested=req.tier2_bw)
+                          tier2_bw_requested=req.tier2_bw,
+                          tenants=req.tenants)
 
     def _pick_pods_min_hops(self, n: int) -> Optional[List[int]]:
         """Pod set minimizing (span hops, pod count): single pod best-fit,
@@ -371,7 +389,8 @@ class Allocator:
         return Allocation(req.name, accels, {}, req.n_accels, whole_pods=True,
                           tier2_requested=req.tier2_bytes,
                           kv_bytes=req.kv_bytes,
-                          tier2_bw_requested=req.tier2_bw)
+                          tier2_bw_requested=req.tier2_bw,
+                          tenants=req.tenants)
 
     # ---- metrics & invariants --------------------------------------------
     def metrics(self) -> PoolMetrics:

@@ -68,6 +68,11 @@ class Lease:
     def spans_pods(self) -> bool:
         return self.allocation.n_pods > 1
 
+    @property
+    def tenants(self) -> Tuple[str, ...]:
+        """Serving tenants sharing this lease's KV grant as one pool."""
+        return self.allocation.tenants
+
     # ---- runtime binding -------------------------------------------------
     def kv_budget(self, *, page_size: int = 64) -> Optional[KVBudget]:
         """The lease's KV grant as an engine-consumable ``KVBudget``:
@@ -76,6 +81,25 @@ class Lease:
         if self.kv_bytes <= 0:
             return None
         return KVBudget(tier1_pages=None, tier2_bytes=self.kv_bytes,
+                        page_size=page_size)
+
+    def kv_share(self, tenant: str, *, page_size: int = 64) -> KVBudget:
+        """One tenant's slice of the shared KV grant.  The cold-store
+        *bytes* are split statically (1/N of ``kv_bytes`` — a tenant's
+        spill headroom is its own, so a hog cannot exhaust a neighbor's
+        tier-2 budget); the hot tier-1 *pages* stay one shared pool,
+        divided dynamically by ``repro.serve.PoolArbiter`` as a
+        revocable max-min fair share."""
+        if not self.tenants:
+            raise ValueError(
+                f"lease {self.job!r} was not taken with tenants= — "
+                f"use kv_budget() for single-tenant serving")
+        if tenant not in self.tenants:
+            raise KeyError(
+                f"{tenant!r} is not a tenant of lease {self.job!r} "
+                f"(tenants: {self.tenants})")
+        return KVBudget(tier1_pages=None,
+                        tier2_bytes=self.kv_bytes / len(self.tenants),
                         page_size=page_size)
 
     def tiering_policy(self) -> TieringPolicy:
@@ -125,13 +149,16 @@ class ResourcePool:
 
     def lease(self, name: str, n_accels: int, *, tier2_gb: float = 0.0,
               kv_gb: float = 0.0, tier2_gbps: float = 0.0,
-              model_parallel: int = 1) -> Lease:
+              model_parallel: int = 1,
+              tenants: Tuple[str, ...] = ()) -> Lease:
         """Take a lease: ``kv_gb`` earmarks a slice of the tier-2
         reservation as a KV-paging grant (serving engines turn it into a
-        ``KVBudget``); ``tier2_gbps`` reserves capacity-fabric bandwidth."""
+        ``KVBudget``); ``tier2_gbps`` reserves capacity-fabric bandwidth.
+        ``tenants`` names serving tenants that will share the KV grant
+        as ONE pool (see ``Lease.kv_share`` / ``serve.PoolArbiter``)."""
         allocation = self.alloc.allocate(
             JobRequest(name, n_accels, tier2_gb * GB, kv_bytes=kv_gb * GB,
-                       tier2_bw=tier2_gbps * GB))
+                       tier2_bw=tier2_gbps * GB, tenants=tenants))
         if allocation is None:
             m = self.alloc.metrics()
             raise AllocationError(
@@ -168,7 +195,8 @@ class ResourcePool:
         allocation = self.alloc.allocate(JobRequest(
             name, n_accels, t2,
             kv_bytes=min(old.allocation.kv_bytes, t2),
-            tier2_bw=old.allocation.tier2_bw_requested))
+            tier2_bw=old.allocation.tier2_bw_requested,
+            tenants=old.allocation.tenants))
         if allocation is None:
             self.alloc.restore(snapshot)
             raise AllocationError(

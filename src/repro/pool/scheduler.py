@@ -12,6 +12,12 @@ aware allocator → finish.  Higher-priority head-of-line jobs may preempt
 (newest, lowest-priority victims first, requeued with their remaining
 steps); elastic jobs admit shrunk (dp halved until they fit) and grow
 back toward their full data-parallel width when resources free up.
+
+``Scheduler(queueing="drf")`` replaces FIFO+backfill with dominant-
+resource fairness over ⟨accels, tier-2 bytes, tier-2 bandwidth⟩: each
+admission round offers resources to the user with the smallest dominant
+share, and jobs naming the same ``gang`` admit all-or-nothing (a
+partially-placed gang would strand resources waiting for its peers).
 """
 
 from __future__ import annotations
@@ -41,10 +47,19 @@ class PoolJob:
     priority: int = 0
     elastic: bool = False
     min_dp: int = 1
+    # DRF queueing (Scheduler(queueing="drf")): jobs of one ``user``
+    # share a dominant-resource fairness account; jobs naming the same
+    # ``gang`` are co-scheduled all-or-nothing (submit them together).
+    user: str = ""
+    gang: str = ""
 
     @property
     def n_accels(self) -> int:
         return self.par.n_gpus
+
+    @property
+    def drf_user(self) -> str:
+        return self.user or self.name
 
 
 def offload_bytes(model: sim.LLMConfig,
@@ -148,11 +163,16 @@ class Scheduler:
 
     def __init__(self, inventory: Inventory, policy: Optional[str] = None,
                  *, backfill: bool = True,
-                 calib: Optional[sim.Calibration] = None):
+                 calib: Optional[sim.Calibration] = None,
+                 queueing: str = "fifo"):
+        if queueing not in ("fifo", "drf"):
+            raise ValueError(f"unknown queueing policy {queueing!r} "
+                             f"(expected 'fifo' or 'drf')")
         self.inv = inventory
         self.alloc = Allocator(inventory, policy)
         self.policy = self.alloc.policy
         self.backfill = backfill
+        self.queueing = queueing
         self.calib = calib or dataclasses.replace(
             sim.Calibration(), cluster_size=inventory.pod_size)
         self._events: List[Tuple[float, int, str, object]] = []
@@ -179,17 +199,23 @@ class Scheduler:
                 break   # leave the event for a later run() call
             t, _, kind, data = heapq.heappop(self._events)
             self._advance(t)
-            if kind == "submit":
-                self._queue.append(data)
-                self._log(f"submit {data.name} "
-                          f"(n={data.n_accels}, t2={data.tier2_bytes/1e9:.0f}GB)")
-            elif kind == "finish":
-                name, epoch = data
-                run = self._running.get(name)
-                if run is None or run.epoch != epoch:
-                    continue    # stale: job was preempted/resized
-                self._finish(run)
+            self._handle(kind, data)
+            # drain every event sharing this timestamp BEFORE admitting:
+            # co-submitted jobs (a DRF gang in particular) must be
+            # visible to one admission round together, or the first
+            # member admits alone and all-or-nothing is vacuous
+            while self._events and self._events[0][0] == t:
+                _, _, kind, data = heapq.heappop(self._events)
+                self._handle(kind, data)
             self._admit_and_grow()
+        # partial horizon: accrue the tail window [last_event, until) —
+        # without this, util_area/granted_area/makespan stop at the last
+        # *processed* event and utilization over the horizon is overstated
+        # (jobs straddling ``until`` contribute nothing past it).  With
+        # work left (pending events or running jobs) the horizon is
+        # ``until``; an already-drained schedule keeps its natural end.
+        if math.isfinite(until) and (self._events or self._running):
+            self._advance(until)
         return ScheduleResult(
             records=self.records, trace=self.trace, makespan=self._now,
             util_area=self._util_area, granted_area=self._granted_area,
@@ -197,6 +223,18 @@ class Scheduler:
             total_accels=self.inv.total_accels)
 
     # ---- internals -------------------------------------------------------
+    def _handle(self, kind: str, data) -> None:
+        if kind == "submit":
+            self._queue.append(data)
+            self._log(f"submit {data.name} "
+                      f"(n={data.n_accels}, t2={data.tier2_bytes/1e9:.0f}GB)")
+        elif kind == "finish":
+            name, epoch = data
+            run = self._running.get(name)
+            if run is None or run.epoch != epoch:
+                return      # stale: job was preempted/resized
+            self._finish(run)
+
     def _push(self, t: float, kind: str, data) -> None:
         self._seq += 1
         heapq.heappush(self._events, (t, self._seq, kind, data))
@@ -292,6 +330,13 @@ class Scheduler:
         return True
 
     def _admit_and_grow(self) -> None:
+        if self.queueing == "drf":
+            self._admit_drf()
+        else:
+            self._admit_fifo()
+        self._grow_elastic()
+
+    def _admit_fifo(self) -> None:
         # FIFO with optional backfill; preemption only for head-of-line.
         still_queued: List[PoolJob] = []
         head_blocked = False
@@ -307,7 +352,69 @@ class Scheduler:
             head_blocked = True
             still_queued.append(job)
         self._queue = still_queued
-        self._grow_elastic()
+
+    # ---- DRF queueing (gang-aware) ----------------------------------------
+    def _dominant_share(self, user: str) -> float:
+        """Dominant-resource share of ``user``'s running jobs over
+        ⟨accels, tier-2 bytes, tier-2 bandwidth⟩ — the max across
+        resource dimensions of demanded/total (Ghodsi et al.)."""
+        caps = (self.inv.total_accels, self.inv.total_tier2,
+                self.inv.total_tier2_bw)
+        use = [0.0, 0.0, 0.0]
+        for run in self._running.values():
+            if run.job.drf_user != user:
+                continue
+            use[0] += run.alloc.n_requested
+            use[1] += run.job.tier2_bytes
+            use[2] += run.job.tier2_bw
+        return max(u / c for u, c in zip(use, caps) if c > 0)
+
+    def _try_admit_gang(self, jobs: List[PoolJob]) -> bool:
+        """Admit every job of a gang or none of them: a partially-placed
+        gang would hold resources while waiting for its peers — the
+        all-or-nothing rule keeps the pool deadlock-free."""
+        snapshot = self.alloc.snapshot()
+        allocs = []
+        for job in jobs:
+            alloc = self.alloc.allocate(self._request(job, job.par))
+            if alloc is None:
+                self.alloc.restore(snapshot)
+                return False
+            allocs.append((job, alloc))
+        for job, alloc in allocs:
+            self._start(job, job.par, alloc)
+        if len(jobs) > 1:
+            self._log(f"admit gang {jobs[0].gang!r} "
+                      f"({len(jobs)} jobs, all-or-nothing)")
+        return True
+
+    def _admit_drf(self) -> None:
+        """Dominant-resource-fair admission: repeatedly offer resources
+        to the user with the smallest dominant share, admitting that
+        user's oldest queued gang atomically.  Users whose head gang
+        does not fit are skipped (work conservation: a later user's
+        smaller gang may still be placed) — at full size only, no
+        elastic shrink and no priority preemption in this mode."""
+        while self._queue:
+            gangs: Dict[Tuple[str, str], List[PoolJob]] = {}
+            order: List[Tuple[str, str]] = []
+            for job in self._queue:
+                key = (job.drf_user, job.gang or job.name)
+                if key not in gangs:
+                    gangs[key] = []
+                    order.append(key)
+                gangs[key].append(job)
+            users = sorted({k[0] for k in order},
+                           key=lambda u: (self._dominant_share(u), u))
+            admitted = None
+            for user in users:
+                key = next(k for k in order if k[0] == user)
+                if self._try_admit_gang(gangs[key]):
+                    admitted = {id(j) for j in gangs[key]}
+                    break
+            if admitted is None:
+                return
+            self._queue = [j for j in self._queue if id(j) not in admitted]
 
     def _grow_elastic(self) -> None:
         """Double shrunk elastic jobs back toward full dp while it fits."""

@@ -1,11 +1,13 @@
 """repro.serve — request-level serving engine over the XLink-CXL pool.
 
-The serving API everything downstream (multi-tenant serving, fair-share
-queueing, multi-host binding) builds on:
+The serving API everything downstream builds on:
 
     api     — Request / RequestHandle / EngineConfig / ServeCostModel
     engine  — Engine: continuous batching + lease-budgeted KV tiering
-    trace   — arrival traces and the trace → engine driver
+    arbiter — PoolArbiter: N tenant engines share ONE physical page
+              pool under revocable max-min fair shares
+    trace   — arrival traces, the trace → engine driver, and the
+              clock-interleaved multi-tenant driver
 
 Quickstart::
 
@@ -19,18 +21,26 @@ Lease-backed (the orchestrator composes capacity + KV budget)::
 
     lease = pool.lease("svc", 8, tier2_gb=256, kv_gb=64)
     eng = Engine.from_lease(model, lease, EngineConfig(max_slots=8))
+
+Multi-tenant (N engines drawing on ONE shared page pool)::
+
+    arb = PoolArbiter(tier1_pages=24, page_size=16)
+    a = Engine.local(model, cfg, arbiter=arb, tenant="a")
+    b = Engine.local(model, cfg, arbiter=arb, tenant="b")
+    run_multi_trace([(a, trace_a), (b, trace_b)])
 """
 
 from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
 from repro.serve.api import (EngineConfig, Request, RequestHandle,
                              RequestStatus, ServeCostModel)
+from repro.serve.arbiter import PoolArbiter
 from repro.serve.engine import Engine
 from repro.serve.trace import (burst_trace, latency_summary, load_trace,
-                               run_trace, synthetic_trace)
+                               run_multi_trace, run_trace, synthetic_trace)
 
 __all__ = [
     "Engine", "EngineConfig", "KVBudget", "KVBudgetExceeded", "PagedKV",
-    "Request", "RequestHandle", "RequestStatus", "ServeCostModel",
-    "burst_trace", "latency_summary", "load_trace", "run_trace",
-    "synthetic_trace",
+    "PoolArbiter", "Request", "RequestHandle", "RequestStatus",
+    "ServeCostModel", "burst_trace", "latency_summary", "load_trace",
+    "run_multi_trace", "run_trace", "synthetic_trace",
 ]

@@ -46,6 +46,14 @@ enforced by tests).
 Time is *modeled*: a ``ServeCostModel`` prices prefill/decode/page-swap
 events from the paper's fabric constants, so latency distributions are
 hardware-derived even when the host is a CPU smoke run.
+
+Multi-tenant: passing ``arbiter=``/``tenant=`` joins a shared
+``repro.serve.PoolArbiter`` page pool instead of owning a private one —
+``self.kv`` becomes the tenant's fair-share view (same interface), the
+pool arrays live on the arbiter, and ``allowance()`` (the live max-min
+share) replaces the fixed quota in the pressure/resume decisions.  A
+lone tenant's allowance is the whole pool, so single-tenant behavior is
+bit-identical to the private path.
 """
 
 from __future__ import annotations
@@ -70,6 +78,24 @@ def _dtype(d):
     return jnp.dtype(d) if not isinstance(d, str) else {
         "float32": jnp.float32, "bfloat16": jnp.bfloat16,
         "float16": jnp.float16}[d]
+
+
+def evict_pages(pool, kv, st, logicals, cost) -> float:
+    """Spill one batch of ``st``'s hot logical pages to ``kv``'s tier-2
+    cold store: gather the physical pages from the device pool (one
+    bulk copy), evict each, and record one swap episode on the handle.
+    Returns the modeled swap seconds — the caller decides whose clock
+    absorbs them (the engine's own step dt, or the victim tenant's
+    revocation charge).  Shared by ``Engine._evict_or_drop`` and
+    ``PoolArbiter.reclaim`` so the two eviction paths cannot diverge."""
+    table = kv.page_table(st.rid)
+    idx = jnp.asarray(np.asarray([table[lp] for lp in logicals], np.int32))
+    gathered = jax.tree.map(lambda l: np.asarray(l[:, idx]), pool)
+    for i, lp in enumerate(logicals):
+        kv.evict(st.rid, lp, jax.tree.map(lambda g, i=i: g[:, i], gathered))
+    st.handle.swaps += 1        # one spill episode: len(logicals) pages,
+                                # one bulk transfer over the capacity fabric
+    return cost.swap_s(len(logicals) * kv.page_bytes)
 
 
 @dataclasses.dataclass(eq=False)        # identity semantics: these live in
@@ -111,7 +137,8 @@ class Engine:
     def __init__(self, model: Model, params, cfg: EngineConfig, *,
                  budget: Optional[KVBudget] = None,
                  cost_model: Optional[ServeCostModel] = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 arbiter=None, tenant: Optional[str] = None):
         if model.cfg.family == "encdec":
             raise NotImplementedError(
                 "Engine drives decoder-style models; encdec serving still "
@@ -146,23 +173,43 @@ class Engine:
         self.slot_bytes = float(slot_bytes)
 
         full = budget or KVBudget(page_size=cfg.page_size)
-        tier1 = (full.tier1_pages if full.tier1_pages is not None
-                 else cfg.max_slots * cfg.pages_per_slot)
-        self.budget = KVBudget(tier1_pages=tier1,
-                               tier2_bytes=full.tier2_bytes,
-                               page_size=cfg.page_size)
-        self.kv = PagedKV(self.budget, page_bytes)
+        self.arbiter = arbiter
+        self.tenant = tenant
+        self._pool_store = None
+        if arbiter is not None:
+            # multi-tenant: the arbiter owns the physical pool; this
+            # engine's tier-1 "quota" is the whole pool, but its live
+            # allowance is a revocable max-min fair share.
+            if self.tenant is None:
+                self.tenant = f"tenant-{len(arbiter.tenants)}"
+            self.budget = KVBudget(tier1_pages=arbiter.num_pages,
+                                   tier2_bytes=full.tier2_bytes,
+                                   page_size=cfg.page_size)
+            self.kv = arbiter.register(self.tenant, self,
+                                       slot_shapes=slot_shapes,
+                                       page_bytes=page_bytes,
+                                       tier2_bytes=full.tier2_bytes)
+        else:
+            tier1 = (full.tier1_pages if full.tier1_pages is not None
+                     else cfg.max_slots * cfg.pages_per_slot)
+            self.budget = KVBudget(tier1_pages=tier1,
+                                   tier2_bytes=full.tier2_bytes,
+                                   page_size=cfg.page_size)
+            self.kv = PagedKV(self.budget, page_bytes)
 
         # shared physical page pool: leaf (layers, num_pages + 1, page,
         # ...).  The extra page (id == num_pages) is the TRASH page: idle
         # rows' page tables point at it, so their decode writes land
-        # somewhere harmless and their gathers stay in bounds.
+        # somewhere harmless and their gathers stay in bounds.  Under an
+        # arbiter the arrays live on the arbiter (ONE pool, N tenants)
+        # and ``self._pool`` is a view through the property below.
         self._trash = self.kv.num_pages
-        self._pool = jax.tree.map(
-            lambda l: jnp.zeros(
-                (l.shape[0], self.kv.num_pages + 1, cfg.page_size)
-                + l.shape[3:], l.dtype),
-            slot_shapes)
+        if arbiter is None:
+            self._pool = jax.tree.map(
+                lambda l: jnp.zeros(
+                    (l.shape[0], self.kv.num_pages + 1, cfg.page_size)
+                    + l.shape[3:], l.dtype),
+                slot_shapes)
         self._table = np.full((cfg.max_slots, cfg.pages_per_slot),
                               self._trash, np.int32)
         self._lengths = np.zeros(cfg.max_slots, np.int32)
@@ -178,6 +225,9 @@ class Engine:
 
         self.clock = 0.0
         self.steps = 0
+        self.busy_s = 0.0          # sum of nonzero step() durations: the
+                                   # throughput denominator that idle
+                                   # inter-arrival gaps cannot dilute
         self._decoded_tokens = 0
 
         # prefill buckets: page-aligned powers of two capped at the slot
@@ -206,25 +256,45 @@ class Engine:
         self._decode_jit = jax.jit(paged_decode)
         self._decode_fn = self._scoped(self._decode_jit)
 
+    # the physical page pool: private arrays for a solo engine, the
+    # arbiter's shared arrays when multi-tenant (every tenant's prefill
+    # scatter / decode write / swap round-trip hits the SAME pool)
+    @property
+    def _pool(self):
+        return (self.arbiter.pool if self.arbiter is not None
+                else self._pool_store)
+
+    @_pool.setter
+    def _pool(self, value):
+        if self.arbiter is not None:
+            self.arbiter.pool = value
+        else:
+            self._pool_store = value
+
     # ---- construction ----------------------------------------------------
     @classmethod
     def local(cls, model: Model, cfg: EngineConfig = EngineConfig(), *,
               params=None, rng=None,
               budget: Optional[KVBudget] = None,
-              cost_model: Optional[ServeCostModel] = None) -> "Engine":
+              cost_model: Optional[ServeCostModel] = None,
+              arbiter=None, tenant: Optional[str] = None) -> "Engine":
         """Engine over local devices, no orchestrator: the KV budget is
-        whatever the caller passes (default: unbudgeted tier-1, no tier-2)."""
+        whatever the caller passes (default: unbudgeted tier-1, no
+        tier-2).  Pass ``arbiter``/``tenant`` to join a shared
+        multi-tenant page pool instead of owning a private one."""
         if params is None:
             params = model.init(rng if rng is not None
                                 else jax.random.PRNGKey(0))
-        return cls(model, params, cfg, budget=budget, cost_model=cost_model)
+        return cls(model, params, cfg, budget=budget, cost_model=cost_model,
+                   arbiter=arbiter, tenant=tenant)
 
     @classmethod
     def from_lease(cls, model: Model, lease,
                    cfg: EngineConfig = EngineConfig(), *,
                    params=None, rng=None,
                    budget: Optional[KVBudget] = None,
-                   cost_model: Optional[ServeCostModel] = None) -> "Engine":
+                   cost_model: Optional[ServeCostModel] = None,
+                   arbiter=None, tenant: Optional[str] = None) -> "Engine":
         """Bind a ``repro.pool.Lease``: the lease's mesh shapes the
         sharding rules and its tier-2 KV grant becomes the engine's
         ``KVBudget.tier2_bytes`` — serving capacity is composed by the
@@ -235,15 +305,24 @@ class Engine:
         shape = ShapeConfig("engine", "decode", cfg.max_seq, cfg.max_slots)
         rules = make_rules(model.cfg, shape, mesh, fsdp=False)
         if budget is None:
-            base = policy.kv_budget or KVBudget(page_size=cfg.page_size)
-            budget = KVBudget(tier1_pages=base.tier1_pages,
-                              tier2_bytes=base.tier2_bytes,
-                              page_size=cfg.page_size)
+            if getattr(lease, "tenants", ()):
+                # multi-tenant lease: this tenant's static slice of the
+                # shared cold-store grant (tier-1 pages stay dynamic,
+                # arbitrated max-min by the arbiter).  kv_share raises
+                # on an unknown tenant — falling back to the FULL grant
+                # here would let every mis-named tenant spill N x the
+                # pool's cold bytes.
+                budget = lease.kv_share(tenant, page_size=cfg.page_size)
+            else:
+                base = policy.kv_budget or KVBudget(page_size=cfg.page_size)
+                budget = KVBudget(tier1_pages=base.tier1_pages,
+                                  tier2_bytes=base.tier2_bytes,
+                                  page_size=cfg.page_size)
         if params is None:
             params = model.init(rng if rng is not None
                                 else jax.random.PRNGKey(0))
         return cls(model, params, cfg, budget=budget, cost_model=cost_model,
-                   mesh=mesh, rules=rules)
+                   mesh=mesh, rules=rules, arbiter=arbiter, tenant=tenant)
 
     def _scoped(self, jitted):
         def call(*args):
@@ -307,11 +386,26 @@ class Engine:
         Sub-phases receive the seconds already elapsed *within* this
         step so every event clock lands on the event's modeled time."""
         dt = 0.0
+        if self.arbiter is not None:
+            # swap seconds another tenant's revocation charged to us
+            # since our last step: OUR pages rode the fabric, so OUR
+            # subsequent event clocks absorb the time
+            dt += self.arbiter.take_charge(self.tenant)
         dt += self._relieve_pressure(dt)
         dt += self._swap_in(dt)
         dt += self._admit(dt)
         dt += self._decode_once(dt)
+        if dt == 0.0 and self._queue and not self._paused \
+                and all(s is None for s in self._slots):
+            # nothing runnable and the FIFO head has not arrived yet:
+            # idle-advance to its arrival (the same jump run_trace makes)
+            # so directly-submitted future-dated requests make progress
+            nxt = self._queue[0].request.arrival_time
+            if nxt > self.clock:
+                self.advance_clock(nxt)
         self.clock += dt
+        if dt > 0.0:
+            self.busy_s += dt
         self.steps += 1
         return dt
 
@@ -332,6 +426,21 @@ class Engine:
         if self.cfg.reserve_lifetime:
             return self.budget.pages_for(st.target_len)
         return self.budget.pages_for(st.index + 1)
+
+    def _page_demand(self) -> int:
+        """This engine's current want for hot pages (running + paused
+        next-token demand, plus the queue head's admission need) — the
+        demand signal the arbiter's max-min water-filling splits the
+        shared pool over."""
+        d = sum(self._pages_next(s) for s in self._slots if s is not None)
+        d += sum(self._pages_next(s) for s in self._paused)
+        if self._queue:
+            st = self._queue[0]
+            if self.cfg.reserve_lifetime:
+                d += self.budget.pages_for(st.target_len)
+            else:
+                d += self.budget.pages_for(len(st.effective_prompt()) + 1)
+        return d
 
     def _bucket_len(self, plen: int) -> int:
         for b in self._buckets:
@@ -357,9 +466,10 @@ class Engine:
         growth pages — evicting the coldest paused pages as needed."""
         dt = 0.0
         running = self._running()
-        while running:
+        allow = self.kv.allowance()     # == num_pages for a private pool;
+        while running:                  # the live fair share under an arbiter
             demand = sum(self._pages_next(s) for s in running)
-            if demand <= self.kv.num_pages:
+            if demand <= allow and self._growth_deliverable(running):
                 break
             self._pause(running.pop())          # newest admission
         for st in running:
@@ -371,6 +481,21 @@ class Engine:
                 for lp, phys in zip(range(have, want), new_phys):
                     self._table[st.slot, lp] = phys
         return dt
+
+    def _growth_deliverable(self, running: List[_SlotState]) -> bool:
+        """Can this step's growth pages actually be freed?  Sources:
+        the free stack + revocation headroom (``hot_free``) plus our own
+        paused sequences' hot pages (always evictable or droppable).
+        For a private pool ``demand <= num_pages`` already implies this
+        (growth = demand - held ≤ free + paused-hot), so the check only
+        bites under an arbiter — another tenant may sit over its share
+        with all rows *running* (nothing revocable until ITS next step
+        pauses them), and growing into that gap must wait."""
+        growth = sum(max(0, self._pages_next(s) - self.kv.pages_of(s.rid))
+                     for s in running if self.kv.holds(s.rid))
+        own_evictable = sum(self.kv.hot_count(s.rid) for s in self._paused
+                            if self.kv.holds(s.rid))
+        return growth <= self.kv.hot_free + own_evictable
 
     def _pause(self, st: _SlotState) -> None:
         """Deschedule a running row.  Costless: its pages STAY hot until
@@ -395,13 +520,20 @@ class Engine:
         first (admission order breaking ties); within a victim, the
         oldest-written (lowest-logical) pages go first."""
         dt = 0.0
-        while self.kv.hot_free < n_pages:
+        # snapshot the revocation headroom once: under an arbiter,
+        # hot_free re-runs the max-min water-filling over every tenant,
+        # and this loop would otherwise recompute it per evicted page.
+        # Own evictions only grow the free stack, so the cached slack
+        # stays a valid (conservative) lower bound.  Private pool: 0.
+        slack = self.kv.hot_free - self.kv.free_count
+        while self.kv.free_count + slack < n_pages:
             victims = [s for s in self._paused
                        if s not in protect and self.kv.hot_count(s.rid) > 0]
             if not victims:
                 break               # nothing evictable; caller re-checks
             victim = min(victims, key=lambda s: (s.last_sched, s.admit_seq))
-            dt += self._evict_or_drop(victim, n_pages - self.kv.hot_free)
+            dt += self._evict_or_drop(
+                victim, n_pages - slack - self.kv.free_count)
         return dt
 
     def _evict_or_drop(self, st: _SlotState, need: int) -> float:
@@ -414,16 +546,7 @@ class Engine:
             # requeue it for re-prefill
             self._drop_for_recompute(st)
             return 0.0
-        table = self.kv.page_table(st.rid)
-        chosen = hot[:k]
-        idx = jnp.asarray(np.asarray([table[lp] for lp in chosen], np.int32))
-        gathered = jax.tree.map(lambda l: np.asarray(l[:, idx]), self._pool)
-        for i, lp in enumerate(chosen):
-            self.kv.evict(st.rid, lp,
-                          jax.tree.map(lambda g, i=i: g[:, i], gathered))
-        st.handle.swaps += 1        # one spill episode: k pages, one bulk
-                                    # transfer over the capacity fabric
-        return self.cost.swap_s(k * self.kv.page_bytes)
+        return evict_pages(self._pool, self.kv, st, hot[:k], self.cost)
 
     def _drop_for_recompute(self, st: _SlotState) -> None:
         self.kv.free(st.rid)
@@ -441,12 +564,19 @@ class Engine:
         moved.  When nothing is running, liveness demands progress: the
         head of the pause queue may evict newer-paused pages to fit."""
         dt = 0.0
+        allow = self.kv.allowance()
+        run_demand = sum(self._pages_next(s) for s in self._slots
+                         if s is not None)
         while self._paused:
             st = self._paused[0]
             slot = self._free_slot()
             if slot is None:
                 break
             want = self._pages_next(st)
+            if run_demand + want > allow:
+                break       # resuming would overshoot the fair share the
+                            # pressure phase just enforced (flap guard —
+                            # paused pages must stay revocable)
             missing = (len(self.kv.cold_logicals(st.rid))
                        + max(0, want - self.kv.pages_of(st.rid)))
             if missing > self.kv.hot_free:
@@ -455,13 +585,22 @@ class Engine:
                 dt += self._make_room(missing, protect=(st,))
                 if missing > self.kv.hot_free:
                     break
-            self._paused.popleft()
+            # resume BEFORE popping: mid-resume the sequence must stay
+            # visible to the arbiter's demand accounting (its fetches/
+            # growth are what the fair share is being claimed for)
             dt += self._resume_into(st, slot, want)
+            self._paused.popleft()
+            run_demand += want
         return dt
 
     def _resume_into(self, st: _SlotState, slot: int, want: int) -> float:
         dt = 0.0
         cold = self.kv.cold_logicals(st.rid)
+        # reserve all physical pages this resume needs in one go: the
+        # per-page fetch loop below would otherwise trigger one
+        # revocation episode (and one setup latency on the victim's
+        # clock) per cold page instead of one bulk transfer
+        self.kv.prepare(len(cold) + max(0, want - self.kv.pages_of(st.rid)))
         if cold:
             fetched = [self.kv.fetch(st.rid, lp) for lp in cold]
             idx = jnp.asarray(np.asarray([p for p, _ in fetched], np.int32))
@@ -494,6 +633,10 @@ class Engine:
             if self._paused:
                 break
             st = self._queue[0]
+            if st.request.arrival_time > self.clock + elapsed + dt:
+                break   # not arrived yet on the modeled clock: admitting
+                        # (and decoding) it now would emit tokens BEFORE
+                        # its arrival and drive ttft/latency negative
             if self.budget.pages_for(st.target_len) > self.kv.num_pages:
                 self._queue.popleft()
                 st.handle.status = RequestStatus.FAILED_OOM
@@ -506,8 +649,11 @@ class Engine:
                     else self.budget.pages_for(len(eff) + 1))
             if slot is None or need > self.kv.hot_free:
                 break
-            self._queue.popleft()
+            # prefill BEFORE popping: while its pages are allocated the
+            # request must stay visible (as queue head) to the arbiter's
+            # demand accounting, or its fair share evaporates mid-admit
             dt += self._prefill_into(st, slot, eff, elapsed + dt)
+            self._queue.popleft()
         return dt
 
     def _prefill_into(self, st: _SlotState, slot: int,
@@ -621,17 +767,25 @@ class Engine:
         recomputes = sum(h.recomputes for h in self.handles.values())
         swaps = sum(h.swaps for h in self.handles.values())
         preempts = sum(h.preempts for h in self.handles.values())
-        return {
+        out = {
             "clock_s": self.clock,
             "steps": self.steps,
+            "busy_s": self.busy_s,
             "queue_depth": len(self._queue),
             "running": n_running,
             "swapped": len(self._paused),
             "completed": len(done),
             "failed_oom": len(failed),
             "tokens_decoded": self._decoded_tokens,
+            # clock_s includes idle inter-arrival gaps (advance_clock),
+            # so this number is arbitrarily diluted on sparse traces —
+            # it is the *offered-load* rate, kept for trace comparisons
             "throughput_tok_s": (self._decoded_tokens / self.clock
                                  if self.clock > 0 else 0.0),
+            # decode rate while the engine is actually working: the
+            # hardware-capability number benchmarks should quote
+            "throughput_busy_tok_s": (self._decoded_tokens / self.busy_s
+                                      if self.busy_s > 0 else 0.0),
             "preempts": preempts,
             "preempt_swaps": swaps,
             "preempt_recomputes": recomputes,
@@ -639,3 +793,7 @@ class Engine:
             "prefill_compiles": self.prefill_compiles(),
             "kv": self.kv.residency(),
         }
+        if self.arbiter is not None:
+            out["tenant"] = self.tenant
+            out["allowance"] = self.kv.allowance()
+        return out

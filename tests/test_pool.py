@@ -181,6 +181,37 @@ def test_scheduler_end_to_end_semantics():
     assert s["n_finished"] == 4
 
 
+def test_scheduler_partial_horizon_accounts_tail_window():
+    """run(until=...) with a job straddling the horizon must accrue
+    util/granted areas and makespan up to ``until`` — pre-fix the
+    accounting stopped at the last *processed* event (admission at t=0)
+    and partial-horizon utilization was wildly overstated."""
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=2, global_batch_seqs=64)
+
+    def fresh():
+        s = Scheduler(small_inventory("scalepool"))
+        s.submit(PoolJob("j", sim.MEGATRON, par, n_steps=50))
+        return s
+
+    full = fresh().run()
+    T = full.records["j"].finish_t
+    assert T > 0
+
+    sched = fresh()
+    half = sched.run(until=T / 2)
+    assert half.records["j"].finish_t is None          # straddles ``until``
+    assert half.makespan == pytest.approx(T / 2)
+    assert half.util_area == pytest.approx(4 * T / 2)  # 4 accels, busy
+    assert half.utilization == pytest.approx(full.utilization)
+    # resuming past the horizon completes the job with no double counting
+    rest = sched.run()
+    assert rest.records["j"].finish_t == pytest.approx(T)
+    assert rest.util_area == pytest.approx(full.util_area)
+    # a drained schedule keeps its natural makespan even for finite until
+    done = fresh().run(until=10 * T)
+    assert done.makespan == pytest.approx(T)
+
+
 def test_scalepool_beats_baseline_on_burst():
     """The tentpole claim at test scale: composable pooling admits a
     memory-heavy burst with less stranding and shorter completion."""

@@ -343,6 +343,59 @@ def test_engine_failed_oom_clock_consistent(model, params):
     assert big.done_clock <= eng.clock
 
 
+def test_engine_future_arrival_never_decoded_early(model, params):
+    """A request submitted directly (not via run_trace) with a future
+    arrival_time must not be admitted before the modeled clock reaches
+    it — pre-fix it was enqueued and decoded immediately, stamping
+    first_token_clock BEFORE submit_clock and driving ttft/latency
+    negative."""
+    eng = Engine.local(model, _cfg(), params=params)
+    h = eng.submit(Request((1, 2, 3, 4), 4, arrival_time=0.5))
+    assert h.submit_clock == 0.5
+    dt = eng.step()                     # gated: nothing to do but wait
+    assert h.tokens == [] and h.status is RequestStatus.QUEUED
+    assert dt == 0.0 and eng.clock == 0.5    # idle-advance to arrival
+    eng.run_until_idle()
+    assert h.status is RequestStatus.DONE
+    assert h.first_token_clock >= 0.5
+    assert h.ttft is not None and h.ttft > 0
+    assert h.latency is not None and h.latency > h.ttft > 0
+    _check_clock_invariants([h])
+
+
+def test_engine_future_arrivals_keep_fifo_order(model, params):
+    """Arrival gating is head-of-line: a later-submitted request with an
+    earlier arrival still waits behind the FIFO head (determinism over
+    opportunism), and both complete with non-negative clocks."""
+    eng = Engine.local(model, _cfg(), params=params)
+    first = eng.submit(Request((1, 2, 3), 3, arrival_time=1.0))
+    second = eng.submit(Request((4, 5, 6), 3, arrival_time=0.25))
+    eng.run_until_idle()
+    assert first.first_token_clock <= second.first_token_clock
+    for h in (first, second):
+        assert h.ttft > 0 and h.latency > 0
+    # the head was served at its arrival, not at the earlier one
+    assert first.first_token_clock >= 1.0
+
+
+def test_engine_busy_throughput_not_idle_diluted(model, params):
+    """stats(): total-clock throughput is diluted by idle inter-arrival
+    gaps (advance_clock), so a sparse trace reports an arbitrarily low
+    rate; busy_s / throughput_busy_tok_s must reflect only worked time."""
+    eng = Engine.local(model, _cfg(), params=params)
+    trace = [Request((1, 2, 3), 4, arrival_time=0.0),
+             Request((4, 5, 6), 4, arrival_time=100.0)]
+    run_trace(eng, trace)
+    s = eng.stats()
+    assert s["clock_s"] > 100.0
+    assert 0.0 < s["busy_s"] < 1.0
+    assert s["throughput_busy_tok_s"] == pytest.approx(
+        s["tokens_decoded"] / s["busy_s"])
+    # the diluted number is >100x off on this trace; the busy number
+    # is invariant to the gap
+    assert s["throughput_busy_tok_s"] > 100 * s["throughput_tok_s"]
+
+
 def test_latency_summary_nearest_rank():
     def h(lat):
         rh = RequestHandle(rid=0, request=Request((1,), 1),
