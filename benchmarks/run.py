@@ -12,8 +12,8 @@ import sys
 
 from benchmarks import (ablations, collectives_bench, fig6_llm_training,
                         fig7_serving_engine, fig7_tiered_memory,
-                        fig8_composability, fig9_multitenant, pool_scale,
-                        roofline, table1_links)
+                        fig8_composability, fig9_multitenant,
+                        fig10_contention, pool_scale, roofline, table1_links)
 
 SUITES = {
     "fig6": fig6_llm_training,
@@ -21,6 +21,7 @@ SUITES = {
     "fig7serve": fig7_serving_engine,
     "fig8": fig8_composability,
     "fig9mt": fig9_multitenant,
+    "fig10": fig10_contention,
     "table1": table1_links,
     "poolscale": pool_scale,
     "collectives": collectives_bench,

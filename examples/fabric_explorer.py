@@ -1,6 +1,7 @@
 """Explore ScalePool fabric topologies (paper §4, Figure 4a): compare
 Clos / 3D-torus / DragonFly CXL fabrics and cluster counts on collective
-cost, and reproduce the hybrid-fabric speedup sweep.
+cost, reproduce the hybrid-fabric speedup sweep, walk routed paths over
+the estate graph, and trace two tenants contending on one tier-2 trunk.
 
     PYTHONPATH=src python examples/fabric_explorer.py
 """
@@ -33,3 +34,49 @@ for w in FIG6_WORKLOADS:
                        make_system("scalepool", w.par.n_gpus, calib))
     print(f"{w.model.name:10s} {base.total/sp.total:.3f}x "
           f"(comm {base.comm_inter_raw:.3f}s -> {sp.comm_inter_raw:.3f}s)")
+
+# ---------------------------------------------------------------------------
+# routed estate graph: where a transfer actually goes (repro.fabric)
+# ---------------------------------------------------------------------------
+from repro.fabric import Topology, Transport
+from repro.pool import build_inventory
+
+inv = build_inventory(n_pods=4, pod_size=8, n_memory_nodes=2,
+                      memory_node_gb=1024.0)
+topo = Topology.from_inventory(inv, accels=True)
+print(f"\n== routed estate graph: {topo.describe()} ==")
+for src, dst in [("accel:0.3", "mem:0"), ("pod:1", "mem:1"),
+                 ("pod:0", "pod:3")]:
+    r = topo.route(src, dst)
+    hops = " -> ".join([r.src] + [l.dst for l in r.links])
+    print(f"{src:>10s} -> {dst:<6s} {hops}")
+    print(f"{'':>21s}lat={r.latency()*1e6:.2f}us "
+          f"bottleneck={r.bandwidth():.0f}GB/s "
+          f"64MiB={r.transfer_time(64 * (1 << 20))*1e3:.2f}ms")
+
+# collectives can be priced on a route instead of a whole FabricSpec
+r03 = topo.route("pod:0", "pod:3")
+print(f"allreduce 1GiB over 4 pods on that route: "
+      f"{cm.allreduce_time(r03, GB, 4)*1e3:.1f}ms")
+
+# ---------------------------------------------------------------------------
+# two tenants contending on one capacity trunk (the fig10 mechanism)
+# ---------------------------------------------------------------------------
+print("\n== two-tenant contention timeline (shared tier-2 trunk) ==")
+tx = Transport(topo)
+ra = topo.route("pod:0", "mem:0")
+rb = topo.route("pod:1", "mem:0")       # same memory node: shared trunk+port
+nbytes = 256 * (1 << 20)
+solo = ra.transfer_time(nbytes)
+done_a = tx.begin_transfer(ra, nbytes, 0.0)
+print(f"t=0.000s tenant A begins 256MiB  -> solo ETA {done_a*1e3:.2f}ms "
+      f"(estimate at begin time; B's arrival will stretch the reality)")
+t_b = solo / 2
+done_b = tx.begin_transfer(rb, nbytes, t_b)
+print(f"t={t_b*1e3:.2f}ms tenant B begins 256MiB -> completes at "
+      f"{done_b*1e3:.2f}ms ({(done_b - t_b)/solo:.2f}x its solo time; "
+      f"fair-shared with A's residual)")
+late = tx.begin_transfer(rb, nbytes, 2 * done_b)
+print(f"t={2*done_b*1e3:.2f}ms idle trunk: B again -> "
+      f"{(late - 2*done_b)*1e3:.2f}ms = solo ETA again")
+print(f"transport: {tx.stats()}")

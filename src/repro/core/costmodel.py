@@ -1,10 +1,18 @@
-"""Collective-communication and transfer cost model over fabric specs.
+"""Collective-communication and transfer cost model over fabrics/routes.
 
 Implements standard alpha-beta collective algorithms (ring / tree /
 hierarchical two-level) on top of ``repro.core.fabric`` transfer-time
 primitives, plus the hierarchical ScalePool schedule the paper's §4
 describes: bulk intra-cluster movement on XLink, inter-cluster phase on
 the CXL fabric, with no software stack on the data path.
+
+Every function takes a ``Fabric`` — anything implementing the
+``transfer_time(nbytes, contention=...)`` contract.  That is either
+the legacy closed-form ``core.fabric.FabricSpec`` OR a routed
+``repro.fabric.Route`` from ``Topology.route(src, dst)``, so collective
+costs can be priced on the actual hop list between two endpoints of
+the estate graph (per-hop latency accumulates; serialization is paid
+at the route's bottleneck link) instead of a whole-fabric aggregate.
 
 All functions return seconds.
 """
@@ -13,19 +21,26 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import TYPE_CHECKING, Optional, Union
 
 from repro.core.fabric import FabricSpec
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.fabric import Route
+
+# anything pricing transfer_time(nbytes, contention=): a closed-form
+# fabric spec or a routed hop list over the estate graph
+Fabric = Union[FabricSpec, "Route"]
 
 GB = 1e9
 
 
-def p2p_time(fabric: FabricSpec, nbytes: int) -> float:
+def p2p_time(fabric: Fabric, nbytes: int) -> float:
     """One point-to-point message (pipeline-parallel activations, KV ship)."""
     return fabric.transfer_time(nbytes)
 
 
-def ring_allreduce_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
+def ring_allreduce_time(fabric: Fabric, nbytes: int, n: int) -> float:
     """Ring all-reduce of an ``nbytes`` buffer over ``n`` ranks.
 
     2*(n-1) steps, each moving nbytes/n per rank.  Latency term pays the
@@ -38,14 +53,14 @@ def ring_allreduce_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
     return steps * fabric.transfer_time(chunk)
 
 
-def reduce_scatter_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
+def reduce_scatter_time(fabric: Fabric, nbytes: int, n: int) -> float:
     if n <= 1 or nbytes <= 0:
         return 0.0
     chunk = max(1, math.ceil(nbytes / n))
     return (n - 1) * fabric.transfer_time(chunk)
 
 
-def all_gather_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
+def all_gather_time(fabric: Fabric, nbytes: int, n: int) -> float:
     """All-gather where each rank ends with ``nbytes`` total (ring)."""
     if n <= 1 or nbytes <= 0:
         return 0.0
@@ -53,7 +68,7 @@ def all_gather_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
     return (n - 1) * fabric.transfer_time(chunk)
 
 
-def tree_allreduce_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
+def tree_allreduce_time(fabric: Fabric, nbytes: int, n: int) -> float:
     """Binary-tree reduce+broadcast — latency-optimal for small buffers."""
     if n <= 1 or nbytes <= 0:
         return 0.0
@@ -61,7 +76,7 @@ def tree_allreduce_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
     return 2 * depth * fabric.transfer_time(nbytes)
 
 
-def allreduce_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
+def allreduce_time(fabric: Fabric, nbytes: int, n: int) -> float:
     """Best of ring / tree (what a tuned collective library would pick)."""
     if n <= 1 or nbytes <= 0:
         return 0.0
@@ -69,7 +84,7 @@ def allreduce_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
                tree_allreduce_time(fabric, nbytes, n))
 
 
-def all_to_all_time(fabric: FabricSpec, nbytes_per_rank: int, n: int) -> float:
+def all_to_all_time(fabric: Fabric, nbytes_per_rank: int, n: int) -> float:
     """All-to-all (MoE dispatch): each rank sends nbytes_per_rank to each
     other rank; serialized through its single injection port."""
     if n <= 1 or nbytes_per_rank <= 0:
@@ -82,8 +97,8 @@ class HierarchicalDomains:
     """Two-level communication domain: ``intra`` fabric groups of size
     ``intra_size`` stitched by an ``inter`` fabric across ``n_groups``."""
 
-    intra: FabricSpec
-    inter: FabricSpec
+    intra: Fabric
+    inter: Fabric
     intra_size: int
     n_groups: int
 
@@ -124,7 +139,7 @@ def flat_allreduce_time(dom: HierarchicalDomains, nbytes: int) -> float:
     return steps * dom.inter.transfer_time(chunk)
 
 
-def broadcast_time(fabric: FabricSpec, nbytes: int, n: int) -> float:
+def broadcast_time(fabric: Fabric, nbytes: int, n: int) -> float:
     if n <= 1 or nbytes <= 0:
         return 0.0
     return math.ceil(math.log2(n)) * fabric.transfer_time(nbytes)

@@ -372,3 +372,21 @@ def rdma_storage_tier(fabric: FabricSpec, capacity_gb: float = 1 << 20) -> Memor
     return MemoryTierSpec("RDMA-remote", capacity_gb * GB,
                           2.0 * hw_latency, fabric.bandwidth(),
                           sw_overhead=fabric.link.sw_overhead)
+
+
+# ---------------------------------------------------------------------------
+# Thin re-export shim for the routed-fabric package.  The *routed* graph
+# (endpoint topology, min-hop routes, contended link sharing) lives in
+# ``repro.fabric``; this module keeps the per-link analytical models it
+# builds on.  ``Topology`` here remains the endpoint-count -> hop-count
+# closed form above; the node/edge graph is exposed as ``TopologyGraph``.
+# Lazy to avoid a core <-> fabric import cycle.
+# ---------------------------------------------------------------------------
+
+def __getattr__(name: str):
+    if name in ("Transport", "Route", "Link", "TopologyGraph"):
+        import repro.fabric as _routed
+        return {"Transport": _routed.Transport, "Route": _routed.Route,
+                "Link": _routed.Link,
+                "TopologyGraph": _routed.Topology}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

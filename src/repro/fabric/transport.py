@@ -1,0 +1,245 @@
+"""Contended transfer pricing over a routed ``Topology``.
+
+``Transport`` is the ONE place modeled transfer seconds come from: it
+tracks every in-flight transfer on the fabric and prices each by
+*interval-based max-min fair sharing* of link bandwidth.  Between
+events (a transfer starting or finishing) every flow drains at its
+max-min fair rate — on each link, unfrozen flows split the residual
+capacity evenly; the most-contended link freezes its flows first
+(progressive filling / water-filling, the standard fluid flow model).
+When a transfer starts or finishes, everything sharing a link with it
+is re-rated.
+
+``begin_transfer(route, nbytes, t) -> completion_time`` registers the
+transfer and returns its completion under the *current* in-flight set
+(future arrivals will slow flows further; like any online model the
+returned time is the best estimate at begin time — by construction it
+is exact whenever nothing else arrives, and a lower bound otherwise).
+
+Two guarantees the rest of the repo builds on:
+
+* **solo exactness** — a transfer whose route carries no other flow
+  completes in exactly ``route.latency() + nbytes /
+  route.bottleneck_bw`` seconds, the same float the legacy
+  ``ServeCostModel.swap_s`` computed, so single-tenant degenerate
+  runs are bit-identical to the pre-``repro.fabric`` engine;
+* **no free lunch** — k concurrent transfers over a shared link each
+  finish no earlier than the serial solo transfer (fair sharing never
+  exceeds link capacity); the property suite in
+  ``tests/test_fabric_transport.py`` pins both.
+
+The transport owns a modeled clock frontier (``now``): transfers
+beginning in another consumer's past (engines interleave on their own
+clocks) are clamped forward to it, keeping link state causal.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.fabric.topology import Link, Route, Topology
+
+# a flow whose residue dips below this is finished: absorbs the float
+# dust of ``(now + rem/rate) - now`` round trips (up to ~rate * ulp(now)
+# bytes) so back-to-back sequential transfers take the exact solo fast
+# path instead of "contending" with a ghost holding micro-bytes.  A
+# thousandth of a byte at fabric rates is ~1e-12 modeled seconds.
+_EPS_BYTES = 1e-3
+
+
+@dataclass
+class _Flow:
+    fid: int
+    route: Route
+    remaining: float                  # payload bytes left to serialize
+    started: float
+    completion: Optional[float] = None   # estimate returned at begin time
+
+
+class Transport:
+    """Owns the in-flight transfer set (and the modeled clock frontier)
+    for one fabric ``Topology``."""
+
+    def __init__(self, topology: Topology):
+        self.topology = topology
+        self.now = 0.0                  # clock frontier (last event time)
+        self._flows: Dict[int, _Flow] = {}
+        self._fid = itertools.count()
+        # observability
+        self.transfers = 0
+        self.bytes_moved = 0.0
+        self.peak_inflight = 0
+        self.contended_transfers = 0    # began while sharing >= 1 link
+
+    # ---- public API ------------------------------------------------------
+    def route(self, src: str, dst: str) -> Route:
+        return self.topology.route(src, dst)
+
+    def begin_transfer(self, route: Route, nbytes: float,
+                       t: Optional[float] = None) -> float:
+        """Start a transfer of ``nbytes`` payload bytes at modeled time
+        ``t`` (>= the frontier; earlier begins are clamped forward).
+        Returns the modeled completion time.  In-flight transfers
+        sharing any link are re-rated from ``t`` on."""
+        return self._begin(route, nbytes, t)[0]
+
+    def transfer_s(self, route: Route, nbytes: float,
+                   t: Optional[float] = None) -> float:
+        """``begin_transfer`` returning the *duration* as seen from the
+        requested begin time.  A begin dated before the frontier waits
+        for it (causality), and that wait is part of the returned
+        duration — so a consumer charging sequential transfers on its
+        own (possibly lagging) clock starts each one after the last
+        completed instead of stacking them onto one frontier instant
+        and contending with itself.  On the solo path the duration is
+        the exact ``latency + nbytes/bw`` float (no ``(t + d) - t``
+        rounding), so callers accumulating step deltas stay
+        bit-identical to the pre-transport cost models."""
+        t_req = self.now if t is None else float(t)
+        completion, solo, t_eff = self._begin(route, nbytes, t_req)
+        if solo and nbytes > 0 and t_eff == t_req:
+            return route.latency() + nbytes / route.bottleneck_bw
+        return completion - t_req
+
+    def _begin(self, route: Route, nbytes: float,
+               t: Optional[float]) -> Tuple[float, bool, float]:
+        """Shared begin path: (completion, was_solo, effective_begin)."""
+        t = self.now if t is None else max(float(t), self.now)
+        self._advance(t)
+        self.transfers += 1
+        self.bytes_moved += max(0.0, nbytes)
+        if nbytes <= 0:
+            return t + route.latency(), True, t
+        solo = not any(self._on_link(l) for l in route.links)
+        flow = _Flow(next(self._fid), route, float(nbytes), t)
+        self._flows[flow.fid] = flow
+        self.peak_inflight = max(self.peak_inflight, len(self._flows))
+        if solo:
+            # exact solo formula — bit-identical to the legacy
+            # ServeCostModel.swap_s path (and to Route.transfer_time)
+            flow.completion = t + (route.latency()
+                                   + nbytes / route.bottleneck_bw)
+        else:
+            self.contended_transfers += 1
+            flow.completion = self._project_completion(flow.fid) \
+                + route.latency()
+        return flow.completion, solo, t
+
+    @property
+    def inflight(self) -> int:
+        return len(self._flows)
+
+    def link_flows(self, link_name: str) -> int:
+        """In-flight transfers currently crossing ``link_name``."""
+        link = self.topology.links[link_name]
+        return sum(1 for f in self._flows.values() if link in f.route.links)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "now_s": self.now,
+            "transfers": self.transfers,
+            "bytes_moved": self.bytes_moved,
+            "inflight": len(self._flows),
+            "peak_inflight": self.peak_inflight,
+            "contended_transfers": self.contended_transfers,
+        }
+
+    # ---- fluid simulation ------------------------------------------------
+    def _on_link(self, link: Link) -> bool:
+        return any(link in f.route.links for f in self._flows.values())
+
+    def _rates(self, remaining: Dict[int, float]) -> Dict[int, float]:
+        """Max-min fair rate per flow (progressive filling): repeatedly
+        find the most-contended link, freeze its flows at the equal
+        split of its residual capacity, remove them, repeat."""
+        rates: Dict[int, float] = {}
+        live = set(remaining)
+        residual = {name: l.capacity for name, l in self.topology.links.items()}
+        members: Dict[str, List[int]] = {}
+        for fid in sorted(live):
+            for l in self._flows[fid].route.links:
+                members.setdefault(l.name, []).append(fid)
+        while live:
+            # bottleneck link: smallest equal share among links with
+            # unfrozen flows (ties broken by link name: deterministic)
+            best: Optional[Tuple[float, str]] = None
+            for name, fids in members.items():
+                unfrozen = [f for f in fids if f in live]
+                if not unfrozen:
+                    continue
+                share = residual[name] / len(unfrozen)
+                if best is None or (share, name) < best:
+                    best = (share, name)
+            if best is None:        # flows with no shared-capacity links
+                for fid in live:
+                    rates[fid] = self._flows[fid].route.bottleneck_bw
+                break
+            share, name = best
+            for fid in [f for f in members[name] if f in live]:
+                rates[fid] = share
+                live.discard(fid)
+                for l in self._flows[fid].route.links:
+                    residual[l.name] -= share
+            residual = {k: max(0.0, v) for k, v in residual.items()}
+        return rates
+
+    def _drain_interval(self, remaining: Dict[int, float], now: float,
+                        cap: Optional[float] = None
+                        ) -> Tuple[float, List[int]]:
+        """One fluid interval shared by ``_advance`` and
+        ``_project_completion``: drain ``remaining`` in place from
+        ``now`` to the earlier of ``cap`` and the earliest finish
+        event, at current max-min rates.  Returns ``(horizon, finished
+        fids)``.  A flow whose computed finish time sets (or precedes)
+        the horizon is finished *by that event*, not by its float
+        residue — ``(now + rem/rate) - now`` round-trips are not
+        exact — with the residue epsilon as a backstop."""
+        rates = self._rates(remaining)
+        fts = {fid: now + rem / rates[fid]
+               for fid, rem in remaining.items()
+               if rates.get(fid, 0.0) > 0}
+        if not fts and cap is None:
+            raise RuntimeError("transport: in-flight set cannot drain "
+                               "(zero-rate flow)")
+        horizon = min(fts.values()) if fts else cap
+        if cap is not None:
+            horizon = min(horizon, cap)
+        dt = horizon - now
+        finished: List[int] = []
+        for fid in list(remaining):
+            remaining[fid] -= rates.get(fid, 0.0) * dt
+            if fts.get(fid, float("inf")) <= horizon \
+                    or remaining[fid] <= _EPS_BYTES:
+                finished.append(fid)
+        return horizon, finished
+
+    def _advance(self, t: float) -> None:
+        """Drain every in-flight flow from the frontier to ``t``,
+        re-rating at each completion event in between."""
+        while self.now < t and self._flows:
+            remaining = {fid: f.remaining for fid, f in self._flows.items()}
+            horizon, finished = self._drain_interval(remaining, self.now,
+                                                     cap=t)
+            for fid, rem in remaining.items():
+                self._flows[fid].remaining = rem
+            for fid in finished:
+                del self._flows[fid]
+            self.now = horizon
+        self.now = max(self.now, t)
+
+    def _project_completion(self, target: int) -> float:
+        """Forward-simulate the current in-flight set (no future
+        arrivals) until ``target`` drains; pure projection — real state
+        is only advanced by ``_advance`` as begin times arrive."""
+        remaining = {fid: f.remaining for fid, f in self._flows.items()}
+        now = self.now
+        for _ in range(len(remaining) + 1):
+            horizon, finished = self._drain_interval(remaining, now)
+            if target in finished:
+                return horizon
+            for fid in finished:
+                del remaining[fid]
+            now = horizon
+        raise RuntimeError("transport projection failed to converge")

@@ -7,10 +7,12 @@ Two policies realize the paper's §6 comparison at the *resource* level:
     granularity, pod selection minimizes CXL hop count (single pod →
     shared leaf switch → full fabric), and capacity requests are
     reserved on tier-2 memory nodes independently of compute.  Tier-2
-    *bandwidth* is a second per-node schedulable resource: concurrent
-    offload-heavy jobs contend on the capacity fabric, so a job reserves
-    bytes/s alongside bytes and admission fails when the fabric is
-    oversubscribed.  A slice of the tier-2 byte reservation may be
+    *bandwidth* is a second schedulable resource, admitted against the
+    routed estate graph (``repro.fabric.Topology``): a reservation
+    claims its bytes/s on every link of the pod -> memory-node route,
+    so concurrent offload-heavy jobs are refused not just when a node
+    is saturated but when a *shared* link (the spine -> capacity-switch
+    trunk) is.  A slice of the tier-2 byte reservation may be
     earmarked as a KV grant (``kv_bytes``) — the quantity a serving
     lease turns into a ``KVBudget`` for the ``repro.serve`` engine.
 
@@ -231,6 +233,19 @@ class Allocator:
             m.id: m.capacity for m in inventory.memory_nodes}
         self._free_t2bw: Dict[int, float] = {
             m.id: m.bandwidth for m in inventory.memory_nodes}
+        # tier-2 bandwidth admission happens against the routed estate
+        # graph, not just per-node scalars: a reservation claims its
+        # bytes/s on EVERY link of the pod -> memory-node route, so the
+        # shared trunk (spine -> capacity switch) genuinely caps the
+        # aggregate even when individual nodes still have headroom
+        self.topo = (inventory.topology()
+                     if self.policy == "scalepool"
+                     and inventory.tier2_fabric is not None
+                     and inventory.memory_nodes else None)
+        self._link_free: Dict[str, float] = (
+            {name: l.capacity for name, l in self.topo.links.items()}
+            if self.topo is not None else {})
+        self._job_links: Dict[str, List[Tuple[str, float]]] = {}
         self.live: Dict[str, Allocation] = {}
 
     # ---- queries ---------------------------------------------------------
@@ -244,6 +259,15 @@ class Allocator:
 
     def free_tier2_bw(self) -> float:
         return sum(self._free_t2bw.values())
+
+    def free_link_bw(self, link_name: str) -> float:
+        """Unreserved bytes/s on one link of the routed estate graph."""
+        if self.topo is None:
+            raise ValueError(
+                "routed link admission is inactive for this allocator "
+                "(baseline policy, or an inventory without a tier-2 "
+                "fabric / memory nodes)")
+        return self._link_free[link_name]
 
     def fully_free_pods(self) -> List[int]:
         return [p.id for p in self.inv.pods
@@ -272,19 +296,25 @@ class Allocator:
             self._free_t2[node_id] += nbytes
         for node_id, bw in alloc.tier2_bw.items():
             self._free_t2bw[node_id] += bw
+        for link_name, bw in self._job_links.pop(job, ()):
+            self._link_free[link_name] += bw
 
     # ---- transactional snapshot (for preemption / resize trials) ---------
     def snapshot(self):
         """Opaque copy of the allocation state; pair with ``restore`` to
         roll back a failed multi-step operation."""
         return ({k: v.clone() for k, v in self._free.items()},
-                dict(self._free_t2), dict(self._free_t2bw), dict(self.live))
+                dict(self._free_t2), dict(self._free_t2bw), dict(self.live),
+                dict(self._link_free),
+                {k: list(v) for k, v in self._job_links.items()})
 
     def restore(self, snap) -> None:
         self._free = {k: v.clone() for k, v in snap[0].items()}
         self._free_t2 = dict(snap[1])
         self._free_t2bw = dict(snap[2])
         self.live = dict(snap[3])
+        self._link_free = dict(snap[4])
+        self._job_links = {k: list(v) for k, v in snap[5].items()}
 
     # ---- scalepool: composable, hop-minimizing ---------------------------
     def _allocate_scalepool(self, req: JobRequest) -> Optional[Allocation]:
@@ -297,6 +327,9 @@ class Allocator:
         pods = self._pick_pods_min_hops(req.n_accels)
         if pods is None:
             return None
+        link_plan = self._plan_link_bw(min(pods), tier2_bw)
+        if link_plan is None:
+            return None         # a shared link (e.g. the trunk) is full
         # commit: pop the smallest free ids from the chosen pods
         accels: Dict[int, Tuple[int, ...]] = {}
         remaining = req.n_accels
@@ -309,11 +342,36 @@ class Allocator:
             self._free_t2[node_id] -= nbytes
         for node_id, bw in tier2_bw.items():
             self._free_t2bw[node_id] -= bw
+        for link_name, bw in link_plan:
+            self._link_free[link_name] -= bw
+        if link_plan:
+            self._job_links[req.name] = link_plan
         return Allocation(req.name, accels, tier2, req.n_accels,
                           whole_pods=False, tier2_requested=req.tier2_bytes,
                           kv_bytes=req.kv_bytes, tier2_bw=tier2_bw,
                           tier2_bw_requested=req.tier2_bw,
                           tenants=req.tenants)
+
+    def _plan_link_bw(self, gateway_pod: int, tier2_bw: Dict[int, float]
+                      ) -> Optional[List[Tuple[str, float]]]:
+        """Admission-check a per-node bandwidth split against the routed
+        estate graph: each node's bytes/s must fit on EVERY link of the
+        ``pod:<gateway> -> mem:<node>`` route (the job's offload traffic
+        egresses its primary pod — a first-order gateway model; links
+        shared between routes, the spine->t2sw trunk above all, see the
+        aggregate).  Returns the per-link reservation list, or None if
+        any link lacks headroom.  Plan-only: nothing is mutated."""
+        if not tier2_bw or self.topo is None:
+            return []
+        claim: Dict[str, float] = {}
+        for node_id, bw in sorted(tier2_bw.items()):
+            route = self.topo.route(f"pod:{gateway_pod}", f"mem:{node_id}")
+            for link in route.links:
+                claim[link.name] = claim.get(link.name, 0.0) + bw
+        for name, bw in claim.items():
+            if bw > self._link_free[name] + 1e-6:
+                return None
+        return sorted(claim.items())
 
     def _pick_pods_min_hops(self, n: int) -> Optional[List[int]]:
         """Pod set minimizing (span hops, pod count): single pod best-fit,
@@ -437,3 +495,16 @@ class Allocator:
             if abs(bw + self._free_t2bw[m.id] - m.bandwidth) > 1e-3:
                 raise AssertionError(
                     f"memory node {m.id}: bandwidth conservation violated")
+        if self.topo is not None:
+            held: Dict[str, float] = {}
+            for job, links in self._job_links.items():
+                if job not in self.live:
+                    raise AssertionError(
+                        f"link reservations for dead job {job!r}")
+                for name, bw in links:
+                    held[name] = held.get(name, 0.0) + bw
+            for name, link in self.topo.links.items():
+                reserved = held.get(name, 0.0)
+                if abs(reserved + self._link_free[name] - link.capacity) > 1e-3:
+                    raise AssertionError(
+                        f"link {name}: bandwidth conservation violated")

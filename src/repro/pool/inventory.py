@@ -70,6 +70,12 @@ class Inventory:
     inter_fabric: fb.FabricSpec           # pod-to-pod fabric (CXL or IB)
     tier2_fabric: Optional[fb.FabricSpec] # capacity fabric; None = baseline
     interconnect: str = "scalepool"       # scalepool | baseline
+    # shared spine -> capacity-switch trunk bandwidth (bytes/s) of the
+    # routed estate graph; 0 = full bisection (sum of memory-node
+    # bandwidths).  An oversubscribed trunk makes aggregate tier-2
+    # bandwidth a *fabric* constraint the allocator admission-controls,
+    # not just a per-node one.
+    tier2_trunk_bw: float = 0.0
 
     # ---- sizes -----------------------------------------------------------
     @property
@@ -126,6 +132,15 @@ class Inventory:
     def leaf_of(self, pod_id: int) -> int:
         return pod_id // self.pods_per_leaf
 
+    def topology(self, *, accels: bool = False):
+        """The routed estate graph (``repro.fabric.Topology``): pods,
+        CXL leaf/spine switch tiers, the capacity-fabric switch, and
+        tier-2 memory nodes — the graph the allocator admission-
+        controls ``tier2_bw`` reservations on and serving transports
+        route transfers over."""
+        from repro.fabric import Topology
+        return Topology.from_inventory(self, accels=accels)
+
     def describe(self) -> str:
         t2 = (f"{self.total_tier2 / GB:.0f}GB tier-2 over "
               f"{len(self.memory_nodes)} nodes" if self.memory_nodes
@@ -144,6 +159,7 @@ def build_inventory(
     n_memory_nodes: int = 8,
     memory_node_gb: float = 4096.0,
     memory_node_gbps: Optional[float] = None,
+    tier2_trunk_gbps: Optional[float] = None,
     interconnect: str = "scalepool",
     xlink: fb.LinkSpec = fb.NVLINK5,
 ) -> Inventory:
@@ -172,4 +188,6 @@ def build_inventory(
     else:
         raise ValueError(f"unknown interconnect {interconnect!r}")
     return Inventory(pods=pods, memory_nodes=nodes, inter_fabric=inter,
-                     tier2_fabric=tier2, interconnect=interconnect)
+                     tier2_fabric=tier2, interconnect=interconnect,
+                     tier2_trunk_bw=(tier2_trunk_gbps * GB
+                                     if tier2_trunk_gbps is not None else 0.0))

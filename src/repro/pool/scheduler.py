@@ -18,6 +18,14 @@ resource fairness over ⟨accels, tier-2 bytes, tier-2 bandwidth⟩: each
 admission round offers resources to the user with the smallest dominant
 share, and jobs naming the same ``gang`` admit all-or-nothing (a
 partially-placed gang would strand resources waiting for its peers).
+
+Gangs may be declared with ``PoolJob.gang_size``: members submitted at
+*different* timestamps are held in a pending-gang buffer until the
+gang is complete, then queued together and admitted atomically (in
+both queueing modes) — an early member can never admit alone.  Tier-2
+bandwidth demands are admitted by the allocator against the routed
+estate graph's link capacities (``repro.fabric``), so the shared
+capacity-fabric trunk caps the aggregate, not just per-node scalars.
 """
 
 from __future__ import annotations
@@ -52,6 +60,11 @@ class PoolJob:
     # ``gang`` are co-scheduled all-or-nothing (submit them together).
     user: str = ""
     gang: str = ""
+    # declared gang width: members submitted at *different* timestamps
+    # are held in the scheduler's pending-gang buffer until this many
+    # have arrived, then queued (and admitted) together.  0 = undeclared
+    # (legacy: whatever is queued at one timestamp is the gang).
+    gang_size: int = 0
 
     @property
     def n_accels(self) -> int:
@@ -60,6 +73,14 @@ class PoolJob:
     @property
     def drf_user(self) -> str:
         return self.user or self.name
+
+    @property
+    def gang_key(self) -> Tuple[str, str]:
+        # RAW user, not drf_user: the drf fallback (user or name) would
+        # scatter a no-user gang's members across per-job keys and hold
+        # each "1/N-member gang" forever.  A gang belongs to one user;
+        # all-unset is one user too.
+        return (self.user, self.gang)
 
 
 def offload_bytes(model: sim.LLMConfig,
@@ -178,6 +199,10 @@ class Scheduler:
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = 0
         self._queue: List[PoolJob] = []
+        # partial gangs (gang_size declared, not all members arrived):
+        # held OUT of the admission queue so an early member can never
+        # admit alone — all-or-nothing needs the whole gang visible
+        self._pending_gangs: Dict[Tuple[str, str], List[PoolJob]] = {}
         self._running: Dict[str, _Running] = {}
         self.records: Dict[str, JobRecord] = {}
         self.trace: List[str] = []
@@ -216,6 +241,10 @@ class Scheduler:
         # ``until``; an already-drained schedule keeps its natural end.
         if math.isfinite(until) and (self._events or self._running):
             self._advance(until)
+        for (user, gang), buf in sorted(self._pending_gangs.items()):
+            want = max(j.gang_size for j in buf)
+            self._log(f"WARNING gang {gang!r} incomplete at end of run: "
+                      f"{len(buf)}/{want} members held, never admitted")
         return ScheduleResult(
             records=self.records, trace=self.trace, makespan=self._now,
             util_area=self._util_area, granted_area=self._granted_area,
@@ -225,9 +254,33 @@ class Scheduler:
     # ---- internals -------------------------------------------------------
     def _handle(self, kind: str, data) -> None:
         if kind == "submit":
-            self._queue.append(data)
             self._log(f"submit {data.name} "
                       f"(n={data.n_accels}, t2={data.tier2_bytes/1e9:.0f}GB)")
+            if data.gang:
+                held = self._pending_gangs.get(data.gang_key)
+                if held is not None and data.gang_size != held[0].gang_size:
+                    # a mixed declaration either splits the gang (an
+                    # undeclared member admits alone) or strands it (a
+                    # too-big size never completes) — both silently
+                    raise ValueError(
+                        f"{data.name}: gang {data.gang!r} declared with "
+                        f"gang_size={held[0].gang_size} but this member "
+                        f"says {data.gang_size} — every member of a "
+                        f"gang must declare the same size")
+            if data.gang and data.gang_size > 1:
+                buf = self._pending_gangs.setdefault(data.gang_key, [])
+                buf.append(data)
+                want = buf[0].gang_size
+                if len(buf) < want:
+                    self._log(f"hold {data.name} "
+                              f"(gang {data.gang!r} {len(buf)}/{want})")
+                    return
+                del self._pending_gangs[data.gang_key]
+                self._queue.extend(buf)
+                self._log(f"gang {data.gang!r} complete "
+                          f"({len(buf)} jobs) -> queue")
+                return
+            self._queue.append(data)
         elif kind == "finish":
             name, epoch = data
             run = self._running.get(name)
@@ -294,10 +347,14 @@ class Scheduler:
 
     def _try_admit_with_preemption(self, job: PoolJob) -> bool:
         """Head-of-line high-priority admission: preempt newest lowest-
-        priority victims until the job fits (all-or-nothing)."""
+        priority victims until the job fits (all-or-nothing).  Members
+        of a declared gang are not preemptable — yanking one would
+        leave its peers running, breaking the gang's all-or-nothing
+        placement (gang-wide preemption is a follow-up)."""
         victims = sorted(
             (r for r in self._running.values()
-             if r.job.priority < job.priority),
+             if r.job.priority < job.priority
+             and not (r.job.gang and r.job.gang_size > 1)),
             key=lambda r: (r.job.priority, -r.seg_start, r.job.name))
         if not victims:
             return False
@@ -338,20 +395,48 @@ class Scheduler:
 
     def _admit_fifo(self) -> None:
         # FIFO with optional backfill; preemption only for head-of-line.
+        # Declared gangs (gang_size > 1) are one queue unit: admitted
+        # via the all-or-nothing path or skipped whole.
+        pending = self._gang_groups()
+        self._queue = []            # preemption victims requeue here
         still_queued: List[PoolJob] = []
         head_blocked = False
-        for i, job in enumerate(self._queue):
+        i = 0
+        while i < len(pending):
+            group = pending[i]
+            i += 1
             if head_blocked and not self.backfill:
-                still_queued.append(job)
+                still_queued.extend(group)
                 continue
-            if self._try_admit(job):
+            if len(group) > 1:
+                if self._try_admit_gang(group):
+                    continue
+            elif self._try_admit(group[0]):
                 continue
-            if i == 0 and job.priority > 0 and \
-                    self._try_admit_with_preemption(job):
+            elif i == 1 and group[0].priority > 0 and \
+                    self._try_admit_with_preemption(group[0]):
+                # victims were requeued onto self._queue: give them the
+                # same later-in-this-round shot the pre-group code did
+                pending.extend([j] for j in self._queue)
+                self._queue = []
                 continue
             head_blocked = True
-            still_queued.append(job)
+            still_queued.extend(group)
         self._queue = still_queued
+
+    def _gang_groups(self) -> List[List[PoolJob]]:
+        """Queue order preserved; jobs of one declared gang collapse
+        into a single group at the first member's position."""
+        groups: Dict[Tuple, List[PoolJob]] = {}
+        order: List[Tuple] = []
+        for job in self._queue:
+            key = (job.gang_key if job.gang and job.gang_size > 1
+                   else ("", job.name, id(job)))
+            if key not in groups:
+                groups[key] = []
+                order.append(key)
+            groups[key].append(job)
+        return [groups[k] for k in order]
 
     # ---- DRF queueing (gang-aware) ----------------------------------------
     def _dominant_share(self, user: str) -> float:
@@ -399,16 +484,19 @@ class Scheduler:
             gangs: Dict[Tuple[str, str], List[PoolJob]] = {}
             order: List[Tuple[str, str]] = []
             for job in self._queue:
-                key = (job.drf_user, job.gang or job.name)
+                key = job.gang_key if job.gang else (job.drf_user, job.name)
                 if key not in gangs:
                     gangs[key] = []
                     order.append(key)
                 gangs[key].append(job)
-            users = sorted({k[0] for k in order},
+            # gang identity keys on the raw user; fairness accounts stay
+            # on drf_user (which falls back to the job name when unset)
+            user_of = {k: gangs[k][0].drf_user for k in order}
+            users = sorted({user_of[k] for k in order},
                            key=lambda u: (self._dominant_share(u), u))
             admitted = None
             for user in users:
-                key = next(k for k in order if k[0] == user)
+                key = next(k for k in order if user_of[k] == user)
                 if self._try_admit_gang(gangs[key]):
                     admitted = {id(j) for j in gangs[key]}
                     break

@@ -116,7 +116,17 @@ class EngineConfig:
 class ServeCostModel:
     """Modeled event costs (seconds).  Defaults derive from the paper's
     hardware constants: decode steps are weight-read bound on HBM, swap
-    traffic rides the capacity-oriented CXL fabric (§5)."""
+    traffic rides the capacity-oriented CXL fabric (§5).
+
+    Transfer pricing note: the tier-2 constants here are a *facade*
+    over a degenerate 1-link ``repro.fabric`` route — ``transport()``
+    builds the equivalent ``Transport``, and a solo transfer on it
+    costs exactly ``swap_s(nbytes)``.  Engines charge spill/fetch
+    through a transport, so several consumers of one fabric genuinely
+    contend; an engine constructed without an explicit
+    ``transport=``/``route=`` gets a private degenerate one from this
+    model and reproduces the legacy numbers bit-exactly.
+    """
 
     prefill_s_per_token: float = 2e-5
     decode_s_per_step: float = 2e-3    # batched step, weight-bound floor
@@ -128,6 +138,14 @@ class ServeCostModel:
     def from_fabric(n_param_bytes: float,
                     hbm_bw: float = 8000.0 * GB,
                     tier2: Optional[fb.FabricSpec] = None) -> "ServeCostModel":
+        """DEPRECATED (kept working): collapses the whole tier-2 fabric
+        into two scalars, so every consumer prices as if it had the
+        fabric to itself.  Migration: keep the compute-side constants,
+        but share one ``repro.fabric.Transport`` across consumers —
+        build ``Topology.from_inventory(pool_inventory)`` (or any
+        explicit graph), take per-consumer ``topology.route(...)``s,
+        and pass ``Engine(..., transport=, route=)`` so concurrent
+        transfers fair-share the actual links."""
         t2 = tier2 or fb.tier2_memory_fabric(8)
         return ServeCostModel(
             prefill_s_per_token=max(1e-6, n_param_bytes / hbm_bw / 8),
@@ -136,9 +154,28 @@ class ServeCostModel:
             tier2_bw=t2.bandwidth() * GB,
             tier2_lat=t2.latency())
 
+    def resolved_tier2_bw(self) -> float:
+        """The swap bandwidth actually priced (bytes/s)."""
+        return self.tier2_bw or fb.tier2_memory_fabric(8).bandwidth() * GB
+
+    def degenerate_topology(self):
+        """The 1-link ``repro.fabric.Topology`` equivalent to this
+        model's tier-2 scalars (route ``"src" -> "dst"``)."""
+        from repro.fabric import Topology
+        return Topology.degenerate(self.resolved_tier2_bw(), self.tier2_lat,
+                                   name="ServeCostModel[tier2]")
+
+    def transport(self):
+        """A private ``Transport`` over ``degenerate_topology()`` — the
+        facade engines fall back to when no shared fabric is passed."""
+        from repro.fabric import Transport
+        return Transport(self.degenerate_topology())
+
     def swap_s(self, nbytes: float) -> float:
-        bw = self.tier2_bw or fb.tier2_memory_fabric(8).bandwidth() * GB
-        return self.tier2_lat + nbytes / bw
+        """Solo transfer seconds on the degenerate route (legacy name).
+        A transport-routed transfer with no concurrent flows returns
+        this exact float."""
+        return self.tier2_lat + nbytes / self.resolved_tier2_bw()
 
     def prefill_s(self, n_tokens: int) -> float:
         return self.prefill_s_per_token * n_tokens

@@ -283,8 +283,12 @@ class PoolArbiter:
                 t.engine._drop_for_recompute(victim)
                 self.recompute_drops += 1
                 continue
+            # the victim's pages ride ITS tier-2 route: register the
+            # transfer on the victim engine's transport at its clock
+            # (the charge lands on its next step via take_charge), so
+            # on a shared fabric even revocation traffic contends
             cost = evict_pages(self.pool, t.kv, victim, hot[:k],
-                               t.engine.cost)
+                               t.engine, t.engine.clock)
             t.charge_s += cost
             t.charged_total_s += cost
             self.revoked_pages += k

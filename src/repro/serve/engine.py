@@ -43,9 +43,14 @@ for any arrival interleaving, any physical page layout, and for
 lease-backed vs local construction (the engine's determinism contract,
 enforced by tests).
 
-Time is *modeled*: a ``ServeCostModel`` prices prefill/decode/page-swap
-events from the paper's fabric constants, so latency distributions are
-hardware-derived even when the host is a CPU smoke run.
+Time is *modeled*: a ``ServeCostModel`` prices prefill/decode events
+from the paper's fabric constants, and page-swap traffic is charged
+through a ``repro.fabric.Transport`` (pass ``transport=``/``route=``
+to put several engines on one shared routed fabric, where concurrent
+transfers fair-share each link's bandwidth — the contention the
+paper's shared CXL hierarchy implies).  Without an explicit transport
+the engine owns a private degenerate 1-link one derived from the cost
+model, reproducing the legacy ``swap_s`` scalars bit-exactly.
 
 Multi-tenant: passing ``arbiter=``/``tenant=`` joins a shared
 ``repro.serve.PoolArbiter`` page pool instead of owning a private one —
@@ -80,14 +85,28 @@ def _dtype(d):
         "float16": jnp.float16}[d]
 
 
-def evict_pages(pool, kv, st, logicals, cost) -> float:
+def _pow2_buckets(start: int, cap: int) -> List[int]:
+    """Doubling sizes from ``start`` up to (and always including) ``cap``."""
+    out: List[int] = []
+    b = start
+    while b < cap:
+        out.append(b)
+        b *= 2
+    out.append(cap)
+    return out
+
+
+def evict_pages(pool, kv, st, logicals, engine, t) -> float:
     """Spill one batch of ``st``'s hot logical pages to ``kv``'s tier-2
     cold store: gather the physical pages from the device pool (one
     bulk copy), evict each, and record one swap episode on the handle.
-    Returns the modeled swap seconds — the caller decides whose clock
-    absorbs them (the engine's own step dt, or the victim tenant's
-    revocation charge).  Shared by ``Engine._evict_or_drop`` and
-    ``PoolArbiter.reclaim`` so the two eviction paths cannot diverge."""
+    The bulk transfer is registered with ``engine``'s transport at
+    modeled time ``t`` (so concurrent tenants on a shared fabric
+    contend); returns the modeled swap seconds — the caller decides
+    whose clock absorbs them (the engine's own step dt, or the victim
+    tenant's revocation charge).  Shared by ``Engine._evict_or_drop``
+    and ``PoolArbiter.reclaim`` so the two eviction paths cannot
+    diverge."""
     table = kv.page_table(st.rid)
     idx = jnp.asarray(np.asarray([table[lp] for lp in logicals], np.int32))
     gathered = jax.tree.map(lambda l: np.asarray(l[:, idx]), pool)
@@ -95,7 +114,7 @@ def evict_pages(pool, kv, st, logicals, cost) -> float:
         kv.evict(st.rid, lp, jax.tree.map(lambda g, i=i: g[:, i], gathered))
     st.handle.swaps += 1        # one spill episode: len(logicals) pages,
                                 # one bulk transfer over the capacity fabric
-    return cost.swap_s(len(logicals) * kv.page_bytes)
+    return engine.charge_tier2(len(logicals) * kv.page_bytes, t)
 
 
 @dataclasses.dataclass(eq=False)        # identity semantics: these live in
@@ -138,7 +157,8 @@ class Engine:
                  budget: Optional[KVBudget] = None,
                  cost_model: Optional[ServeCostModel] = None,
                  mesh=None, rules=None,
-                 arbiter=None, tenant: Optional[str] = None):
+                 arbiter=None, tenant: Optional[str] = None,
+                 transport=None, route=None):
         if model.cfg.family == "encdec":
             raise NotImplementedError(
                 "Engine drives decoder-style models; encdec serving still "
@@ -154,6 +174,16 @@ class Engine:
         self.params = params
         self.cfg = cfg
         self.mesh, self.rules = mesh, rules
+        # tier-2 transfer routing: a shared repro.fabric Transport (+
+        # this engine's route on it) makes concurrent tenants contend
+        # on the actual links; without one, the engine owns a private
+        # degenerate 1-link transport derived from its cost model —
+        # pricing identical (bit-exact) to the legacy swap_s scalars
+        if (transport is None) != (route is None):
+            raise ValueError("pass transport= and route= together")
+        self._transport = transport
+        self._transport_owned = transport is None
+        self.route = route
         self.cost = cost_model or ServeCostModel.from_fabric(
             2.0 * model.cfg.param_count())
 
@@ -233,14 +263,17 @@ class Engine:
         # prefill buckets: page-aligned powers of two capped at the slot
         # capacity — the jit program count is bounded by len(buckets),
         # not by the number of distinct prompt lengths in the trace
-        cap = cfg.pages_per_slot * cfg.page_size
-        self._buckets: List[int] = []
-        b = cfg.page_size
-        while b < cap:
-            self._buckets.append(b)
-            b *= 2
-        self._buckets.append(cap)
+        self._buckets = _pow2_buckets(cfg.page_size,
+                                      cfg.pages_per_slot * cfg.page_size)
         self._buckets_used: set = set()
+
+        # decode row buckets: live rows are gathered into the smallest
+        # power-of-two row count (capped at max_slots) before the paged
+        # decode, so a near-empty engine decodes a 1- or 2-row batch
+        # instead of all max_slots rows — compiled-program count stays
+        # bounded by len(row buckets), not by occupancy histories
+        self._row_buckets = _pow2_buckets(1, cfg.max_slots)
+        self._row_buckets_used: set = set()
 
         self._prefill_jit = jax.jit(
             lambda p, batch, cache, last: model.prefill_at(
@@ -271,22 +304,60 @@ class Engine:
         else:
             self._pool_store = value
 
+    # ---- transfer pricing --------------------------------------------------
+    @property
+    def cost(self) -> ServeCostModel:
+        return self._cost
+
+    @cost.setter
+    def cost(self, cm: ServeCostModel) -> None:
+        self._cost = cm
+        if self._transport_owned:
+            # the private degenerate transport prices from the cost
+            # model's tier-2 scalars: rebuild lazily so the benchmark
+            # idiom ``eng.cost = replace(cm, tier2_bw=...)`` keeps swap
+            # pricing in sync
+            self._transport = None
+            self.route = None
+
+    @property
+    def transport(self):
+        """The ``repro.fabric.Transport`` tier-2 traffic is charged
+        through.  Shared across engines it makes tenants contend on
+        the fabric's links; the lazily-built private fallback is the
+        cost model's degenerate 1-link facade."""
+        if self._transport is None:
+            self._transport = self._cost.transport()
+            self.route = self._transport.topology.route("src", "dst")
+        return self._transport
+
+    def charge_tier2(self, nbytes: float, t: float) -> float:
+        """Modeled seconds for one bulk tier-2 transfer beginning at
+        modeled time ``t``, fair-sharing links with every transfer
+        already in flight on this engine's transport."""
+        tx = self.transport            # materializes self.route too
+        return tx.transfer_s(self.route, nbytes, t)
+
     # ---- construction ----------------------------------------------------
     @classmethod
     def local(cls, model: Model, cfg: EngineConfig = EngineConfig(), *,
               params=None, rng=None,
               budget: Optional[KVBudget] = None,
               cost_model: Optional[ServeCostModel] = None,
-              arbiter=None, tenant: Optional[str] = None) -> "Engine":
+              arbiter=None, tenant: Optional[str] = None,
+              transport=None, route=None) -> "Engine":
         """Engine over local devices, no orchestrator: the KV budget is
         whatever the caller passes (default: unbudgeted tier-1, no
         tier-2).  Pass ``arbiter``/``tenant`` to join a shared
-        multi-tenant page pool instead of owning a private one."""
+        multi-tenant page pool, and ``transport``/``route`` to charge
+        tier-2 traffic on a shared routed fabric instead of a private
+        degenerate link."""
         if params is None:
             params = model.init(rng if rng is not None
                                 else jax.random.PRNGKey(0))
         return cls(model, params, cfg, budget=budget, cost_model=cost_model,
-                   arbiter=arbiter, tenant=tenant)
+                   arbiter=arbiter, tenant=tenant,
+                   transport=transport, route=route)
 
     @classmethod
     def from_lease(cls, model: Model, lease,
@@ -294,7 +365,8 @@ class Engine:
                    params=None, rng=None,
                    budget: Optional[KVBudget] = None,
                    cost_model: Optional[ServeCostModel] = None,
-                   arbiter=None, tenant: Optional[str] = None) -> "Engine":
+                   arbiter=None, tenant: Optional[str] = None,
+                   transport=None, route=None) -> "Engine":
         """Bind a ``repro.pool.Lease``: the lease's mesh shapes the
         sharding rules and its tier-2 KV grant becomes the engine's
         ``KVBudget.tier2_bytes`` — serving capacity is composed by the
@@ -322,7 +394,8 @@ class Engine:
             params = model.init(rng if rng is not None
                                 else jax.random.PRNGKey(0))
         return cls(model, params, cfg, budget=budget, cost_model=cost_model,
-                   mesh=mesh, rules=rules, arbiter=arbiter, tenant=tenant)
+                   mesh=mesh, rules=rules, arbiter=arbiter, tenant=tenant,
+                   transport=transport, route=route)
 
     def _scoped(self, jitted):
         def call(*args):
@@ -459,6 +532,14 @@ class Engine:
             return self._prefill_jit._cache_size()
         return len(self._buckets_used)  # pragma: no cover
 
+    def decode_compiles(self) -> int:
+        """Compiled paged-decode program count — bounded by the pow2
+        row-bucket list, not by the trace's occupancy history (same
+        caveat as ``prefill_compiles`` without cache introspection)."""
+        if hasattr(self._decode_jit, "_cache_size"):
+            return self._decode_jit._cache_size()
+        return len(self._row_buckets_used)  # pragma: no cover
+
     # ---- pressure relief / paging ----------------------------------------
     def _relieve_pressure(self, elapsed: float) -> float:
         """Deschedule newest-admitted rows until the remaining running
@@ -476,7 +557,7 @@ class Engine:
             want = self._pages_next(st)
             have = self.kv.pages_of(st.rid)
             if want > have:
-                dt += self._make_room(want - have)
+                dt += self._make_room(want - have, t=elapsed + dt)
                 new_phys = self.kv.grow(st.rid, want)
                 for lp, phys in zip(range(have, want), new_phys):
                     self._table[st.slot, lp] = phys
@@ -512,13 +593,15 @@ class Engine:
         self._paused.append(st)     # insertion order == pause order; the
                                     # resume policy pops from the front
 
-    def _make_room(self, n_pages: int, protect: Sequence[_SlotState] = ()
-                   ) -> float:
+    def _make_room(self, n_pages: int, protect: Sequence[_SlotState] = (),
+                   t: float = 0.0) -> float:
         """Free physical pages by evicting the coldest paused pages to
         tier-2 (or dropping victims for recompute when the byte budget
         is exhausted).  Coldness: least-recently-scheduled sequence
         first (admission order breaking ties); within a victim, the
-        oldest-written (lowest-logical) pages go first."""
+        oldest-written (lowest-logical) pages go first.  ``t`` is the
+        seconds already elapsed within this step — spill transfers
+        begin at ``clock + t`` on the transport."""
         dt = 0.0
         # snapshot the revocation headroom once: under an arbiter,
         # hot_free re-runs the max-min water-filling over every tenant,
@@ -533,10 +616,10 @@ class Engine:
                 break               # nothing evictable; caller re-checks
             victim = min(victims, key=lambda s: (s.last_sched, s.admit_seq))
             dt += self._evict_or_drop(
-                victim, n_pages - slack - self.kv.free_count)
+                victim, n_pages - slack - self.kv.free_count, t + dt)
         return dt
 
-    def _evict_or_drop(self, st: _SlotState, need: int) -> float:
+    def _evict_or_drop(self, st: _SlotState, need: int, t: float) -> float:
         hot = self.kv.hot_logicals(st.rid)
         k = min(need, len(hot), self.kv.tier2_free_pages())
         if k <= 0:
@@ -546,7 +629,8 @@ class Engine:
             # requeue it for re-prefill
             self._drop_for_recompute(st)
             return 0.0
-        return evict_pages(self._pool, self.kv, st, hot[:k], self.cost)
+        return evict_pages(self._pool, self.kv, st, hot[:k], self,
+                           self.clock + t)
 
     def _drop_for_recompute(self, st: _SlotState) -> None:
         self.kv.free(st.rid)
@@ -582,18 +666,20 @@ class Engine:
             if missing > self.kv.hot_free:
                 if any(s is not None for s in self._slots):
                     break           # decode will free pages; wait
-                dt += self._make_room(missing, protect=(st,))
+                dt += self._make_room(missing, protect=(st,),
+                                      t=elapsed + dt)
                 if missing > self.kv.hot_free:
                     break
             # resume BEFORE popping: mid-resume the sequence must stay
             # visible to the arbiter's demand accounting (its fetches/
             # growth are what the fair share is being claimed for)
-            dt += self._resume_into(st, slot, want)
+            dt += self._resume_into(st, slot, want, elapsed + dt)
             self._paused.popleft()
             run_demand += want
         return dt
 
-    def _resume_into(self, st: _SlotState, slot: int, want: int) -> float:
+    def _resume_into(self, st: _SlotState, slot: int, want: int,
+                     elapsed: float) -> float:
         dt = 0.0
         cold = self.kv.cold_logicals(st.rid)
         # reserve all physical pages this resume needs in one go: the
@@ -613,7 +699,8 @@ class Engine:
 
             self._pool = jax.tree.map(put, self._pool,
                                       *[pl for _, pl in fetched])
-            dt = self.cost.swap_s(len(cold) * self.kv.page_bytes)
+            dt = self.charge_tier2(len(cold) * self.kv.page_bytes,
+                                   self.clock + elapsed)
         self.kv.grow(st.rid, want)
         for lp, phys in enumerate(self.kv.page_table(st.rid)):
             self._table[slot, lp] = phys
@@ -732,6 +819,12 @@ class Engine:
                 self._slots[st.slot] = None
                 st.slot = None
 
+    def _row_bucket(self, n_live: int) -> int:
+        for b in self._row_buckets:
+            if b >= n_live:
+                return b
+        raise AssertionError(f"{n_live} live rows > max_slots")
+
     def _decode_once(self, elapsed: float) -> float:
         running = self._running()
         if not running:
@@ -740,16 +833,30 @@ class Engine:
             self._lengths[st.slot] = st.index
             self._slot_tok[st.slot] = st.cur_tok
             st.last_sched = self.steps
-        toks = jnp.asarray(self._slot_tok[:, None])
-        table = jnp.asarray(self._table)
-        lengths = jnp.asarray(self._lengths)
+        # gather live rows into a pow2 row bucket: pad with idle slots
+        # (trash page table, length 0 — exactly what a full-array
+        # decode feeds for them), so the decode batch shrinks with
+        # occupancy while per-row outputs stay identical
+        bucket = self._row_bucket(len(running))
+        self._row_buckets_used.add(bucket)
+        rows = [st.slot for st in running]
+        if bucket < self.cfg.max_slots:
+            idle = [i for i, s in enumerate(self._slots) if s is None]
+            sel = np.asarray(rows + idle[:bucket - len(rows)], np.int32)
+        else:
+            sel = np.arange(self.cfg.max_slots, dtype=np.int32)
+            rows = list(sel)                # full array: row == slot
+        toks = jnp.asarray(self._slot_tok[sel][:, None])
+        table = jnp.asarray(self._table[sel])
+        lengths = jnp.asarray(self._lengths[sel])
         new_toks, self._pool = self._decode_fn(self.params, toks,
                                                self._pool, table, lengths)
         new_toks = np.asarray(new_toks)
+        pos = {slot: i for i, slot in enumerate(rows)}
         cost = self.cost.decode_s(len(running))
         at = self.clock + elapsed + cost
         for st in running:
-            tok = int(new_toks[st.slot, 0])
+            tok = int(new_toks[pos[st.slot], 0])
             st.index += 1
             st.cur_tok = tok
             self._decoded_tokens += 1
@@ -791,8 +898,13 @@ class Engine:
             "preempt_recomputes": recomputes,
             "prefill_buckets": list(self._buckets),
             "prefill_compiles": self.prefill_compiles(),
+            "decode_row_buckets": list(self._row_buckets),
+            "decode_compiles": self.decode_compiles(),
             "kv": self.kv.residency(),
         }
+        # the property materializes the lazy private transport so the
+        # key is schema-stable whether or not a swap ever happened
+        out["transport"] = self.transport.stats()
         if self.arbiter is not None:
             out["tenant"] = self.tenant
             out["allowance"] = self.kv.allowance()

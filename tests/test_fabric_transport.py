@@ -1,0 +1,283 @@
+"""repro.fabric validation: routed topology shape, min-hop routing,
+and the contended Transport's pricing contracts — monotonicity in
+bytes and hop count, bit-exact degenerate-route parity with the legacy
+``ServeCostModel.swap_s`` / ``FabricSpec.transfer_time`` numbers, and
+the no-free-lunch bound (k concurrent same-route transfers each finish
+no earlier than the serial solo transfer)."""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_compat import given, settings, st
+
+from repro.core import costmodel as cm
+from repro.core import fabric as fb
+from repro.fabric import Route, Topology, Transport
+from repro.pool import build_inventory
+from repro.serve.api import ServeCostModel
+
+GB = 1e9
+
+
+def chain_topology(n_links: int, bw: float = 10 * GB,
+                   lat: float = 1e-6) -> Topology:
+    """A line graph of ``n_links`` identical hops: e0 - e1 - ... - en."""
+    topo = Topology(f"chain{n_links}")
+    for i in range(n_links + 1):
+        topo.add_node(f"e{i}")
+    for i in range(n_links):
+        topo.connect(f"e{i}", f"e{i+1}", fb.CXL3, capacity=bw, latency=lat)
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# topology / routing
+# ---------------------------------------------------------------------------
+
+def test_topology_from_inventory_routes():
+    inv = build_inventory(n_pods=4, pod_size=8, n_memory_nodes=2,
+                          memory_node_gb=1024.0, interconnect="scalepool")
+    topo = Topology.from_inventory(inv, accels=True)
+    r = topo.route("pod:0", "mem:1")
+    assert [l.dst for l in r.links] == ["leaf:0", "spine", "t2sw", "mem:1"]
+    assert r.hops == 4
+    # every hop exposes its core.fabric LinkSpec identity
+    assert all(isinstance(s, fb.LinkSpec) for s in r.specs)
+    # accelerator endpoints route through their pod
+    ra = topo.route("accel:2.5", "mem:0")
+    assert ra.links[0].src == "accel:2.5" and ra.links[0].dst == "pod:2"
+    assert ra.hops == 5
+    # memory-node injection link carries the node's bandwidth
+    assert r.links[-1].capacity == pytest.approx(
+        inv.memory_nodes[1].bandwidth)
+    # routes are cached and deterministic
+    assert topo.route("pod:0", "mem:1") is r
+    with pytest.raises(ValueError):
+        topo.route("pod:0", "pod:0")
+    with pytest.raises(KeyError):
+        topo.route("pod:0", "mem:99")
+
+
+def test_route_rejects_discontinuity():
+    topo = chain_topology(3)
+    l01 = topo.route("e0", "e1").links[0]
+    l23 = topo.route("e2", "e3").links[0]
+    with pytest.raises(ValueError, match="discontinuity"):
+        Route((l01, l23))
+
+
+def test_baseline_inventory_has_no_tier2_nodes():
+    inv = build_inventory(n_pods=2, pod_size=8, n_memory_nodes=0,
+                          interconnect="baseline")
+    topo = Topology.from_inventory(inv)
+    assert topo.nodes_of_kind("memory") == []
+    assert topo.route("pod:0", "pod:1").hops == 2   # up to the leaf, down
+
+
+# ---------------------------------------------------------------------------
+# pricing properties
+# ---------------------------------------------------------------------------
+
+@given(nbytes=st.integers(min_value=1, max_value=1 << 30),
+       hops=st.integers(min_value=1, max_value=6))
+@settings(max_examples=40, deadline=None)
+def test_transfer_time_monotone_in_bytes_and_hops(nbytes, hops):
+    """Routed solo pricing grows with payload and with hop count, for
+    both the static Route.transfer_time and the live Transport."""
+    topo = chain_topology(6)
+    route = topo.route("e0", f"e{hops}")
+    assert route.hops == hops
+    t = route.transfer_time(nbytes)
+    assert t >= route.transfer_time(max(1, nbytes // 2))
+    if hops > 1:
+        shorter = topo.route("e0", f"e{hops-1}")
+        assert t > shorter.transfer_time(nbytes)
+    tx = Transport(topo)
+    d = tx.transfer_s(route, nbytes, 0.0)
+    assert d == t      # solo transport == static route pricing
+    d2 = Transport(topo).transfer_s(route, 2 * nbytes, 0.0)
+    assert d2 > d
+
+
+@given(nbytes=st.integers(min_value=1, max_value=1 << 28))
+@settings(max_examples=30, deadline=None)
+def test_degenerate_route_reproduces_swap_s_bit_exactly(nbytes):
+    """A solo transfer on the cost model's degenerate 1-link route is
+    the exact ``swap_s`` float — the engine's backward-compat anchor."""
+    cost = ServeCostModel.from_fabric(1e9)
+    tx = cost.transport()
+    route = tx.topology.route("src", "dst")
+    # sequential (non-overlapping) transfers all stay on the exact path
+    now = 0.0
+    for k in range(4):
+        d = tx.transfer_s(route, nbytes + k, now)
+        assert d == cost.swap_s(nbytes + k)
+        now += d
+
+
+@given(nflits=st.integers(min_value=1, max_value=100000))
+@settings(max_examples=30, deadline=None)
+def test_degenerate_route_matches_fabric_transfer_time(nflits):
+    """from_fabric_spec collapses a FabricSpec into one routed link; a
+    flit-aligned solo transfer prices identically to the closed form."""
+    spec = fb.tier2_memory_fabric(8)
+    topo = Topology.from_fabric_spec(spec)
+    route = topo.route("src", "dst")
+    payload = nflits * spec.link.flit_payload
+    want = spec.transfer_time(payload)
+    assert route.transfer_time(payload) == pytest.approx(want, rel=1e-9)
+    assert Transport(topo).transfer_s(route, payload, 0.0) == \
+        pytest.approx(want, rel=1e-9)
+
+
+@given(k=st.integers(min_value=2, max_value=6),
+       nbytes=st.integers(min_value=1 << 10, max_value=1 << 26))
+@settings(max_examples=30, deadline=None)
+def test_concurrent_transfers_never_beat_serial(k, nbytes):
+    """k transfers started together on one route: fair sharing cannot
+    exceed link capacity, so each finishes no earlier than the solo
+    serial transfer — and the last no earlier than k serial payloads."""
+    topo = chain_topology(2)
+    route = topo.route("e0", "e2")
+    solo = route.transfer_time(nbytes)
+    tx = Transport(topo)
+    completions = [tx.begin_transfer(route, nbytes, 0.0) for _ in range(k)]
+    assert all(c >= solo - 1e-12 for c in completions)
+    serialization = nbytes / route.bottleneck_bw
+    assert max(completions) >= k * serialization - 1e-9
+    assert tx.stats()["contended_transfers"] == k - 1
+
+
+def test_staggered_transfer_re_rated_mid_flight():
+    """A transfer joining halfway through another slows it: with equal
+    payloads of 1 second solo serialization, the late joiner sees the
+    first's residual share the link and completes at t=2."""
+    bw = 8 * GB
+    topo = chain_topology(1, bw=bw, lat=0.0)
+    route = topo.route("e0", "e1")
+    tx = Transport(topo)
+    c1 = tx.begin_transfer(route, bw, 0.0)       # solo estimate: t=1
+    assert c1 == pytest.approx(1.0)
+    c2 = tx.begin_transfer(route, bw / 2, 0.5)   # joins at the halfway mark
+    # [0.5, 1.5): both at bw/2 -> the first's residual and the joiner's
+    # whole payload drain together at t=1.5; solo the joiner would have
+    # finished at 1.0 — the 0.5s slowdown is the first flow's share
+    assert c2 == pytest.approx(1.5)
+    assert tx.peak_inflight == 2
+
+
+def test_transport_clamps_begin_time_to_frontier():
+    """Begins dated before the transport's frontier are pulled forward
+    (engines interleave on their own clocks; link state stays causal)."""
+    topo = chain_topology(1)
+    route = topo.route("e0", "e1")
+    tx = Transport(topo)
+    tx.begin_transfer(route, 1 << 20, 5.0)
+    assert tx.now == 5.0
+    done = tx.begin_transfer(route, 1 << 20, 1.0)   # the past: clamped
+    assert done >= 5.0
+    assert tx.now == 5.0
+
+
+def test_zero_byte_transfer_costs_latency_only():
+    topo = chain_topology(3)
+    route = topo.route("e0", "e3")
+    tx = Transport(topo)
+    assert tx.begin_transfer(route, 0, 1.0) == 1.0 + route.latency()
+    assert tx.inflight == 0
+
+
+# ---------------------------------------------------------------------------
+# routes drop into the collective cost models
+# ---------------------------------------------------------------------------
+
+def test_costmodel_collectives_accept_routes():
+    inv = build_inventory(n_pods=4, pod_size=8, n_memory_nodes=2,
+                          memory_node_gb=1024.0, interconnect="scalepool")
+    topo = Topology.from_inventory(inv)
+    route = topo.route("pod:0", "pod:3")
+    n, nbytes = 4, 64 << 20
+    t_ring = cm.ring_allreduce_time(route, nbytes, n)
+    assert t_ring > 0
+    # same closed forms, fed by the route's latency/bottleneck
+    chunk = -(-nbytes // n)
+    assert t_ring == pytest.approx(2 * (n - 1) * route.transfer_time(chunk))
+    assert cm.p2p_time(route, nbytes) == route.transfer_time(nbytes)
+    dom = cm.HierarchicalDomains(intra=inv.pods[0].fabric, inter=route,
+                                 intra_size=8, n_groups=4)
+    assert cm.hierarchical_allreduce_time(dom, nbytes) > 0
+
+
+# ---------------------------------------------------------------------------
+# engines contending on one shared fabric
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model_and_params():
+    import jax
+
+    from repro.configs import SMOKE_ARCHS
+    from repro.models.api import build_model
+    cfg = SMOKE_ARCHS["qwen1.5-0.5b"].__class__(**{
+        **SMOKE_ARCHS["qwen1.5-0.5b"].__dict__, "compute_dtype": "float32"})
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_engines_on_shared_route_contend(tiny_model_and_params):
+    """Two engines charging tier-2 traffic through ONE transport over a
+    shared bottleneck link see higher swap costs than two engines on
+    private degenerate transports — the fig10 mechanism at test scale."""
+    import dataclasses
+
+    from repro.core.tiering import KVBudget
+    from repro.serve import Engine, EngineConfig, burst_trace, \
+        run_multi_trace
+
+    model, params = tiny_model_and_params
+    cfg = EngineConfig(max_slots=3, max_seq=64, page_size=8)
+    budget = KVBudget(tier1_pages=6, tier2_bytes=1e9, page_size=8)
+
+    def run_pair(shared: bool):
+        eng_kw = []
+        if shared:
+            topo = Topology("shared-t2")
+            for n, k in [("a", "endpoint"), ("b", "endpoint"),
+                         ("sw", "switch"), ("mem", "memory")]:
+                topo.add_node(n, k)
+            page_bw = 2e5     # slow enough that swaps dominate
+            topo.connect("a", "sw", fb.CXL3, capacity=10 * page_bw,
+                         latency=1e-6)
+            topo.connect("b", "sw", fb.CXL3, capacity=10 * page_bw,
+                         latency=1e-6)
+            topo.connect("sw", "mem", fb.CXL_CAPACITY, capacity=page_bw,
+                         latency=1e-6)        # the contended bottleneck
+            tx = Transport(topo)
+            eng_kw = [dict(transport=tx, route=topo.route("a", "mem")),
+                      dict(transport=tx, route=topo.route("b", "mem"))]
+        else:
+            cost = dataclasses.replace(
+                ServeCostModel.from_fabric(1e9), tier2_bw=2e5, tier2_lat=2e-6)
+            eng_kw = [dict(cost_model=cost), dict(cost_model=cost)]
+        engines = [Engine.local(model, cfg, params=params, budget=budget,
+                                **kw) for kw in eng_kw]
+        traces = [burst_trace(5, prompt_len=12, max_new_tokens=10,
+                              vocab=model.cfg.vocab, seed=s)
+                  for s in (0, 1)]
+        handles = run_multi_trace(list(zip(engines, traces)))
+        lat = [h.latency for hs in handles for h in hs]
+        swaps = sum(e.stats()["preempt_swaps"] for e in engines)
+        return max(lat), swaps, engines
+
+    # private route latency/bw match the shared topology's solo route
+    iso_max, iso_swaps, _ = run_pair(shared=False)
+    sh_max, sh_swaps, engines = run_pair(shared=True)
+    assert iso_swaps > 0 and sh_swaps > 0, "no tier-2 pressure exercised"
+    assert engines[0].transport is engines[1].transport
+    assert engines[0].transport.stats()["contended_transfers"] > 0, \
+        "transfers never overlapped on the shared link"
+    assert sh_max > iso_max, (
+        f"shared-fabric worst latency {sh_max} not above isolated {iso_max}")

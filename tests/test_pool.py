@@ -290,6 +290,124 @@ def test_tier2_bandwidth_is_schedulable():
     a.check_conservation()
 
 
+def test_tier2_trunk_link_admission():
+    """Bandwidth admission runs against the routed estate graph: an
+    oversubscribed spine->t2sw trunk refuses an aggregate demand that
+    per-node scalars alone would accept."""
+    inv = build_inventory(n_pods=4, pod_size=8, n_memory_nodes=2,
+                          memory_node_gb=1024.0, memory_node_gbps=40.0,
+                          tier2_trunk_gbps=50.0, interconnect="scalepool")
+    a = Allocator(inv)
+    assert a.free_link_bw("spine->t2sw") == pytest.approx(50 * GB)
+    # 60GB/s fits the nodes (40 + 20) but not the 50GB/s shared trunk
+    assert a.allocate(JobRequest("wide", 4, 64 * GB, tier2_bw=60 * GB)) is None
+    a.check_conservation()
+    assert a.free_tier2_bw() == pytest.approx(80 * GB)   # nothing leaked
+    ok = a.allocate(JobRequest("fits", 4, 64 * GB, tier2_bw=30 * GB))
+    assert ok is not None
+    assert a.free_link_bw("spine->t2sw") == pytest.approx(20 * GB)
+    # a second job under the node caps still bounces off the trunk
+    assert a.allocate(JobRequest("late", 4, 64 * GB, tier2_bw=30 * GB)) is None
+    a.check_conservation()
+    a.release("fits")
+    assert a.free_link_bw("spine->t2sw") == pytest.approx(50 * GB)
+    a.check_conservation()
+
+
+def test_gang_members_submitted_at_different_times_admit_atomically():
+    """ROADMAP PR 4 caveat (fails pre-fix): gang members submitted at
+    different timestamps admitted independently — the first member
+    started alone at t=0 while its peer was still in flight.  With the
+    pending-gang buffer, a declared gang (gang_size) is held until
+    complete and admitted all-or-nothing."""
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=3, global_batch_seqs=66)
+    sched = Scheduler(small_inventory("scalepool"), queueing="drf")
+    for i, t in enumerate([0.0, 1.0]):          # staggered submission
+        sched.submit(PoolJob(f"g{i}", sim.MEGATRON, par, n_steps=10,
+                             submit_t=t, user="u", gang="pair",
+                             gang_size=2))
+    res = sched.run()
+    recs = res.records
+    assert all(r.finish_t is not None for r in recs.values())
+    # neither member may start before the gang is complete at t=1.0 —
+    # pre-fix g0 admitted alone at t=0
+    starts = [recs["g0"].start_t, recs["g1"].start_t]
+    assert min(starts) == pytest.approx(1.0)
+    assert starts[0] == pytest.approx(starts[1])
+    assert any("hold g0" in line for line in res.trace)
+    assert any("admit gang 'pair'" in line for line in res.trace)
+
+
+def test_gang_without_explicit_user_still_assembles():
+    """gang_key must use the RAW user: the drf fallback (user or name)
+    would scatter a no-user gang's members across per-job pending
+    buffers and hold each forever (run() returning with the jobs never
+    started, silently)."""
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=3, global_batch_seqs=66)
+    sched = Scheduler(small_inventory("scalepool"), queueing="drf")
+    for i, t in enumerate([0.0, 1.0]):
+        sched.submit(PoolJob(f"g{i}", sim.MEGATRON, par, n_steps=10,
+                             submit_t=t, gang="pair", gang_size=2))
+    res = sched.run()
+    assert all(r.finish_t is not None for r in res.records.values())
+    assert res.records["g0"].start_t == pytest.approx(1.0)
+    assert not sched._pending_gangs
+    # an incomplete gang is surfaced in the trace, not dropped silently
+    sched2 = Scheduler(small_inventory("scalepool"), queueing="drf")
+    sched2.submit(PoolJob("lone", sim.MEGATRON, par, n_steps=10,
+                          gang="pair", gang_size=2))
+    res2 = sched2.run()
+    assert res2.records["lone"].start_t is None
+    assert any("WARNING gang 'pair' incomplete" in l for l in res2.trace)
+    # mixed gang_size declarations are an error, not a silent split/hold
+    sched3 = Scheduler(small_inventory("scalepool"), queueing="drf")
+    sched3.submit(PoolJob("m1", sim.MEGATRON, par, n_steps=10,
+                          gang="pair", gang_size=2))
+    sched3.submit(PoolJob("m2", sim.MEGATRON, par, n_steps=10,
+                          gang="pair", gang_size=3))
+    with pytest.raises(ValueError, match="gang_size"):
+        sched3.run()
+
+
+def test_priority_preemption_never_splits_a_declared_gang():
+    """FIFO priority preemption must not yank one member of a declared
+    gang while its peers keep running — gang members are not
+    preemptable (all-or-nothing placement holds for their lifetime)."""
+    par = lambda dp: sim.ParallelismConfig(tp=2, pp=1, dp=dp,
+                                           global_batch_seqs=64)
+    sched = Scheduler(small_inventory("scalepool"))
+    for i in range(2):      # gang fills 24 of 32 accels
+        sched.submit(PoolJob(f"g{i}", sim.MEGATRON, par(6), n_steps=30,
+                             submit_t=0.0, user="u", gang="pair",
+                             gang_size=2))
+    # head-of-line high-priority job that cannot fit without preemption
+    sched.submit(PoolJob("hi", sim.MEGATRON, par(8), n_steps=5,
+                         submit_t=1.0, priority=1))
+    res = sched.run()
+    recs = res.records
+    assert recs["g0"].preemptions == 0 and recs["g1"].preemptions == 0
+    assert all(r.finish_t is not None for n, r in recs.items() if n != "hi")
+    # the priority job waits for the gang instead of splitting it
+    assert recs["hi"].start_t >= min(recs["g0"].finish_t,
+                                     recs["g1"].finish_t)
+
+
+def test_gang_buffer_applies_to_fifo_queueing_too():
+    """A declared gang is one FIFO queue unit: held until complete,
+    then placed atomically (or skipped whole)."""
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=3, global_batch_seqs=66)
+    sched = Scheduler(small_inventory("scalepool"))     # fifo
+    sched.submit(PoolJob("g0", sim.MEGATRON, par, n_steps=10, submit_t=0.0,
+                         gang="pair", gang_size=2, user="u"))
+    sched.submit(PoolJob("g1", sim.MEGATRON, par, n_steps=10, submit_t=2.0,
+                         gang="pair", gang_size=2, user="u"))
+    res = sched.run()
+    recs = res.records
+    assert all(r.finish_t is not None for r in recs.values())
+    assert recs["g0"].start_t == pytest.approx(2.0)
+    assert recs["g0"].start_t == pytest.approx(recs["g1"].start_t)
+
+
 def test_scheduler_threads_tier2_bandwidth():
     """Two offload-heavy jobs that together oversubscribe the capacity
     fabric must run serially, not concurrently."""
