@@ -1,0 +1,35 @@
+"""Shared CLI entry for the per-figure benchmark modules.
+
+Every ``fig*.py`` exposes ``run() -> (lines, summary)``; this wraps it
+in the one argparse surface they all share — ``--smoke`` (when the
+module's ``run`` takes it) and ``--json PATH`` (write the headline
+summary as a machine-readable ``repro.obs`` benchmark document instead
+of scraping the CSV stdout).
+"""
+
+from __future__ import annotations
+
+import argparse
+import inspect
+import json
+
+
+def bench_main(name: str, run, argv=None) -> int:
+    ap = argparse.ArgumentParser(prog=name)
+    takes_smoke = "smoke" in inspect.signature(run).parameters
+    if takes_smoke:
+        ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the headline metrics as JSON")
+    args = ap.parse_args(argv)
+    lines, summary = run(smoke=args.smoke) if takes_smoke else run()
+    for line in lines:
+        print(line)
+    print(json.dumps(summary, indent=2, default=str))
+    if args.json:
+        from repro.obs import write_json
+        write_json(args.json, name, summary)
+    ok = summary.get("all_claims_pass", summary.get("ok", True))
+    if summary.get("fail_cells"):
+        ok = False
+    return 0 if ok else 1

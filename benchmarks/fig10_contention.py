@@ -125,20 +125,24 @@ def _topology(kind: str, bw: float) -> Tuple[Topology, Dict[str, object]]:
 
 
 def _run_topology(kind: str, model, full_cfg, params, traces,
-                  bw: float) -> Dict[str, object]:
+                  bw: float, tracer=None) -> Dict[str, object]:
     cfg = EngineConfig(max_slots=SLOTS, max_seq=PROMPT + MAX_NEW,
                        page_size=PAGE)
     topo, routes = _topology(kind, bw)
-    tx = Transport(topo)
+    tx = Transport(topo, tracer=tracer)
     cm = ServeCostModel.from_fabric(2.0 * full_cfg.param_count())
     engines = {}
     for t in TENANTS:
         engines[t] = Engine.local(model, cfg, params=params,
                                   budget=KVBudget(QUOTA, 1e9, PAGE),
                                   cost_model=cm, transport=tx,
-                                  route=routes[t])
+                                  route=routes[t], tenant=t)
     lists = run_multi_trace([(engines[t], traces[t]) for t in TENANTS])
     handles = dict(zip(TENANTS, lists))
+    if tracer is not None:
+        # drain in-flight tails so their link-occupancy spans (and the
+        # per-link busy accounting behind the report) are complete
+        tx.quiesce()
     return {
         "handles": handles,
         "p95": {t: latency_summary(handles[t])["p95_s"] for t in TENANTS},
@@ -146,10 +150,11 @@ def _run_topology(kind: str, model, full_cfg, params, traces,
             [h for hs in lists for h in hs])["p95_s"],
         "swaps": {t: engines[t].stats()["preempt_swaps"] for t in TENANTS},
         "transport": tx.stats(),
+        "tx": tx,
     }
 
 
-def run(smoke: bool = True) -> Tuple[List[str], Dict]:
+def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
     t0 = time.time()
     mcfg = get_config(ARCH, smoke=True)
     full_cfg = get_config(ARCH, smoke=False)
@@ -170,7 +175,15 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
                                              page_size=PAGE),
                          params=params, budget=KVBudget(QUOTA, 1e9, PAGE))
     bw = _page_bw(full_cfg, probe.kv.page_bytes)
-    results = {k: _run_topology(k, model, full_cfg, params, traces, bw)
+    # tracing is passive (events record already-computed modeled times),
+    # so the traced shared run stays bit-identical to the untraced one —
+    # the tokens_invariant claim below still compares all three
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(1 << 17)
+    results = {k: _run_topology(k, model, full_cfg, params, traces, bw,
+                                tracer=tracer if k == "shared" else None)
                for k in ("isolated", "shared", "hierarchical")}
 
     lines = []
@@ -222,17 +235,46 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
         "tokens_invariant": tokens_ok,
         "all_claims_pass": ok,
     }
+    if trace_out:
+        from repro.obs import link_report, write_chrome_trace
+        write_chrome_trace(tracer, trace_out)
+        # attribute the shared tenants' degradation: how much of the
+        # run's modeled link-busy time sits on the shared trunk?
+        rep = link_report(results["shared"]["tx"])
+        trunk = rep["sw->mem"]
+        total_busy = sum(r["busy_s"] for r in rep.values())
+        frac = trunk["busy_s"] / total_busy if total_busy > 0 else 0.0
+        lines.append(
+            f"fig10.trace,0,trunk_busy_frac={frac:.2f};"
+            f"trunk_busy_s={trunk['busy_s']:.4f};"
+            f"trunk_stretch_s={trunk['stretch_s']:.4f};"
+            f"events={len(tracer)};out={trace_out}")
+        summary["trace"] = {
+            "path": trace_out, "events": len(tracer),
+            "dropped": tracer.dropped,
+            "trunk_busy_s": trunk["busy_s"],
+            "trunk_busy_frac": frac,
+            "trunk_stretch_s": trunk["stretch_s"],
+            "trunk_peak_flows": trunk["peak_flows"],
+        }
     return lines, summary
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the headline metrics as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto trace of the shared-trunk run")
     args = ap.parse_args(argv)
-    lines, summary = run(smoke=args.smoke)
+    lines, summary = run(smoke=args.smoke, trace_out=args.trace_out)
     for line in lines:
         print(line)
     print(json.dumps(summary, indent=2, default=str))
+    if args.json:
+        from repro.obs import write_json
+        write_json(args.json, "fig10", summary)
     return 0 if summary["all_claims_pass"] else 1
 
 

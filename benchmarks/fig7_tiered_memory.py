@@ -38,3 +38,15 @@ def run() -> Tuple[List[str], dict]:
                      f"got={got:.2f};paper={target};{'PASS' if good else 'FAIL'}")
     summary["all_claims_pass"] = ok
     return lines, summary
+
+
+def main(argv=None) -> int:
+    try:
+        from benchmarks._cli import bench_main
+    except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
+        from _cli import bench_main
+    return bench_main("fig7", run, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -125,3 +125,15 @@ def run() -> Tuple[List[str], dict]:
     summary["all_claims_pass"] = any(wins.values())
     summary["wall_s"] = round(time.time() - t0, 2)
     return lines, summary
+
+
+def main(argv=None) -> int:
+    try:
+        from benchmarks._cli import bench_main
+    except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
+        from _cli import bench_main
+    return bench_main("fig8", run, argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,9 +33,7 @@ exactly reproducible on a CPU smoke host.
 
 from __future__ import annotations
 
-import argparse
 import dataclasses
-import json
 import time
 from typing import Dict, List, Tuple
 
@@ -195,14 +193,11 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true")
-    args = ap.parse_args(argv)
-    lines, summary = run(smoke=args.smoke)
-    for line in lines:
-        print(line)
-    print(json.dumps(summary, indent=2, default=str))
-    return 0 if summary["all_claims_pass"] else 1
+    try:
+        from benchmarks._cli import bench_main
+    except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
+        from _cli import bench_main
+    return bench_main("fig9mt", run, argv)
 
 
 if __name__ == "__main__":

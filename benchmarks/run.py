@@ -34,11 +34,14 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write every suite's headline summary as one JSON doc")
     args = ap.parse_args(argv)
     names = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")
     failures = 0
+    summaries = {}
     for name in names:
         lines, summary = SUITES[name].run()
         for line in lines:
@@ -47,8 +50,13 @@ def main(argv=None) -> int:
         if summary.get("fail_cells"):
             ok = False
         print(f"{name}.summary,0,{json.dumps(summary, default=str)}")
+        summaries[name] = summary
         failures += 0 if ok else 1
     print(f"benchmarks.total,0,failures={failures}")
+    if args.json:
+        from repro.obs import write_json
+        write_json(args.json, "benchmarks.run", summaries,
+                   extra={"failures": failures})
     return 1 if failures else 0
 
 

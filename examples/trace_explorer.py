@@ -1,0 +1,82 @@
+"""Walk the repro.obs observability stack end to end on the Fig. 10
+cross-tenant contention scenario: run the shared-trunk experiment with
+a flight recorder attached, export the Chrome/Perfetto timeline, and
+read the per-link utilization report that *attributes* the shared
+tenants' ~1.55x p95 degradation to tier-2 trunk occupancy — the same
+three artifacts ``--trace-out`` and ``scripts/trace_report.py`` give
+you on any serving run.
+
+    PYTHONPATH=src python examples/trace_explorer.py      # from repo root
+"""
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))            # benchmarks/ package
+sys.path.insert(0, str(_ROOT / "src"))    # repro, if PYTHONPATH unset
+
+from benchmarks.fig10_contention import run
+from repro.obs import (format_link_report, link_report_from_trace,
+                       tier_report, validate_trace_events)
+
+# ---------------------------------------------------------------------------
+# 1. run Fig. 10 (smoke scale) with the flight recorder attached.
+#    Tracing is passive — the modeled clocks and tokens are bit-identical
+#    to an untraced run (summary["tokens_invariant"] pins that claim).
+# ---------------------------------------------------------------------------
+trace_path = str(Path(tempfile.gettempdir()) / "fig10_trace.json")
+print(f"== running fig10 --smoke with trace -> {trace_path} ==")
+lines, summary = run(smoke=True, trace_out=trace_path)
+
+shared = summary["per_tenant_p95"]["shared"]
+isolated = summary["per_tenant_p95"]["isolated"]
+print(f"\nper-tenant p95 (modeled seconds):")
+for t in sorted(shared):
+    print(f"  tenant {t}: isolated {isolated[t]:.3f}s -> "
+          f"shared trunk {shared[t]:.3f}s "
+          f"({shared[t] / isolated[t]:.2f}x)")
+print(f"aggregate degradation on the shared trunk: "
+      f"{summary['shared_degradation']:.2f}x "
+      f"(tokens_invariant={summary['tokens_invariant']})")
+
+# ---------------------------------------------------------------------------
+# 2. the exported timeline is plain Chrome trace_event JSON: load it in
+#    ui.perfetto.dev (or chrome://tracing) and you get one row per
+#    tenant engine, per request, per fabric link, and per pool actor.
+# ---------------------------------------------------------------------------
+with open(trace_path) as f:
+    doc = json.load(f)
+problems = validate_trace_events(doc)
+tr = summary["trace"]
+print(f"\n== exported timeline ==")
+print(f"{tr['path']}: {tr['events']} events recorded, "
+      f"{tr['dropped']} dropped by the ring, "
+      f"schema problems: {problems or 'none'}")
+print("open in https://ui.perfetto.dev to see the lanes: engine:a / "
+      "engine:b decode+spill spans over link:a->sw / link:b->sw / "
+      "link:sw->mem occupancy")
+
+# ---------------------------------------------------------------------------
+# 3. attribution: rebuild the per-link report from the trace file alone
+#    (scripts/trace_report.py does exactly this offline).  The shared
+#    trunk (sw->mem) is the only link both tenants' spill/fetch routes
+#    cross — its busy seconds and queueing stretch ARE the degradation.
+# ---------------------------------------------------------------------------
+links = link_report_from_trace(doc)
+print(f"\n== per-link utilization / queueing report (from trace) ==")
+print(format_link_report(links))
+
+trunk = links["sw->mem"]
+total_busy = sum(r["busy_s"] for r in links.values())
+print(f"\nshared trunk sw->mem: {trunk['busy_s']:.3f}s busy "
+      f"({trunk['busy_s'] / total_busy:.0%} of all link-busy seconds), "
+      f"peak {trunk['peak_flows']} concurrent flows, "
+      f"{trunk['stretch_s']:.3f}s of contention-induced stretch")
+print(f"tier fold: { {t: round(r['busy_s'], 3) for t, r in sorted(tier_report(links).items())} }")
+print(f"\nreading: every modeled second of the {summary['shared_degradation']:.2f}x "
+      f"p95 blow-up is on the trunk's queue — the isolated and "
+      f"hierarchical estates keep per-tenant leaf links below "
+      f"saturation, which is the paper's case for tiered fabrics.")

@@ -1,0 +1,79 @@
+"""Inspect an exported Perfetto/Chrome trace_event JSON offline.
+
+Reads a trace file written by ``--trace-out`` (``repro.launch.serve``,
+``benchmarks/fig10_contention.py``) or ``repro.obs.write_chrome_trace``
+and prints, without needing the live ``Transport``:
+
+* the track inventory (events per pid/tid row),
+* the per-link utilization / queueing-delay report reconstructed from
+  the link-occupancy spans (busy seconds = interval union, stretch =
+  span duration beyond solo serialization), folded by fabric tier,
+* schema validation problems, if any (exit 1 when the file would not
+  load cleanly in ui.perfetto.dev).
+
+    PYTHONPATH=src python scripts/trace_report.py run.json
+    PYTHONPATH=src python scripts/trace_report.py run.json --links-only
+"""
+import argparse
+import json
+import sys
+from collections import Counter
+
+sys.path.insert(0, "src")
+from repro.obs import (format_link_report, link_report_from_trace,  # noqa: E402
+                       tier_report, validate_trace_events)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("trace", help="trace_event JSON written by --trace-out")
+    p.add_argument("--links-only", action="store_true",
+                   help="print only the per-link report")
+    args = p.parse_args(argv)
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    problems = validate_trace_events(doc)
+    events = doc.get("traceEvents", [])
+
+    if not args.links_only:
+        names = {}
+        for e in events:
+            if e.get("ph") == "M" and e.get("name") == "thread_name":
+                names[(e["pid"], e["tid"])] = e["args"]["name"]
+        per_track = Counter(
+            names.get((e.get("pid"), e.get("tid")), "?")
+            for e in events if e.get("ph") in ("X", "i", "C"))
+        print(f"{args.trace}: {len(events)} events, "
+              f"{len(per_track)} tracks "
+              f"(recorded={doc.get('otherData', {}).get('events_recorded')}, "
+              f"dropped={doc.get('otherData', {}).get('recorder_dropped')})")
+        for track, n in sorted(per_track.items()):
+            print(f"  {track:40s} {n:6d} events")
+        print()
+
+    links = link_report_from_trace(doc)
+    if links:
+        print(format_link_report(links))
+        tiers = tier_report(links)
+        total = sum(r["busy_s"] for r in tiers.values())
+        if total > 0:
+            print("\nmodeled link-busy seconds by tier:")
+            for tier, r in sorted(tiers.items(),
+                                  key=lambda kv: -kv[1]["busy_s"]):
+                print(f"  {tier:12s} {r['busy_s']:10.4f}s "
+                      f"({r['busy_s'] / total:6.1%})")
+    else:
+        print("no link-occupancy spans in this trace "
+              "(tracing ran without fabric transfers)")
+
+    if problems:
+        print(f"\nSCHEMA PROBLEMS ({len(problems)}):")
+        for pr in problems[:20]:
+            print(f"  {pr}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

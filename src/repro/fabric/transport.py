@@ -36,10 +36,13 @@ clocks) are clamped forward to it, keeping link state causal.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.fabric.topology import Link, Route, Topology
+from repro.obs.export import link_tier
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import CAT_FABRIC, CAT_LINK, Tracer, resolve
 
 # a flow whose residue dips below this is finished: absorbs the float
 # dust of ``(now + rem/rate) - now`` round trips (up to ~rate * ulp(now)
@@ -55,15 +58,26 @@ class _Flow:
     route: Route
     remaining: float                  # payload bytes left to serialize
     started: float
+    nbytes: float = 0.0               # original payload size
     completion: Optional[float] = None   # estimate returned at begin time
+    rates: List[Tuple[float, float]] = field(default_factory=list)
+    # (t, bytes/s) at each re-rating interval — recorded only when a
+    # tracer is enabled; exported on the transfer's link-occupancy span
 
 
 class Transport:
     """Owns the in-flight transfer set (and the modeled clock frontier)
-    for one fabric ``Topology``."""
+    for one fabric ``Topology``.  Pass a ``repro.obs.Tracer`` to record
+    per-transfer link-occupancy spans (with the max-min fair rate at
+    every re-rating interval) into the flight recorder; per-link busy
+    seconds / bytes / peak-concurrency / queueing-stretch gauges are
+    always accumulated (plain float adds on the paths the fluid
+    simulation already walks)."""
 
-    def __init__(self, topology: Topology):
+    def __init__(self, topology: Topology, *,
+                 tracer: Optional[Tracer] = None):
         self.topology = topology
+        self.tracer = resolve(tracer)
         self.now = 0.0                  # clock frontier (last event time)
         self._flows: Dict[int, _Flow] = {}
         self._fid = itertools.count()
@@ -72,6 +86,17 @@ class Transport:
         self.bytes_moved = 0.0
         self.peak_inflight = 0
         self.contended_transfers = 0    # began while sharing >= 1 link
+        # per-link accounting (bugfix: stats() used to drop link
+        # information entirely, making conservation uncheckable):
+        #   busy_s      — modeled seconds the link carried >= 1 flow
+        #   bytes       — payload bytes serialized across the link
+        #   peak_flows  — max concurrent flows ever crossing it
+        #   stretch_s   — contention-induced excess (actual minus solo
+        #                 serialization) of flows that crossed it
+        self.link_busy_s: Dict[str, float] = {}
+        self.link_bytes: Dict[str, float] = {}
+        self.link_peak_flows: Dict[str, int] = {}
+        self.link_stretch_s: Dict[str, float] = {}
 
     # ---- public API ------------------------------------------------------
     def route(self, src: str, dst: str) -> Route:
@@ -113,9 +138,15 @@ class Transport:
         if nbytes <= 0:
             return t + route.latency(), True, t
         solo = not any(self._on_link(l) for l in route.links)
-        flow = _Flow(next(self._fid), route, float(nbytes), t)
+        flow = _Flow(next(self._fid), route, float(nbytes), t,
+                     nbytes=float(nbytes))
         self._flows[flow.fid] = flow
         self.peak_inflight = max(self.peak_inflight, len(self._flows))
+        for link in route.links:
+            n_on = sum(1 for f in self._flows.values()
+                       if link in f.route.links)
+            if n_on > self.link_peak_flows.get(link.name, 0):
+                self.link_peak_flows[link.name] = n_on
         if solo:
             # exact solo formula — bit-identical to the legacy
             # ServeCostModel.swap_s path (and to Route.transfer_time)
@@ -125,6 +156,15 @@ class Transport:
             self.contended_transfers += 1
             flow.completion = self._project_completion(flow.fid) \
                 + route.latency()
+        if self.tracer.enabled:
+            rate0 = self._rates({fid: f.remaining for fid, f
+                                 in self._flows.items()})[flow.fid]
+            flow.rates.append((t, rate0))
+            self.tracer.instant(
+                "fabric", "begin_transfer", t, cat=CAT_FABRIC,
+                fid=flow.fid, bytes=flow.nbytes, src=route.src,
+                dst=route.dst, solo=solo, rate=rate0,
+                est_completion=flow.completion)
         return flow.completion, solo, t
 
     @property
@@ -136,15 +176,52 @@ class Transport:
         link = self.topology.links[link_name]
         return sum(1 for f in self._flows.values() if link in f.route.links)
 
+    def quiesce(self) -> float:
+        """Advance the frontier until every in-flight flow has drained
+        (no new arrivals assumed) and return the final ``now``.  Call
+        before reading per-link accounting for a whole run: transfers
+        only *actually* drain as later begins advance the clock, so the
+        last transfers' busy seconds are otherwise still pending."""
+        while self._flows:
+            remaining = {fid: f.remaining for fid, f in self._flows.items()}
+            horizon, _, _ = self._drain_interval(remaining, self.now)
+            self._advance(horizon)
+        return self.now
+
+    def metrics(self, registry: Optional[MetricsRegistry] = None,
+                prefix: str = "fabric") -> MetricsRegistry:
+        """The transport's observable state under the unified
+        ``repro.obs`` schema; ``stats()`` is a thin adapter over this."""
+        m = registry if registry is not None else MetricsRegistry()
+        m.set(f"{prefix}/now_s", self.now)
+        m.set(f"{prefix}/transfers", self.transfers)
+        m.set(f"{prefix}/bytes_moved", self.bytes_moved)
+        m.set(f"{prefix}/inflight", len(self._flows))
+        m.set(f"{prefix}/peak_inflight", self.peak_inflight)
+        m.set(f"{prefix}/contended_transfers", self.contended_transfers)
+        for name in sorted(self.topology.links):
+            lp = f"{prefix}/link/{name}"
+            m.set(f"{lp}/busy_s", self.link_busy_s.get(name, 0.0))
+            m.set(f"{lp}/bytes", self.link_bytes.get(name, 0.0))
+            m.set(f"{lp}/peak_flows", self.link_peak_flows.get(name, 0))
+            m.set(f"{lp}/stretch_s", self.link_stretch_s.get(name, 0.0))
+        return m
+
+    _STATS_KEYS = ("now_s", "transfers", "bytes_moved", "inflight",
+                   "peak_inflight", "contended_transfers")
+    _LINK_KEYS = ("busy_s", "bytes", "peak_flows", "stretch_s")
+
     def stats(self) -> Dict[str, float]:
-        return {
-            "now_s": self.now,
-            "transfers": self.transfers,
-            "bytes_moved": self.bytes_moved,
-            "inflight": len(self._flows),
-            "peak_inflight": self.peak_inflight,
-            "contended_transfers": self.contended_transfers,
-        }
+        """Legacy flat dict — a thin adapter over ``metrics()`` (old
+        keys preserved) plus the per-link gauges under ``links``."""
+        snap = self.metrics().snapshot()
+        out: Dict[str, float] = {k: snap[f"fabric/{k}"]
+                                 for k in self._STATS_KEYS}
+        out["links"] = {
+            name: {k: snap[f"fabric/link/{name}/{k}"]
+                   for k in self._LINK_KEYS}
+            for name in sorted(self.topology.links)}
+        return out
 
     # ---- fluid simulation ------------------------------------------------
     def _on_link(self, link: Link) -> bool:
@@ -187,14 +264,14 @@ class Transport:
 
     def _drain_interval(self, remaining: Dict[int, float], now: float,
                         cap: Optional[float] = None
-                        ) -> Tuple[float, List[int]]:
+                        ) -> Tuple[float, List[int], Dict[int, float]]:
         """One fluid interval shared by ``_advance`` and
         ``_project_completion``: drain ``remaining`` in place from
         ``now`` to the earlier of ``cap`` and the earliest finish
         event, at current max-min rates.  Returns ``(horizon, finished
-        fids)``.  A flow whose computed finish time sets (or precedes)
-        the horizon is finished *by that event*, not by its float
-        residue — ``(now + rem/rate) - now`` round-trips are not
+        fids, rates)``.  A flow whose computed finish time sets (or
+        precedes) the horizon is finished *by that event*, not by its
+        float residue — ``(now + rem/rate) - now`` round-trips are not
         exact — with the residue epsilon as a backstop."""
         rates = self._rates(remaining)
         fts = {fid: now + rem / rates[fid]
@@ -213,21 +290,71 @@ class Transport:
             if fts.get(fid, float("inf")) <= horizon \
                     or remaining[fid] <= _EPS_BYTES:
                 finished.append(fid)
-        return horizon, finished
+        return horizon, finished, rates
 
     def _advance(self, t: float) -> None:
         """Drain every in-flight flow from the frontier to ``t``,
-        re-rating at each completion event in between."""
+        re-rating at each completion event in between.  This is the
+        ONE place flows really progress, so it is also where per-link
+        busy/byte accounting accrues and where a finished flow's
+        link-occupancy spans hit the flight recorder (its actual
+        modeled finish is known here, not at begin time)."""
         while self.now < t and self._flows:
             remaining = {fid: f.remaining for fid, f in self._flows.items()}
-            horizon, finished = self._drain_interval(remaining, self.now,
-                                                     cap=t)
+            horizon, finished, rates = self._drain_interval(
+                remaining, self.now, cap=t)
+            dt = horizon - self.now
+            if dt > 0:
+                self._account_interval(dt, rates)
+            if self.tracer.enabled:
+                for fid, rate in rates.items():
+                    fl = self._flows[fid]
+                    if not fl.rates or fl.rates[-1][1] != rate:
+                        fl.rates.append((self.now, rate))
             for fid, rem in remaining.items():
                 self._flows[fid].remaining = rem
             for fid in finished:
-                del self._flows[fid]
+                self._finish_flow(self._flows.pop(fid), horizon)
             self.now = horizon
         self.now = max(self.now, t)
+
+    def _account_interval(self, dt: float, rates: Dict[int, float]) -> None:
+        """Accrue one fluid interval into the per-link gauges: a link
+        is busy for the interval if any flow crosses it, and carries
+        each crossing flow's drained bytes (hops pipeline, so a flow's
+        payload is serialized across every link of its route)."""
+        on_link: Dict[str, float] = {}
+        for fid, flow in self._flows.items():
+            drained = rates.get(fid, 0.0) * dt
+            for link in flow.route.links:
+                on_link[link.name] = on_link.get(link.name, 0.0) + drained
+        for name, nbytes in on_link.items():
+            self.link_busy_s[name] = self.link_busy_s.get(name, 0.0) + dt
+            self.link_bytes[name] = self.link_bytes.get(name, 0.0) + nbytes
+
+    def _finish_flow(self, flow: _Flow, at: float) -> None:
+        """A flow fully serialized at modeled time ``at``: attribute
+        its queueing stretch to every link it crossed and emit its
+        link-occupancy spans."""
+        dur = at - flow.started
+        solo_s = flow.nbytes / flow.route.bottleneck_bw
+        stretch = max(0.0, dur - solo_s)
+        for link in flow.route.links:
+            self.link_stretch_s[link.name] = \
+                self.link_stretch_s.get(link.name, 0.0) + stretch
+        if self.tracer.enabled:
+            name = f"{flow.route.src}->{flow.route.dst}"
+            rates = [(round(t, 9), r) for t, r in flow.rates]
+            self.tracer.span(
+                "fabric", name, flow.started, dur, cat=CAT_FABRIC,
+                fid=flow.fid, bytes=flow.nbytes, solo_s=solo_s,
+                stretch_s=stretch, hops=flow.route.hops, rates=rates)
+            for link in flow.route.links:
+                self.tracer.span(
+                    f"link:{link.name}", name, flow.started, dur,
+                    cat=CAT_LINK, fid=flow.fid, bytes=flow.nbytes,
+                    solo_s=solo_s, capacity=link.capacity,
+                    tier=link_tier(link, self.topology))
 
     def _project_completion(self, target: int) -> float:
         """Forward-simulate the current in-flight set (no future
@@ -236,7 +363,7 @@ class Transport:
         remaining = {fid: f.remaining for fid, f in self._flows.items()}
         now = self.now
         for _ in range(len(remaining) + 1):
-            horizon, finished = self._drain_interval(remaining, now)
+            horizon, finished, _ = self._drain_interval(remaining, now)
             if target in finished:
                 return horizon
             for fid in finished:

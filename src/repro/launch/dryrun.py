@@ -26,6 +26,7 @@ jax.config.update("jax_compilation_cache_dir", "/tmp/jax_cache")
 
 from repro.configs import ARCHS
 from repro.launch.dryrun_cell import lower_cell
+from repro.obs.console import emit
 from repro.models.config import SHAPES
 
 
@@ -62,7 +63,7 @@ def main(argv=None):
                     if rec.get("status") in ("OK", "SKIP"):
                         n_ok += rec["status"] == "OK"
                         n_skip += rec["status"] == "SKIP"
-                        print(f"[keep] {name}", flush=True)
+                        emit(f"[keep] {name}")
                         continue
                 try:
                     rec = lower_cell(arch, shape_name, multi_pod,
@@ -86,8 +87,8 @@ def main(argv=None):
                              f"  dom={r['dominant']}")
                 elif status == "FAIL":
                     line += "  " + rec["error"][:140]
-                print(line, flush=True)
-    print(f"\ndry-run: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL", flush=True)
+                emit(line)
+    emit(f"\ndry-run: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
     return 1 if n_fail else 0
 
 

@@ -27,7 +27,6 @@ Legacy fixed-batch mode (pre-engine path, kept for encdec archs):
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -40,9 +39,21 @@ from repro.core.tiering import KVBudget
 from repro.launch.mesh import make_smoke_mesh
 from repro.models.api import build_model
 from repro.models.config import ShapeConfig
+from repro.obs import Tracer, write_chrome_trace
+from repro.obs.console import emit_json, warn
 from repro.runtime import serve as serve_rt
 from repro.sharding.partition import use_rules
 from repro.sharding.profiles import make_rules
+
+
+def _flush_trace(tracer, transports, path: str) -> dict:
+    """Drain every transport's in-flight transfers (their spans land at
+    completion) and write the Perfetto-loadable trace file."""
+    for tx in {id(t): t for t in transports if t is not None}.values():
+        tx.quiesce()
+    write_chrome_trace(tracer, path)
+    return {"path": path, "events": len(tracer),
+            "dropped": tracer.dropped}
 
 
 def _engine_mode(args, cfg, model) -> int:
@@ -51,6 +62,7 @@ def _engine_mode(args, cfg, model) -> int:
 
     ecfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
                         page_size=args.page_size)
+    tracer = Tracer(args.trace_capacity) if args.trace_out else None
     budget = None
     if args.tier1_pages or args.tier2_kv_gb:
         budget = KVBudget(
@@ -59,7 +71,7 @@ def _engine_mode(args, cfg, model) -> int:
             page_size=args.page_size)
 
     if args.tenants > 1:
-        return _multitenant_mode(args, cfg, model, ecfg)
+        return _multitenant_mode(args, cfg, model, ecfg, tracer)
 
     if args.pool != "none":
         from repro.pool import smoke_pool
@@ -68,9 +80,10 @@ def _engine_mode(args, cfg, model) -> int:
                            tier2_gb=max(args.pool_tier2_gb, args.tier2_kv_gb),
                            kv_gb=args.tier2_kv_gb,
                            model_parallel=args.pool_model_parallel)
-        engine = Engine.from_lease(model, lease, ecfg, budget=budget)
+        engine = Engine.from_lease(model, lease, ecfg, budget=budget,
+                                   tracer=tracer)
     else:
-        engine = Engine.local(model, ecfg, budget=budget)
+        engine = Engine.local(model, ecfg, budget=budget, tracer=tracer)
 
     if args.trace:
         trace = load_trace(args.trace, vocab=cfg.vocab)
@@ -84,7 +97,7 @@ def _engine_mode(args, cfg, model) -> int:
     handles = run_trace(engine, trace)
     wall = time.time() - t0
     stats = engine.stats()
-    print(json.dumps({
+    out = {
         "arch": cfg.name, "mode": "engine",
         "lease": args.pool if args.pool != "none" else None,
         "requests": len(handles),
@@ -92,11 +105,15 @@ def _engine_mode(args, cfg, model) -> int:
         "stats": stats,
         "wall_s": round(wall, 2),
         "sample_tokens": handles[0].tokens[:8] if handles else [],
-    }, indent=2, default=str))
+    }
+    if tracer is not None:
+        out["trace_out"] = _flush_trace(tracer, [engine.transport],
+                                        args.trace_out)
+    emit_json(out)
     return 0 if stats["failed_oom"] == 0 else 1
 
 
-def _multitenant_mode(args, cfg, model, ecfg) -> int:
+def _multitenant_mode(args, cfg, model, ecfg, tracer=None) -> int:
     """--tenants N: N engines over ONE shared page pool (PoolArbiter),
     traffic (synthetic or --trace JSONL) split round-robin across
     tenants."""
@@ -104,14 +121,14 @@ def _multitenant_mode(args, cfg, model, ecfg) -> int:
                              load_trace, run_multi_trace, synthetic_trace)
 
     if args.pool != "none" and args.tier2_kv_gb <= 0:
-        print("error: --tenants with --pool shares one KV grant across "
-              "the tenants — pass --tier2-kv-gb > 0 so the lease has "
-              "kv bytes to share", flush=True)
+        warn("--tenants with --pool shares one KV grant across the "
+             "tenants — pass --tier2-kv-gb > 0 so the lease has kv "
+             "bytes to share")
         return 2
 
     names = [f"t{i}" for i in range(args.tenants)]
     tier1 = args.tier1_pages or args.tenants * args.slots * ecfg.pages_per_slot
-    arb = PoolArbiter(tier1, page_size=args.page_size)
+    arb = PoolArbiter(tier1, page_size=args.page_size, tracer=tracer)
     per_tenant = KVBudget(tier2_bytes=args.tier2_kv_gb * 1e9 / args.tenants,
                           page_size=args.page_size)
     if args.pool != "none":
@@ -123,11 +140,12 @@ def _multitenant_mode(args, cfg, model, ecfg) -> int:
                            model_parallel=args.pool_model_parallel,
                            tenants=tuple(names))
         engines = {n: Engine.from_lease(model, lease, ecfg,
-                                        arbiter=arb, tenant=n)
+                                        arbiter=arb, tenant=n,
+                                        tracer=tracer)
                    for n in names}
     else:
         engines = {n: Engine.local(model, ecfg, budget=per_tenant,
-                                   arbiter=arb, tenant=n)
+                                   arbiter=arb, tenant=n, tracer=tracer)
                    for n in names}
 
     if args.trace:
@@ -158,7 +176,11 @@ def _multitenant_mode(args, cfg, model, ecfg) -> int:
             "recomputes": st["preempt_recomputes"],
             "tput_busy_tok_s": st["throughput_busy_tok_s"],
         }
-    print(json.dumps(out, indent=2, default=str))
+    if tracer is not None:
+        out["trace_out"] = _flush_trace(
+            tracer, [e.transport for e in engines.values()],
+            args.trace_out)
+    emit_json(out)
     return 0 if failed == 0 else 1
 
 
@@ -203,14 +225,14 @@ def _legacy_batch_mode(args, cfg, model) -> int:
 
     toks = np.concatenate(generated, axis=1)
     tokens_per_s = args.batch * (args.generate - 1) / max(t_decode, 1e-9)
-    print(json.dumps({
+    emit_json({
         "arch": cfg.name, "mode": "batch",
         "batch": args.batch, "prompt": args.prompt,
         "generated": toks.shape[1],
         "prefill_s": round(t_prefill, 3),
         "decode_tok_per_s": round(tokens_per_s, 1),
         "sample_tokens": toks[0, :8].tolist(),
-    }, indent=2))
+    })
     return 0
 
 
@@ -243,6 +265,12 @@ def main(argv=None):
     p.add_argument("--pool-accels", type=int, default=4)
     p.add_argument("--pool-tier2-gb", type=float, default=0.0)
     p.add_argument("--pool-model-parallel", type=int, default=1)
+    p.add_argument("--trace-out", default=None,
+                   help="write a Chrome/Perfetto trace_event JSON of the "
+                        "run's modeled timeline (open in ui.perfetto.dev)")
+    p.add_argument("--trace-capacity", type=int, default=1 << 16,
+                   help="flight-recorder ring size (events); oldest "
+                        "events drop beyond this")
     # legacy fixed-batch mode
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt", type=int, default=64)
@@ -253,10 +281,10 @@ def main(argv=None):
     model = build_model(cfg)
     if args.requests or args.trace:
         if not model.supports_paged_kv:
-            print(f"error: the request-level engine serves paged-KV "
-                  f"families (dense/moe); {cfg.family!r} is not supported "
-                  f"yet — use the fixed-batch mode (--batch/--prompt/"
-                  f"--generate) instead", flush=True)
+            warn(f"the request-level engine serves paged-KV families "
+                 f"(dense/moe); {cfg.family!r} is not supported yet — "
+                 f"use the fixed-batch mode (--batch/--prompt/"
+                 f"--generate) instead")
             return 2
         return _engine_mode(args, cfg, model)
     return _legacy_batch_mode(args, cfg, model)

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import sys
 import time
 from pathlib import Path
 
@@ -31,6 +29,7 @@ from repro.ckpt import checkpoint as ckpt
 from repro.launch.mesh import make_smoke_mesh
 from repro.models.api import build_model
 from repro.models.config import ShapeConfig
+from repro.obs.console import emit_json, warn
 from repro.optim.adamw import AdamW
 from repro.runtime import train as train_rt
 from repro.runtime.ft import FaultTolerantLoop, StragglerMonitor
@@ -83,10 +82,9 @@ def main(argv=None):
         if args.offload_optimizer and not tier_policy.offload_optimizer:
             # explicit flag without a tier-2 reservation: honor it (host
             # memory stands in for the capacity tier) but say so.
-            print("warning: --offload-optimizer with a 0-byte tier-2 "
-                  "lease; offloading to host memory (pass "
-                  "--pool-tier2-gb to reserve pool capacity)",
-                  file=sys.stderr)
+            warn("--offload-optimizer with a 0-byte tier-2 lease; "
+                 "offloading to host memory (pass --pool-tier2-gb to "
+                 "reserve pool capacity)")
             tier_policy = dataclasses.replace(tier_policy,
                                               offload_optimizer=True)
     else:
@@ -96,8 +94,7 @@ def main(argv=None):
     if dp_mode == "hierarchical":
         reason = hierarchical_unsafe(cfg)
         if reason:
-            print(f"warning: {reason}; falling back to dp_mode=auto",
-                  file=sys.stderr)
+            warn(f"{reason}; falling back to dp_mode=auto")
             dp_mode = "auto"
     rules = make_rules(cfg, shape, mesh, fsdp=False, dp_mode=dp_mode)
     tcfg = train_rt.TrainStepConfig(dp_mode=dp_mode,
@@ -147,7 +144,7 @@ def main(argv=None):
     dt = time.time() - t0
 
     losses = [h["loss"] for h in loop.history]
-    print(json.dumps({
+    emit_json({
         "arch": cfg.name, "steps": args.steps,
         "devices": len(jax.devices()), "mesh": dict(zip(mesh.axis_names,
                                                         mesh.devices.shape)),
@@ -162,7 +159,7 @@ def main(argv=None):
         "wall_s": round(dt, 1), "s_per_step": round(dt / args.steps, 3),
         "straggler_events": len(loop.monitor.events),
         "restarts": loop.restarts,
-    }, indent=2))
+    })
     return 0 if losses[-1] < losses[0] else 1
 
 

@@ -1,0 +1,42 @@
+"""The ONE sanctioned stdout channel for ``src/repro`` runtime code.
+
+The lint step (``scripts/lint_no_print.py``, run in CI) forbids bare
+``print(`` calls anywhere under ``src/repro`` so runtime reporting
+cannot silently bypass the observability layer; this module is the
+single exempt site.  CLI drivers (``repro.launch.*``) route their
+user-facing output through ``emit`` / ``emit_json``, which keeps the
+output stream greppable, flushable, and — if a future PR wants it —
+redirectable to a structured sink without touching every call site.
+
+This is deliberately thin: benchmarks and scripts (outside
+``src/repro``) keep printing directly; library code inside
+``src/repro`` should not be producing output at all unless it is a
+CLI driver reporting through here.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Optional, TextIO
+
+
+def emit(*parts: Any, sep: str = " ", end: str = "\n",
+         stream: Optional[TextIO] = None, flush: bool = True) -> None:
+    """Write one line of CLI output (the sanctioned ``print``)."""
+    out = stream if stream is not None else sys.stdout
+    out.write(sep.join(str(p) for p in parts) + end)
+    if flush:
+        out.flush()
+
+
+def emit_json(obj: Any, *, indent: Optional[int] = 2,
+              stream: Optional[TextIO] = None, **kwargs: Any) -> None:
+    """Write a JSON document to stdout (CLI result envelopes)."""
+    kwargs.setdefault("default", str)
+    emit(json.dumps(obj, indent=indent, **kwargs), stream=stream)
+
+
+def warn(*parts: Any) -> None:
+    """Diagnostics go to stderr, never mixed into a JSON stdout."""
+    emit("warning:", *parts, stream=sys.stderr)

@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import simulator as sim
+from repro.obs.trace import CAT_SCHED, resolve
 from repro.pool.allocator import Allocation, Allocator, JobRequest
 from repro.pool.inventory import Inventory
 
@@ -182,13 +183,16 @@ class ScheduleResult:
 class Scheduler:
     """Event-driven scheduler; fully deterministic for a fixed job list."""
 
+    _TRACK = "pool:sched"
+
     def __init__(self, inventory: Inventory, policy: Optional[str] = None,
                  *, backfill: bool = True,
                  calib: Optional[sim.Calibration] = None,
-                 queueing: str = "fifo"):
+                 queueing: str = "fifo", tracer=None):
         if queueing not in ("fifo", "drf"):
             raise ValueError(f"unknown queueing policy {queueing!r} "
                              f"(expected 'fifo' or 'drf')")
+        self.tracer = resolve(tracer)
         self.inv = inventory
         self.alloc = Allocator(inventory, policy)
         self.policy = self.alloc.policy
@@ -256,6 +260,11 @@ class Scheduler:
         if kind == "submit":
             self._log(f"submit {data.name} "
                       f"(n={data.n_accels}, t2={data.tier2_bytes/1e9:.0f}GB)")
+            if self.tracer.enabled:
+                self.tracer.instant(self._TRACK, "submit", self._now,
+                                    cat=CAT_SCHED, job=data.name,
+                                    accels=data.n_accels,
+                                    tier2_bytes=data.tier2_bytes)
             if data.gang:
                 held = self._pending_gangs.get(data.gang_key)
                 if held is not None and data.gang_size != held[0].gang_size:
@@ -274,11 +283,20 @@ class Scheduler:
                 if len(buf) < want:
                     self._log(f"hold {data.name} "
                               f"(gang {data.gang!r} {len(buf)}/{want})")
+                    if self.tracer.enabled:
+                        self.tracer.instant(self._TRACK, "hold", self._now,
+                                            cat=CAT_SCHED, job=data.name,
+                                            gang=data.gang,
+                                            arrived=len(buf), want=want)
                     return
                 del self._pending_gangs[data.gang_key]
                 self._queue.extend(buf)
                 self._log(f"gang {data.gang!r} complete "
                           f"({len(buf)} jobs) -> queue")
+                if self.tracer.enabled:
+                    self.tracer.instant(self._TRACK, "gang_complete",
+                                        self._now, cat=CAT_SCHED,
+                                        gang=data.gang, members=len(buf))
                 return
             self._queue.append(data)
         elif kind == "finish":
@@ -384,6 +402,10 @@ class Scheduler:
             self._queue.append(requeue)
             self._log(f"preempt {v.job.name} ({remaining} steps left) "
                       f"for {job.name}")
+            if self.tracer.enabled:
+                self.tracer.instant(self._TRACK, "preempt", self._now,
+                                    cat=CAT_SCHED, job=v.job.name,
+                                    by=job.name, steps_left=remaining)
         return True
 
     def _admit_and_grow(self) -> None:
@@ -471,6 +493,10 @@ class Scheduler:
         if len(jobs) > 1:
             self._log(f"admit gang {jobs[0].gang!r} "
                       f"({len(jobs)} jobs, all-or-nothing)")
+            if self.tracer.enabled:
+                self.tracer.instant(self._TRACK, "gang_admit", self._now,
+                                    cat=CAT_SCHED, gang=jobs[0].gang,
+                                    members=len(jobs))
         return True
 
     def _admit_drf(self) -> None:
@@ -542,6 +568,12 @@ class Scheduler:
         self._log(f"admit {job.name} dp={par.dp} "
                   f"pods={list(alloc.pod_ids)} granted={alloc.n_granted} "
                   f"(stranded={alloc.n_stranded}) step={st*1e3:.1f}ms")
+        if self.tracer.enabled:
+            self.tracer.instant(self._TRACK, "admit", self._now,
+                                cat=CAT_SCHED, job=job.name, dp=par.dp,
+                                pods=list(alloc.pod_ids),
+                                granted=alloc.n_granted,
+                                stranded=alloc.n_stranded, step_s=st)
 
     def _account_segment(self, run: _Running) -> None:
         dt = self._now - run.seg_start
@@ -549,6 +581,14 @@ class Scheduler:
             run.steps_done += dt / run.step_time
             self.records[run.job.name].accel_seconds += \
                 run.alloc.n_requested * dt
+            if self.tracer.enabled:
+                # one span per contiguous execution segment: the job's
+                # residency on the pool between admit/resize/preempt
+                # boundaries, the rows a Perfetto "what ran when" view
+                self.tracer.span(self._TRACK, f"run:{run.job.name}",
+                                 run.seg_start, dt, cat=CAT_SCHED,
+                                 job=run.job.name, dp=run.par.dp,
+                                 accels=run.alloc.n_requested)
         run.seg_start = self._now
 
     def _suspend(self, run: _Running) -> None:
@@ -577,3 +617,7 @@ class Scheduler:
         rec.finish_t = self._now
         self._frag_samples.append(self.alloc.metrics().fragmentation)
         self._log(f"finish {run.job.name} jct={rec.jct:.2f}s")
+        if self.tracer.enabled:
+            self.tracer.instant(self._TRACK, "finish", self._now,
+                                cat=CAT_SCHED, job=run.job.name,
+                                jct_s=rec.jct)

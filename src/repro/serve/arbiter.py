@@ -42,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import CAT_ARBITER, resolve
 
 
 class _TenantKV(PagedKV):
@@ -116,9 +118,13 @@ class PoolArbiter:
     — registration is implicit and the first tenant's cache shapes fix
     the pool's physical layout."""
 
-    def __init__(self, tier1_pages: int, *, page_size: int = 64):
+    _TRACK = "pool:arbiter"
+
+    def __init__(self, tier1_pages: int, *, page_size: int = 64,
+                 tracer=None):
         if tier1_pages <= 0:
             raise ValueError("arbiter needs a positive tier-1 page quota")
+        self.tracer = resolve(tracer)
         self.num_pages = int(tier1_pages)
         self.page_size = int(page_size)
         self.page_bytes = 0.0               # fixed at first registration
@@ -282,6 +288,11 @@ class PoolArbiter:
                 # requeue it on ITS engine for re-prefill
                 t.engine._drop_for_recompute(victim)
                 self.recompute_drops += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(self._TRACK, "recompute_drop",
+                                        t.engine.clock, cat=CAT_ARBITER,
+                                        victim=u, requester=tenant,
+                                        rid=victim.rid)
                 continue
             # the victim's pages ride ITS tier-2 route: register the
             # transfer on the victim engine's transport at its clock
@@ -293,6 +304,11 @@ class PoolArbiter:
             t.charged_total_s += cost
             self.revoked_pages += k
             self.revocations += 1
+            if self.tracer.enabled:
+                self.tracer.instant(self._TRACK, "revoke",
+                                    t.engine.clock, cat=CAT_ARBITER,
+                                    victim=u, requester=tenant, pages=k,
+                                    rid=victim.rid, cost_s=cost)
 
     def take_charge(self, tenant: str) -> float:
         """Collect (and clear) the swap seconds revocation charged to
@@ -300,28 +316,50 @@ class PoolArbiter:
         victim's own event clocks absorb the traffic it caused."""
         t = self._tenants[tenant]
         dt, t.charge_s = t.charge_s, 0.0
+        if dt > 0.0 and self.tracer.enabled:
+            self.tracer.instant(self._TRACK, "charge", t.engine.clock,
+                                cat=CAT_ARBITER, tenant=tenant, cost_s=dt)
         return dt
 
     # ---- observability ---------------------------------------------------
-    def stats(self) -> Dict[str, Any]:
+    _STATS_KEYS = ("tier1_pages_quota", "tier1_pages_free", "revoked_pages",
+                   "revocations", "recompute_drops")
+    _TENANT_KEYS = ("hot_used", "cold_pages", "share", "allowance",
+                    "demand", "spills", "fetches", "revocation_charged_s")
+
+    def metrics(self, registry: Optional[MetricsRegistry] = None,
+                prefix: str = "arbiter") -> MetricsRegistry:
+        """Fill (and return) a ``repro.obs`` metrics registry with the
+        pool-wide and per-tenant arbitration state under
+        ``arbiter/...``; ``stats()`` is a thin adapter over it."""
+        reg = registry if registry is not None else MetricsRegistry()
         allowances = self._allowances()
         shares = self._shares()
-        return {
-            "tier1_pages_quota": self.num_pages,
-            "tier1_pages_free": len(self._free),
-            "revoked_pages": self.revoked_pages,
-            "revocations": self.revocations,
-            "recompute_drops": self.recompute_drops,
-            "tenants": {
-                n: {
-                    "hot_used": t.kv.hot_used(),
-                    "cold_pages": t.kv.cold_pages_used,
-                    "share": shares[n],
-                    "allowance": allowances[n],
-                    "demand": t.engine._page_demand(),
-                    "spills": t.kv.spills,
-                    "fetches": t.kv.fetches,
-                    "revocation_charged_s": t.charged_total_s,
-                } for n, t in sorted(self._tenants.items())
-            },
+        reg.set(f"{prefix}/tier1_pages_quota", self.num_pages)
+        reg.set(f"{prefix}/tier1_pages_free", len(self._free))
+        reg.set(f"{prefix}/revoked_pages", self.revoked_pages)
+        reg.set(f"{prefix}/revocations", self.revocations)
+        reg.set(f"{prefix}/recompute_drops", self.recompute_drops)
+        for n, t in sorted(self._tenants.items()):
+            tp = f"{prefix}/tenant/{n}"
+            reg.set(f"{tp}/hot_used", t.kv.hot_used())
+            reg.set(f"{tp}/cold_pages", t.kv.cold_pages_used)
+            reg.set(f"{tp}/share", shares[n])
+            reg.set(f"{tp}/allowance", allowances[n])
+            reg.set(f"{tp}/demand", t.engine._page_demand())
+            reg.set(f"{tp}/spills", t.kv.spills)
+            reg.set(f"{tp}/fetches", t.kv.fetches)
+            reg.set(f"{tp}/revocation_charged_s", t.charged_total_s)
+        return reg
+
+    def stats(self) -> Dict[str, Any]:
+        """Legacy nested dict, adapted off the ``metrics()`` registry."""
+        snap = self.metrics().snapshot("arbiter/")
+        out: Dict[str, Any] = {k: snap[f"arbiter/{k}"]
+                               for k in self._STATS_KEYS}
+        out["tenants"] = {
+            n: {k: snap[f"arbiter/tenant/{n}/{k}"]
+                for k in self._TENANT_KEYS}
+            for n in sorted(self._tenants)
         }
+        return out

@@ -75,6 +75,8 @@ import numpy as np
 from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
 from repro.models.api import Model
 from repro.models.config import ShapeConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import CAT_ENGINE, CAT_KV, CAT_REQUEST, resolve
 from repro.serve.api import (EngineConfig, Request, RequestHandle,
                              RequestStatus, ServeCostModel)
 
@@ -114,7 +116,12 @@ def evict_pages(pool, kv, st, logicals, engine, t) -> float:
         kv.evict(st.rid, lp, jax.tree.map(lambda g, i=i: g[:, i], gathered))
     st.handle.swaps += 1        # one spill episode: len(logicals) pages,
                                 # one bulk transfer over the capacity fabric
-    return engine.charge_tier2(len(logicals) * kv.page_bytes, t)
+    cost = engine.charge_tier2(len(logicals) * kv.page_bytes, t)
+    if engine.tracer.enabled:
+        engine.tracer.span(engine._track, "spill", t, cost, cat=CAT_KV,
+                           rid=st.rid, pages=len(logicals),
+                           bytes=len(logicals) * kv.page_bytes)
+    return cost
 
 
 @dataclasses.dataclass(eq=False)        # identity semantics: these live in
@@ -158,7 +165,7 @@ class Engine:
                  cost_model: Optional[ServeCostModel] = None,
                  mesh=None, rules=None,
                  arbiter=None, tenant: Optional[str] = None,
-                 transport=None, route=None):
+                 transport=None, route=None, tracer=None):
         if model.cfg.family == "encdec":
             raise NotImplementedError(
                 "Engine drives decoder-style models; encdec serving still "
@@ -184,6 +191,10 @@ class Engine:
         self._transport = transport
         self._transport_owned = transport is None
         self.route = route
+        # flight recorder: defaults to the shared transport's tracer
+        # (one recorder per fabric domain), else the zero-cost null
+        self.tracer = resolve(tracer if tracer is not None
+                              else getattr(transport, "tracer", None))
         self.cost = cost_model or ServeCostModel.from_fabric(
             2.0 * model.cfg.param_count())
 
@@ -289,6 +300,11 @@ class Engine:
         self._decode_jit = jax.jit(paged_decode)
         self._decode_fn = self._scoped(self._decode_jit)
 
+    @property
+    def _track(self) -> str:
+        """This engine's trace track (one timeline row per tenant)."""
+        return f"engine:{self.tenant}" if self.tenant else "engine"
+
     # the physical page pool: private arrays for a solo engine, the
     # arbiter's shared arrays when multi-tenant (every tenant's prefill
     # scatter / decode write / swap round-trip hits the SAME pool)
@@ -345,7 +361,7 @@ class Engine:
               budget: Optional[KVBudget] = None,
               cost_model: Optional[ServeCostModel] = None,
               arbiter=None, tenant: Optional[str] = None,
-              transport=None, route=None) -> "Engine":
+              transport=None, route=None, tracer=None) -> "Engine":
         """Engine over local devices, no orchestrator: the KV budget is
         whatever the caller passes (default: unbudgeted tier-1, no
         tier-2).  Pass ``arbiter``/``tenant`` to join a shared
@@ -357,7 +373,7 @@ class Engine:
                                 else jax.random.PRNGKey(0))
         return cls(model, params, cfg, budget=budget, cost_model=cost_model,
                    arbiter=arbiter, tenant=tenant,
-                   transport=transport, route=route)
+                   transport=transport, route=route, tracer=tracer)
 
     @classmethod
     def from_lease(cls, model: Model, lease,
@@ -366,7 +382,7 @@ class Engine:
                    budget: Optional[KVBudget] = None,
                    cost_model: Optional[ServeCostModel] = None,
                    arbiter=None, tenant: Optional[str] = None,
-                   transport=None, route=None) -> "Engine":
+                   transport=None, route=None, tracer=None) -> "Engine":
         """Bind a ``repro.pool.Lease``: the lease's mesh shapes the
         sharding rules and its tier-2 KV grant becomes the engine's
         ``KVBudget.tier2_bytes`` — serving capacity is composed by the
@@ -395,7 +411,7 @@ class Engine:
                                 else jax.random.PRNGKey(0))
         return cls(model, params, cfg, budget=budget, cost_model=cost_model,
                    mesh=mesh, rules=rules, arbiter=arbiter, tenant=tenant,
-                   transport=transport, route=route)
+                   transport=transport, route=route, tracer=tracer)
 
     def _scoped(self, jitted):
         def call(*args):
@@ -434,6 +450,11 @@ class Engine:
                                                 request.arrival_time))
         self.handles[rid] = handle
         self._queue.append(_SlotState(handle))
+        if self.tracer.enabled:
+            self.tracer.instant(self._track, "submit", handle.submit_clock,
+                                cat=CAT_REQUEST, rid=rid,
+                                prompt_len=request.prompt_len,
+                                max_new=request.max_new_tokens)
         return handle
 
     @property
@@ -552,7 +573,8 @@ class Engine:
             demand = sum(self._pages_next(s) for s in running)
             if demand <= allow and self._growth_deliverable(running):
                 break
-            self._pause(running.pop())          # newest admission
+            self._pause(running.pop(),          # newest admission
+                        self.clock + elapsed + dt)
         for st in running:
             want = self._pages_next(st)
             have = self.kv.pages_of(st.rid)
@@ -578,10 +600,17 @@ class Engine:
                             if self.kv.holds(s.rid))
         return growth <= self.kv.hot_free + own_evictable
 
-    def _pause(self, st: _SlotState) -> None:
-        """Deschedule a running row.  Costless: its pages STAY hot until
-        an allocation actually needs them (lazy eviction) — pausing and
-        resuming without intervening pressure moves zero bytes."""
+    def _pause(self, st: _SlotState, t: Optional[float] = None) -> None:
+        """Deschedule a running row at modeled time ``t`` (defaults to
+        the clock).  Costless: its pages STAY hot until an allocation
+        actually needs them (lazy eviction) — pausing and resuming
+        without intervening pressure moves zero bytes."""
+        if self.tracer.enabled:
+            self.tracer.instant(self._track, "pause",
+                                self.clock if t is None else t,
+                                cat=CAT_KV, rid=st.rid,
+                                hot_pages=self.kv.hot_count(st.rid)
+                                if self.kv.holds(st.rid) else 0)
         slot = st.slot
         self._table[slot, :] = self._trash
         self._lengths[slot] = 0
@@ -627,12 +656,18 @@ class Engine:
             # granular spill is impossible, and a partial prefix is
             # useless for recompute — drop the whole sequence's KV and
             # requeue it for re-prefill
-            self._drop_for_recompute(st)
+            self._drop_for_recompute(st, self.clock + t)
             return 0.0
         return evict_pages(self._pool, self.kv, st, hot[:k], self,
                            self.clock + t)
 
-    def _drop_for_recompute(self, st: _SlotState) -> None:
+    def _drop_for_recompute(self, st: _SlotState,
+                            t: Optional[float] = None) -> None:
+        if self.tracer.enabled:
+            self.tracer.instant(self._track, "recompute_drop",
+                                self.clock if t is None else t,
+                                cat=CAT_KV, rid=st.rid,
+                                generated=len(st.handle.tokens))
         self.kv.free(st.rid)
         st.index = 0
         st.handle.status = RequestStatus.QUEUED
@@ -701,6 +736,11 @@ class Engine:
                                       *[pl for _, pl in fetched])
             dt = self.charge_tier2(len(cold) * self.kv.page_bytes,
                                    self.clock + elapsed)
+            if self.tracer.enabled:
+                self.tracer.span(self._track, "fetch",
+                                 self.clock + elapsed, dt, cat=CAT_KV,
+                                 rid=st.rid, pages=len(cold),
+                                 bytes=len(cold) * self.kv.page_bytes)
         self.kv.grow(st.rid, want)
         for lp, phys in enumerate(self.kv.page_table(st.rid)):
             self._table[slot, lp] = phys
@@ -728,6 +768,10 @@ class Engine:
                 self._queue.popleft()
                 st.handle.status = RequestStatus.FAILED_OOM
                 st.handle.done_clock = self.clock + elapsed + dt
+                if self.tracer.enabled:
+                    self.tracer.instant(self._track, "failed_oom",
+                                        st.handle.done_clock,
+                                        cat=CAT_REQUEST, rid=st.rid)
                 continue
             slot = self._free_slot()
             eff = st.effective_prompt()
@@ -757,6 +801,10 @@ class Engine:
                                          slot_cache, jnp.int32(plen - 1))
         # the padded tail is real (wasted) compute on hardware: charge it
         cost = self.cost.prefill_s(bucket)
+        if self.tracer.enabled:
+            self.tracer.span(self._track, "prefill",
+                             self.clock + elapsed, cost, cat=CAT_ENGINE,
+                             rid=st.rid, bucket=bucket, prompt_len=plen)
         tok = int(np.argmax(np.asarray(logits)[0, -1]))
         self._emit(st, tok, self.clock + elapsed + cost)
         if st.handle.done:
@@ -811,6 +859,22 @@ class Engine:
         if len(st.handle.tokens) >= st.request.max_new_tokens or eos_hit:
             st.handle.status = RequestStatus.DONE
             st.handle.done_clock = at
+            if self.tracer.enabled:
+                h = st.handle
+                ttft = (h.first_token_clock - h.submit_clock
+                        if h.first_token_clock is not None else 0.0)
+                self.tracer.instant(self._track, "finish", at,
+                                    cat=CAT_REQUEST, rid=h.rid,
+                                    tokens=len(h.tokens))
+                # one span per request lifetime on the tenant's request
+                # row: submit -> done, with the latency decomposition
+                # downstream reports read straight off the timeline
+                self.tracer.span(f"{self._track}/requests", f"req{h.rid}",
+                                 h.submit_clock, at - h.submit_clock,
+                                 cat=CAT_REQUEST, rid=h.rid, ttft_s=ttft,
+                                 tokens=len(h.tokens), swaps=h.swaps,
+                                 preempts=h.preempts,
+                                 recomputes=h.recomputes)
             if self.kv.holds(st.rid):
                 self.kv.free(st.rid)
             if st.slot is not None:
@@ -855,6 +919,10 @@ class Engine:
         pos = {slot: i for i, slot in enumerate(rows)}
         cost = self.cost.decode_s(len(running))
         at = self.clock + elapsed + cost
+        if self.tracer.enabled:
+            self.tracer.span(self._track, "decode",
+                             self.clock + elapsed, cost, cat=CAT_ENGINE,
+                             rows=len(running), bucket=bucket)
         for st in running:
             tok = int(new_toks[pos[st.slot], 0])
             st.index += 1
@@ -864,48 +932,79 @@ class Engine:
         return cost
 
     # ---- observability ---------------------------------------------------
-    def stats(self) -> Dict[str, Any]:
-        """Throughput, queue depth, page-pool residency, compile counts."""
-        n_running = sum(s is not None for s in self._slots)
-        done = [h for h in self.handles.values()
-                if h.status is RequestStatus.DONE]
-        failed = [h for h in self.handles.values()
-                  if h.status is RequestStatus.FAILED_OOM]
-        recomputes = sum(h.recomputes for h in self.handles.values())
-        swaps = sum(h.swaps for h in self.handles.values())
-        preempts = sum(h.preempts for h in self.handles.values())
-        out = {
-            "clock_s": self.clock,
-            "steps": self.steps,
-            "busy_s": self.busy_s,
-            "queue_depth": len(self._queue),
-            "running": n_running,
-            "swapped": len(self._paused),
-            "completed": len(done),
-            "failed_oom": len(failed),
-            "tokens_decoded": self._decoded_tokens,
+    # flat scalar keys of the legacy stats() dict; each maps 1:1 onto
+    # the registry path  serve/<tenant>/<key>
+    _STATS_KEYS = ("clock_s", "steps", "busy_s", "queue_depth", "running",
+                   "swapped", "completed", "failed_oom", "tokens_decoded",
+                   "throughput_tok_s", "throughput_busy_tok_s", "preempts",
+                   "preempt_swaps", "preempt_recomputes", "prefill_buckets",
+                   "prefill_compiles", "decode_row_buckets",
+                   "decode_compiles")
+
+    def _metrics_prefix(self) -> str:
+        return f"serve/{self.tenant or 'engine'}"
+
+    def metrics(self, registry: Optional[MetricsRegistry] = None,
+                prefix: Optional[str] = None) -> MetricsRegistry:
+        """Fill (and return) a ``repro.obs`` metrics registry with this
+        engine's state under ``serve/<tenant>/...`` — the ONE schema
+        downstream reporting reads; ``stats()`` is a thin adapter."""
+        reg = registry if registry is not None else MetricsRegistry()
+        p = prefix if prefix is not None else self._metrics_prefix()
+        statuses = [h.status for h in self.handles.values()]
+        pairs = (
+            ("clock_s", self.clock),
+            ("steps", self.steps),
+            ("busy_s", self.busy_s),
+            ("queue_depth", len(self._queue)),
+            ("running", sum(s is not None for s in self._slots)),
+            ("swapped", len(self._paused)),
+            ("completed", sum(s is RequestStatus.DONE for s in statuses)),
+            ("failed_oom",
+             sum(s is RequestStatus.FAILED_OOM for s in statuses)),
+            ("tokens_decoded", self._decoded_tokens),
             # clock_s includes idle inter-arrival gaps (advance_clock),
             # so this number is arbitrarily diluted on sparse traces —
             # it is the *offered-load* rate, kept for trace comparisons
-            "throughput_tok_s": (self._decoded_tokens / self.clock
-                                 if self.clock > 0 else 0.0),
+            ("throughput_tok_s", (self._decoded_tokens / self.clock
+                                  if self.clock > 0 else 0.0)),
             # decode rate while the engine is actually working: the
             # hardware-capability number benchmarks should quote
-            "throughput_busy_tok_s": (self._decoded_tokens / self.busy_s
-                                      if self.busy_s > 0 else 0.0),
-            "preempts": preempts,
-            "preempt_swaps": swaps,
-            "preempt_recomputes": recomputes,
-            "prefill_buckets": list(self._buckets),
-            "prefill_compiles": self.prefill_compiles(),
-            "decode_row_buckets": list(self._row_buckets),
-            "decode_compiles": self.decode_compiles(),
-            "kv": self.kv.residency(),
-        }
+            ("throughput_busy_tok_s", (self._decoded_tokens / self.busy_s
+                                       if self.busy_s > 0 else 0.0)),
+            ("preempts",
+             sum(h.preempts for h in self.handles.values())),
+            ("preempt_swaps",
+             sum(h.swaps for h in self.handles.values())),
+            ("preempt_recomputes",
+             sum(h.recomputes for h in self.handles.values())),
+            ("prefill_buckets", list(self._buckets)),
+            ("prefill_compiles", self.prefill_compiles()),
+            ("decode_row_buckets", list(self._row_buckets)),
+            ("decode_compiles", self.decode_compiles()),
+        )
+        for key, value in pairs:
+            reg.set(f"{p}/{key}", value)
+        for key, value in self.kv.residency().items():
+            reg.set(f"{p}/kv/{key}", value)
         # the property materializes the lazy private transport so the
-        # key is schema-stable whether or not a swap ever happened
+        # subtree is schema-stable whether or not a swap ever happened
+        self.transport.metrics(reg, prefix=f"{p}/transport")
+        if self.arbiter is not None:
+            reg.set(f"{p}/tenant", self.tenant)
+            reg.set(f"{p}/allowance", self.kv.allowance())
+        return reg
+
+    def stats(self) -> Dict[str, Any]:
+        """Throughput, queue depth, page-pool residency, compile counts
+        — the legacy dict, adapted off the ``metrics()`` registry."""
+        p = self._metrics_prefix()
+        snap = self.metrics().snapshot(p + "/")
+        out: Dict[str, Any] = {k: snap[f"{p}/{k}"]
+                               for k in self._STATS_KEYS}
+        out["kv"] = self.kv.residency()
         out["transport"] = self.transport.stats()
         if self.arbiter is not None:
-            out["tenant"] = self.tenant
-            out["allowance"] = self.kv.allowance()
+            out["tenant"] = snap[f"{p}/tenant"]
+            out["allowance"] = snap[f"{p}/allowance"]
         return out

@@ -1,0 +1,341 @@
+"""repro.obs validation: flight-recorder ring semantics (bounded, O(1)
+append, wrap without corrupting spans), trace determinism (same
+trace/seed -> bit-identical event streams across runs and across
+``Engine.local`` vs single-tenant-under-arbiter), zero-cost-when-
+disabled (tracing never perturbs tokens or modeled clocks), Chrome
+trace_event exporter schema conformance, the metrics-registry adapters
+behind the legacy ``stats()`` dicts, and the per-link busy-seconds
+conservation bound the fig10 attribution claims rest on."""
+
+import json
+
+import jax
+import pytest
+
+from repro.configs import SMOKE_ARCHS
+from repro.core import fabric as fb
+from repro.core.tiering import KVBudget
+from repro.fabric import Topology, Transport
+from repro.models.api import build_model
+from repro.obs import (CAT_KV, CAT_REQUEST, NULL_TRACER, MetricsRegistry,
+                       NullTracer, Tracer, link_report,
+                       link_report_from_trace, resolve, tier_report,
+                       to_chrome_trace, validate_trace_events,
+                       write_chrome_trace)
+from repro.serve import (Engine, EngineConfig, PoolArbiter, burst_trace,
+                         run_trace)
+
+GB = 1e9
+VOCAB = SMOKE_ARCHS["qwen1.5-0.5b"].vocab
+POOL_PAGES = 6          # tight: forces paging under the heavy trace
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = SMOKE_ARCHS["qwen1.5-0.5b"].__class__(**{
+        **SMOKE_ARCHS["qwen1.5-0.5b"].__dict__, "compute_dtype": "float32"})
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _cfg(**kw):
+    base = dict(max_slots=3, max_seq=64, page_size=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _heavy(n=5, seed=0):
+    return burst_trace(n, prompt_len=12, max_new_tokens=10, vocab=VOCAB,
+                       seed=seed)
+
+
+def _traced_local_run(model, params):
+    """One traced private-pool engine run under paging pressure."""
+    tracer = Tracer()
+    eng = Engine.local(model, _cfg(), params=params,
+                       budget=KVBudget(tier1_pages=POOL_PAGES,
+                                       tier2_bytes=1e9, page_size=8),
+                       tenant="a", tracer=tracer)
+    handles = run_trace(eng, _heavy())
+    return eng, tracer, handles
+
+
+@pytest.fixture(scope="module")
+def traced_run(model, params):
+    eng, tracer, handles = _traced_local_run(model, params)
+    assert eng.stats()["preempt_swaps"] > 0, "pressure not exercised"
+    return {"engine": eng, "tracer": tracer, "handles": handles}
+
+
+# ---------------------------------------------------------------------------
+# flight recorder: ring semantics
+# ---------------------------------------------------------------------------
+
+def test_ring_wraps_without_corrupting_events():
+    tr = Tracer(capacity=8)
+    for i in range(20):
+        tr.span("t", f"s{i}", float(i), 0.5, x=i)
+    assert len(tr) == 8
+    assert tr.total_recorded == 20
+    assert tr.dropped == 12
+    evs = tr.events()
+    # survivors are exactly the most recent 8, oldest first, intact
+    assert [e.name for e in evs] == [f"s{i}" for i in range(12, 20)]
+    for i, e in zip(range(12, 20), evs):
+        assert (e.ph, e.track, e.ts, e.dur) == ("X", "t", float(i), 0.5)
+        assert e.args == {"x": i}
+        assert isinstance(e, tuple) and len(e) == 7
+
+
+def test_ring_partial_fill_and_clear():
+    tr = Tracer(capacity=8)
+    tr.instant("t", "a", 1.0)
+    tr.counter("t", "c", 2.0, 3.5)
+    assert len(tr) == 2 and tr.dropped == 0
+    a, c = tr.events()
+    assert a.ph == "i" and a.dur == 0.0
+    assert c.ph == "C" and c.args == {"value": 3.5}
+    tr.clear()
+    assert len(tr) == 0 and tr.total_recorded == 0 and tr.events() == []
+
+
+def test_tracer_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_null_tracer_and_resolve():
+    assert NULL_TRACER.enabled is False
+    NULL_TRACER.span("t", "s", 0.0, 1.0)
+    NULL_TRACER.instant("t", "i", 0.0)
+    NULL_TRACER.counter("t", "c", 0.0, 1.0)
+    assert len(NULL_TRACER) == 0
+    assert resolve(None) is NULL_TRACER
+    tr = Tracer(capacity=4)
+    assert resolve(tr) is tr
+    assert isinstance(NullTracer(), Tracer)
+    with pytest.raises(TypeError):
+        resolve(42)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + legacy stats() adapters
+# ---------------------------------------------------------------------------
+
+def test_registry_kinds_snapshot_and_tree():
+    reg = MetricsRegistry()
+    reg.counter("a/events").inc()
+    reg.counter("a/events").inc(2)
+    reg.set("a/b/label", "x")
+    for v in range(1, 101):
+        reg.histogram("a/lat").observe(float(v))
+    assert reg.value("a/events") == 3
+    assert reg.histogram("a/lat").summary()["p95"] == 95.0
+    snap = reg.snapshot("a/b/")
+    assert snap == {"a/b/label": "x"}
+    tree = reg.tree()
+    assert tree["a"]["events"] == 3 and tree["a"]["b"]["label"] == "x"
+    with pytest.raises(TypeError):
+        reg.gauge("a/events")          # kind mismatch is an error
+
+
+def test_stats_adapters_preserve_legacy_shapes(traced_run):
+    eng = traced_run["engine"]
+    st = eng.stats()
+    for key in ("steps", "clock_s", "preempt_swaps", "preempt_recomputes",
+                "kv", "transport"):
+        assert key in st, key
+    reg = eng.metrics()
+    snap = reg.snapshot()
+    p = f"serve/{eng.tenant}"
+    assert snap[f"{p}/clock_s"] == st["clock_s"]
+    assert snap[f"{p}/preempt_swaps"] == st["preempt_swaps"]
+    tx = st["transport"]
+    assert "links" in tx, "per-link stats missing (pre-obs regression)"
+    for name, row in tx["links"].items():
+        assert set(row) >= {"busy_s", "bytes", "peak_flows", "stretch_s"}
+
+
+# ---------------------------------------------------------------------------
+# determinism: bit-identical event streams
+# ---------------------------------------------------------------------------
+
+def test_same_trace_same_seed_bit_identical_events(model, params,
+                                                   traced_run):
+    _, tracer2, handles2 = _traced_local_run(model, params)
+    assert traced_run["tracer"].events() == tracer2.events()
+    assert ([h.tokens for h in traced_run["handles"]]
+            == [h.tokens for h in handles2])
+
+
+def test_local_vs_solo_arbiter_identical_engine_events(model, params,
+                                                       traced_run):
+    """A lone tenant under the arbiter replays the private-pool event
+    stream bit-identically — the arbiter adds no modeled time and the
+    tracer observes the same clocks."""
+    tracer = Tracer()
+    arb = PoolArbiter(POOL_PAGES, page_size=8)
+    solo = Engine.local(model, _cfg(), params=params,
+                        budget=KVBudget(tier2_bytes=1e9, page_size=8),
+                        arbiter=arb, tenant="a", tracer=tracer)
+    handles = run_trace(solo, _heavy())
+    assert traced_run["tracer"].events() == tracer.events()
+    assert ([h.tokens for h in traced_run["handles"]]
+            == [h.tokens for h in handles])
+
+
+def test_tracing_never_perturbs_tokens_or_clock(model, params, traced_run):
+    """Zero-cost-when-disabled, observed from the other side: an
+    untraced run is bit-identical to the traced one in every modeled
+    quantity (tracing is passive observation, never a participant)."""
+    eng = Engine.local(model, _cfg(), params=params,
+                       budget=KVBudget(tier1_pages=POOL_PAGES,
+                                       tier2_bytes=1e9, page_size=8),
+                       tenant="a")
+    assert eng.tracer is NULL_TRACER
+    handles = run_trace(eng, _heavy())
+    assert ([h.tokens for h in handles]
+            == [h.tokens for h in traced_run["handles"]])
+    for key in ("steps", "clock_s", "preempt_swaps", "preempt_recomputes"):
+        assert eng.stats()[key] == traced_run["engine"].stats()[key], key
+
+
+def test_request_lifecycle_spans_present(traced_run):
+    tracer = traced_run["tracer"]
+    tracks = tracer.tracks()
+    assert "engine:a" in tracks and "engine:a/requests" in tracks
+    reqs = [e for e in tracer.iter_track("engine:a/requests")
+            if e.ph == "X" and e.cat == CAT_REQUEST]
+    assert len(reqs) == len(traced_run["handles"])
+    for e in reqs:
+        assert e.dur > 0 and {"rid", "tokens", "ttft_s"} <= set(e.args)
+    # paging pressure shows up as kv-category events on the engine row
+    assert any(e.cat == CAT_KV for e in tracer.iter_track("engine:a"))
+
+
+# ---------------------------------------------------------------------------
+# exporter: trace_event schema
+# ---------------------------------------------------------------------------
+
+def test_chrome_export_validates_and_roundtrips(traced_run, tmp_path):
+    path = tmp_path / "trace.json"
+    doc = write_chrome_trace(traced_run["tracer"], str(path),
+                             extra_metadata={"suite": "test_obs"})
+    assert validate_trace_events(doc) == []
+    with open(path) as f:
+        loaded = json.load(f)
+    assert validate_trace_events(loaded) == []
+    assert loaded["otherData"]["suite"] == "test_obs"
+    assert (loaded["otherData"]["events_recorded"]
+            == traced_run["tracer"].total_recorded)
+    evs = loaded["traceEvents"]
+    names = {e["name"] for e in evs if e.get("ph") == "M"}
+    assert {"process_name", "thread_name"} <= names
+    rows = {(e["pid"], e["tid"]) for e in evs if e.get("ph") != "M"}
+    labeled = {(e["pid"], e["tid"]) for e in evs
+               if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert rows <= labeled, "event row without thread_name metadata"
+
+
+def test_validator_catches_malformed_events():
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "no-dur", "pid": 1, "tid": 1, "ts": 0.0},
+        {"ph": "?", "name": "bad-ph"},
+        {"ph": "i", "pid": 1, "tid": 1, "ts": 0.0},        # no name
+    ]}
+    problems = validate_trace_events(bad)
+    assert len(problems) == 3
+    assert validate_trace_events({"nope": 1}) != []
+
+
+# ---------------------------------------------------------------------------
+# per-link conservation + report parity (the fig10 attribution base)
+# ---------------------------------------------------------------------------
+
+def _shared_trunk_transport(tracer=None, bw=10 * GB):
+    """Two endpoints with private leaf links into one shared trunk."""
+    topo = Topology("y")
+    for n in ("a", "b", "sw", "mem"):
+        topo.add_node(n, kind="memory" if n == "mem" else
+                      ("switch" if n == "sw" else "endpoint"))
+    topo.connect("a", "sw", fb.CXL3, capacity=bw, latency=1e-6)
+    topo.connect("b", "sw", fb.CXL3, capacity=bw, latency=1e-6)
+    topo.connect("sw", "mem", fb.CXL3, capacity=bw, latency=1e-6)
+    return Transport(topo, tracer=tracer)
+
+
+def test_per_link_busy_conservation_bound():
+    """Every link's cumulative busy seconds must cover the bytes it
+    carried at line rate (busy_s >= bytes/capacity) — the conservation
+    bound that makes `sum(link busy) >= solo serialization seconds`
+    checkable at all.  Before per-link accounting, ``Transport.stats()``
+    had no ``links`` key and this test fails on the first assert."""
+    tx = _shared_trunk_transport()
+    nbytes = 1.0 * GB
+    tx.begin_transfer(tx.route("a", "mem"), nbytes, 0.0)
+    tx.begin_transfer(tx.route("b", "mem"), nbytes, 0.0)
+    tx.quiesce()
+    links = tx.stats()["links"]
+    assert {"a->sw", "b->sw", "sw->mem"} <= set(links)
+    # reverse directions exist in the topology but carried nothing
+    assert links["mem->sw"]["bytes"] == 0.0
+    assert links["mem->sw"]["busy_s"] == 0.0
+    for name, row in links.items():
+        cap = tx.topology.links[name].capacity
+        assert row["busy_s"] >= row["bytes"] / cap - 1e-9, name
+    # the shared trunk carried both flows: full serialization floor
+    trunk = links["sw->mem"]
+    assert trunk["bytes"] == pytest.approx(2 * nbytes)
+    assert trunk["busy_s"] >= 2 * nbytes / (10 * GB) - 1e-9
+    assert trunk["peak_flows"] == 2
+    assert links["a->sw"]["peak_flows"] == 1
+    # contention stretch: each flow ran at half rate through the trunk
+    assert trunk["stretch_s"] > 0.0
+    # sum over links covers any one flow's solo serialization time
+    solo = nbytes / (10 * GB)
+    assert sum(r["busy_s"] for r in links.values()) >= solo
+
+
+def test_link_report_live_vs_from_trace_parity(tmp_path):
+    tracer = Tracer()
+    tx = _shared_trunk_transport(tracer=tracer)
+    tx.begin_transfer(tx.route("a", "mem"), 0.5 * GB, 0.0)
+    tx.begin_transfer(tx.route("b", "mem"), 0.25 * GB, 0.0)
+    tx.begin_transfer(tx.route("a", "mem"), 0.125 * GB, 0.05)
+    tx.quiesce()
+    live = link_report(tx)
+    doc = to_chrome_trace(tracer)
+    assert validate_trace_events(doc) == []
+    replay = link_report_from_trace(doc)
+    # the replayed report covers exactly the links that saw traffic
+    # (idle reverse-direction links never emitted occupancy spans)
+    busy = {n for n, r in live.items() if r["bytes"] > 0}
+    assert set(replay) == busy
+    for name in busy:
+        for key in ("busy_s", "bytes", "stretch_s"):
+            assert replay[name][key] == pytest.approx(
+                live[name][key], rel=1e-9, abs=1e-9), (name, key)
+        assert replay[name]["peak_flows"] == live[name]["peak_flows"]
+        assert replay[name]["tier"] == live[name]["tier"]
+    tiers = tier_report(live)
+    assert sum(r["links"] for r in tiers.values()) == len(live)
+
+
+def test_transport_metrics_registry_schema():
+    tx = _shared_trunk_transport()
+    tx.begin_transfer(tx.route("a", "mem"), 0.5 * GB, 0.0)
+    tx.quiesce()
+    reg = tx.metrics()
+    snap = reg.snapshot()
+    assert snap["fabric/transfers"] == 1
+    assert snap["fabric/link/a->sw/busy_s"] > 0
+    assert snap["fabric/link/b->sw/busy_s"] == 0.0
+    # the legacy dict is the adapter over this snapshot
+    st = tx.stats()
+    assert st["transfers"] == snap["fabric/transfers"]
+    assert (st["links"]["a->sw"]["busy_s"]
+            == snap["fabric/link/a->sw/busy_s"])
