@@ -1,0 +1,338 @@
+"""Figure 11 (new scenario family) — train+serve co-residency on one
+contended XLink-CXL estate: does contention-aware placement pay?
+
+The paper's pitch is ONE composable estate for everything, which means
+fig6-style training collectives and fig9-style multi-tenant serving
+bursts eventually share spine/trunk links.  This benchmark builds the
+smallest estate where placement genuinely matters — 6 XLink pods over
+3 CXL leaf switches, one spine, one tier-2 trunk, 2 memory nodes — and
+co-runs:
+
+  * a serving job (2 tenants, bursty, KV spill/fetch over the trunk),
+    placed first on pod 0 / memory node 0;
+  * an 8-accelerator data-parallel training job (2 pods) whose exposed
+    DP gradient phase and optimizer-offload shuttle are priced as
+    in-flight transfers on the SAME ``fabric.Transport``
+    (``repro.colo``), so the two workload classes max-min share links.
+
+Placement policies compared (identical workloads, identical fabric):
+
+``scalepool`` (hop-only)
+    picks the first leaf group with capacity — lands the gang on
+    leaf 0 next to the serving job, sharing the serving pod's uplink,
+    the leaf-0 uplink AND the trunk;
+``contention``
+    same hop tiers, but scores candidates by predicted link overlap
+    with live jobs' routes — lands the gang on leaf 1, sharing ONLY
+    the trunk.
+
+Claims checked:
+
+  * placements_differ    — the two policies pick different pod sets
+    (the decision is real, not cosmetic);
+  * contention_dominates — contention-aware placement strictly wins on
+    BOTH axes of the joint frontier: lower mean training step time AND
+    lower serving aggregate p95;
+  * tokens_bit_identical — token streams are identical across both
+    placements and a no-training serving-only run (placement and
+    contention move clocks, never results);
+  * trunk_shared         — the tier-2 trunk carried BOTH flow classes
+    (``train:*`` and ``serve:*`` labels) in both placements: training
+    collectives genuinely share links with serving traffic;
+  * contention_real      — the transport re-rated overlapping
+    transfers under the hop-only placement.
+
+Serving event costs are modeled seconds priced at the FULL-SIZE
+architecture (fig7 convention) with tier-2 link capacities scaled to
+the smoke model's page bytes (fig10 convention); training phase
+volumes are scale-invariant by construction (a phase occupies its
+route for exactly its closed-form seconds when uncontended).
+
+    PYTHONPATH=src python benchmarks/fig11_colocation.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.colo import TrainActor, job_routes, run_colo
+from repro.configs import get_config
+from repro.core import fabric as fb
+from repro.core import simulator as sim
+from repro.core.tiering import KVBudget
+from repro.fabric import Topology, Transport
+from repro.models.api import build_model
+from repro.pool import Allocator, JobRequest, build_inventory
+from repro.serve import (Engine, EngineConfig, ServeCostModel, burst_trace,
+                         latency_summary)
+
+ARCH = "qwen1.5-0.5b"
+PAGE = 16
+PROMPT, MAX_NEW = 32, 128
+SLOTS = 6
+QUOTA = 20                  # per-tenant tier-1 pages: well under demand
+TENANTS = ("a", "b")
+BW_SCALE = 0.002            # fig10's capacity-fabric slowdown
+
+# estate: 6 pods x 5 accels on 3 CXL leaves (radix-4 switch -> 2 pods
+# per leaf), 2 tier-2 memory nodes behind one trunk
+N_PODS, POD_SIZE, N_MEM = 6, 5, 2
+
+# training job: 8-way data parallel over 2 pods (cluster_size 5 ->
+# dp groups of 5+3, a real inter-pod gradient phase) with optimizer
+# offload to the tier-2 pool
+TRAIN_MODEL = sim.LLMConfig("colo-13b", 40, 5120, 40, 4 * 5120,
+                            50257, 2048, 13e9)
+TRAIN_PAR = sim.ParallelismConfig(tp=1, pp=1, dp=8, global_batch_seqs=8)
+TRAIN_TIER2_GB = 16.0
+
+
+def _page_bw(full_cfg, page_bytes: float) -> float:
+    """Capacity-link bytes/s scaled to the smoke model's page bytes."""
+    cm = ServeCostModel.from_fabric(2.0 * full_cfg.param_count())
+    full_page = (2 * full_cfg.n_layers * PAGE * full_cfg.n_kv_heads
+                 * full_cfg.head_dim * 2)
+    return cm.tier2_bw * page_bytes / full_page * BW_SCALE
+
+
+def _inventory():
+    """The placement estate.  The stock CXL switch radix (64) would put
+    all 6 pods on one leaf; narrowing it to 4 spreads them over 3
+    leaves so leaf-locality is a real decision."""
+    inv = build_inventory(n_pods=N_PODS, pod_size=POD_SIZE,
+                          hbm_per_accel_gb=64.0, n_memory_nodes=N_MEM,
+                          memory_node_gb=64.0, interconnect="scalepool")
+    inter = inv.inter_fabric
+    inter = dataclasses.replace(
+        inter, topology=dataclasses.replace(
+            inter.topology, switch=dataclasses.replace(
+                inter.topology.switch, radix=4)))
+    return dataclasses.replace(inv, inter_fabric=inter)
+
+
+def _pricing_topology(inv, bw: float) -> Topology:
+    """The shared-transport estate graph the run is priced on: same
+    node/link names as ``inv.topology()`` but with capacities scaled to
+    the smoke page bytes (fig10 convention), shaped so the links a bad
+    placement shares are genuinely scarce: pod uplinks 8x, leaf->spine
+    uplinks 1.2x, spine->t2sw trunk 1.6x, per-node links 1x."""
+    lat = fb.tier2_memory_fabric(8).latency()
+    topo = Topology("fig11")
+    topo.add_node("spine", "switch")
+    topo.add_node("t2sw", "switch")
+    topo.connect("spine", "t2sw", fb.CXL_CAPACITY, capacity=1.6 * bw,
+                 latency=lat / 4)
+    for leaf in range(N_PODS // inv.pods_per_leaf):
+        topo.add_node(f"leaf:{leaf}", "switch")
+        topo.connect(f"leaf:{leaf}", "spine", fb.CXL3, capacity=1.2 * bw,
+                     latency=lat / 4)
+    for pid in range(N_PODS):
+        topo.add_node(f"pod:{pid}", "pod")
+        topo.connect(f"pod:{pid}", f"leaf:{inv.leaf_of(pid)}", fb.CXL3,
+                     capacity=8 * bw, latency=lat / 4)
+    for node in range(N_MEM):
+        topo.add_node(f"mem:{node}", "memory")
+        topo.connect("t2sw", f"mem:{node}", fb.CXL_CAPACITY, capacity=bw,
+                     latency=lat / 4)
+    return topo
+
+
+def _place(policy: str) -> Tuple[List[int], List[int], List[int], List[int]]:
+    """Admit serving then training on a fresh estate under ``policy``;
+    returns (svc pods, svc tier-2 nodes, train pods, train nodes)."""
+    alloc = Allocator(_inventory(), policy)
+    svc = alloc.allocate(JobRequest("svc", 1, tier2_bytes=8e9,
+                                    kv_bytes=1e9, tenants=TENANTS))
+    trn = alloc.allocate(JobRequest("train", TRAIN_PAR.n_gpus,
+                                    tier2_bytes=TRAIN_TIER2_GB * 1e9))
+    assert svc is not None and trn is not None, "fig11 estate misadmits"
+    return (list(svc.pod_ids), sorted(svc.tier2),
+            list(trn.pod_ids), sorted(trn.tier2))
+
+
+def _train_breakdown() -> sim.StepBreakdown:
+    # cluster_size 5 matches the estate's 5-accel pods, so dp=8 places
+    # as two data-parallel groups (5+3) with a REAL inter-pod gradient
+    # phase (comm_dp_exposed > 0) plus the optimizer-offload shuttle
+    calib = dataclasses.replace(sim.Calibration(), cluster_size=POD_SIZE)
+    system = sim.make_system("scalepool", 2 * POD_SIZE, calib)
+    return sim.simulate_step(TRAIN_MODEL, TRAIN_PAR, system)
+
+
+def _run_policy(policy: str, model, full_cfg, params, traces, bw,
+                n_train_steps: int, tracer=None) -> Dict[str, object]:
+    svc_pods, svc_mems, trn_pods, trn_mems = _place(policy)
+    inv = _inventory()
+    topo = _pricing_topology(inv, bw)
+    tx = Transport(topo, tracer=tracer)
+    cm = ServeCostModel.from_fabric(2.0 * full_cfg.param_count())
+    cfg = EngineConfig(max_slots=SLOTS, max_seq=PROMPT + MAX_NEW,
+                       page_size=PAGE)
+    spill = topo.route(f"pod:{svc_pods[0]}", f"mem:{svc_mems[0]}")
+    engines = {t: Engine.local(model, cfg, params=params,
+                               budget=KVBudget(QUOTA, 1e9, PAGE),
+                               cost_model=cm, transport=tx,
+                               route=spill, tenant=t)
+               for t in TENANTS}
+    actors = []
+    if n_train_steps > 0:
+        bd = _train_breakdown()
+        routes = job_routes(topo, trn_pods, trn_mems)
+        actors = [TrainActor("job0", bd, tx, routes,
+                             n_steps=n_train_steps)]
+    res = run_colo([(engines[t], traces[t]) for t in TENANTS], actors)
+    tx.quiesce()
+    handles = dict(zip(TENANTS, res.serve_handles))
+    from repro.obs import link_report
+    return {
+        "handles": handles,
+        "agg_p95": latency_summary(
+            [h for hs in res.serve_handles for h in hs])["p95_s"],
+        "p95": {t: latency_summary(handles[t])["p95_s"] for t in TENANTS},
+        "train": res.train[0].stats() if actors else None,
+        "placement": {"svc_pods": svc_pods, "train_pods": trn_pods,
+                      "train_mem": trn_mems},
+        "links": link_report(tx),
+        "transport": tx.stats(),
+        "tx": tx,
+    }
+
+
+def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
+    t0 = time.time()
+    mcfg = get_config(ARCH, smoke=True)
+    full_cfg = get_config(ARCH, smoke=False)
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    n = 6 if smoke else 12
+    traces = {t: burst_trace(n, prompt_len=PROMPT, max_new_tokens=MAX_NEW,
+                             vocab=mcfg.vocab, seed=i)
+              for i, t in enumerate(TENANTS)}
+    probe = Engine.local(model, EngineConfig(max_slots=SLOTS,
+                                             max_seq=PROMPT + MAX_NEW,
+                                             page_size=PAGE),
+                         params=params, budget=KVBudget(QUOTA, 1e9, PAGE))
+    bw = _page_bw(full_cfg, probe.kv.page_bytes)
+    # enough steps for training to span the serving burst window
+    n_steps = 8 if smoke else 16
+
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(1 << 17)
+    results = {
+        "hop_only": _run_policy("scalepool", model, full_cfg, params,
+                                traces, bw, n_steps, tracer=tracer),
+        "contention": _run_policy("contention", model, full_cfg, params,
+                                  traces, bw, n_steps),
+        "serve_solo": _run_policy("scalepool", model, full_cfg, params,
+                                  traces, bw, 0),
+    }
+
+    lines = []
+    for kind in ("hop_only", "contention", "serve_solo"):
+        r = results[kind]
+        tr = r["train"]
+        lines.append(
+            f"fig11.{kind},0,agg_p95={r['agg_p95']*1e3:.2f}ms;"
+            + ";".join(f"p95_{t}={r['p95'][t]*1e3:.2f}ms" for t in TENANTS)
+            + f";train_pods={r['placement']['train_pods']}"
+            + (f";step_avg={tr['step_s_avg']*1e3:.2f}ms"
+               f";train_stretch={tr['stretch_s']*1e3:.2f}ms" if tr else "")
+            + f";contended={r['transport']['contended_transfers']}")
+
+    hop, con = results["hop_only"], results["contention"]
+    placements_differ = (hop["placement"]["train_pods"]
+                         != con["placement"]["train_pods"])
+    dominates = (con["train"]["step_s_avg"] < hop["train"]["step_s_avg"]
+                 and con["agg_p95"] < hop["agg_p95"])
+    toks = lambda r: [h.tokens for t in TENANTS for h in r["handles"][t]]
+    tokens_ok = toks(hop) == toks(con) == toks(results["serve_solo"])
+
+    def trunk_classes(r) -> set:
+        by = r["links"].get("spine->t2sw", {}).get("by_label", {})
+        return {lbl.split(":", 1)[0] for lbl, b in by.items() if b > 0}
+
+    trunk_shared = all(trunk_classes(r) >= {"serve", "train"}
+                       for r in (hop, con))
+    contended = hop["transport"]["contended_transfers"]
+
+    dt_us = (time.time() - t0) * 1e6 / max(1, 3 * 2 * n)
+    checks = [
+        ("placements_differ", placements_differ,
+         f"hop={hop['placement']['train_pods']};"
+         f"contention={con['placement']['train_pods']}"),
+        ("contention_dominates", dominates,
+         f"step_avg {hop['train']['step_s_avg']*1e3:.2f}->"
+         f"{con['train']['step_s_avg']*1e3:.2f}ms;"
+         f"agg_p95 {hop['agg_p95']*1e3:.2f}->{con['agg_p95']*1e3:.2f}ms"),
+        ("tokens_bit_identical", tokens_ok,
+         "identical tokens across placements and serve-solo"),
+        ("trunk_shared", trunk_shared,
+         "spine->t2sw carried serve:* AND train:* flows in both"),
+        ("contention_real", contended > 0,
+         f"hop-only contended_transfers={contended}"),
+    ]
+    for key, good, detail in checks:
+        lines.append(f"fig11.claim.{key},{dt_us:.1f},"
+                     f"{detail};{'PASS' if good else 'FAIL'}")
+
+    ok = all(good for _, good, _ in checks)
+    summary = {
+        "train_step_avg_s": {k: results[k]["train"]["step_s_avg"]
+                             for k in ("hop_only", "contention")},
+        "train_stretch_s": {k: results[k]["train"]["stretch_s"]
+                            for k in ("hop_only", "contention")},
+        "agg_p95_s": {k: results[k]["agg_p95"] for k in results},
+        "placement": {k: results[k]["placement"]
+                      for k in ("hop_only", "contention")},
+        "trunk_by_label": {
+            k: results[k]["links"].get("spine->t2sw", {}).get("by_label", {})
+            for k in ("hop_only", "contention")},
+        "tokens_bit_identical": tokens_ok,
+        "all_claims_pass": ok,
+    }
+    if trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(tracer, trace_out)
+        trunk = hop["links"]["spine->t2sw"]
+        lines.append(
+            f"fig11.trace,0,trunk_busy_s={trunk['busy_s']:.4f};"
+            f"trunk_labels={sorted(trunk['by_label'])};"
+            f"events={len(tracer)};out={trace_out}")
+        summary["trace"] = {
+            "path": trace_out, "events": len(tracer),
+            "dropped": tracer.dropped,
+            "trunk_busy_s": trunk["busy_s"],
+            "trunk_by_label": trunk["by_label"],
+        }
+    return lines, summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the headline metrics as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto trace of the hop-only run")
+    args = ap.parse_args(argv)
+    lines, summary = run(smoke=args.smoke, trace_out=args.trace_out)
+    for line in lines:
+        print(line)
+    print(json.dumps(summary, indent=2, default=str))
+    if args.json:
+        from repro.obs import write_json
+        write_json(args.json, "fig11", summary)
+    return 0 if summary["all_claims_pass"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,7 +13,8 @@ import sys
 from benchmarks import (ablations, collectives_bench, fig6_llm_training,
                         fig7_serving_engine, fig7_tiered_memory,
                         fig8_composability, fig9_multitenant,
-                        fig10_contention, pool_scale, roofline, table1_links)
+                        fig10_contention, fig11_colocation, pool_scale,
+                        roofline, table1_links)
 
 SUITES = {
     "fig6": fig6_llm_training,
@@ -22,6 +23,7 @@ SUITES = {
     "fig8": fig8_composability,
     "fig9mt": fig9_multitenant,
     "fig10": fig10_contention,
+    "fig11": fig11_colocation,
     "table1": table1_links,
     "poolscale": pool_scale,
     "collectives": collectives_bench,

@@ -63,6 +63,21 @@ def main(argv=None):
                                   key=lambda kv: -kv[1]["busy_s"]):
                 print(f"  {tier:12s} {r['busy_s']:10.4f}s "
                       f"({r['busy_s'] / total:6.1%})")
+        # who occupied each contended link: fold the per-span flow
+        # labels ("serve:<tenant>", "train:<job>") so a stalled request
+        # can be attributed to the tenant/job whose traffic held the
+        # trunk — the co-residency question fig11 asks
+        labeled = {n: r for n, r in links.items() if r.get("by_label")}
+        if labeled:
+            print("\nlink occupancy by flow label (payload bytes):")
+            for name, r in sorted(labeled.items(),
+                                  key=lambda kv: -kv[1]["bytes"]):
+                tot = sum(r["by_label"].values())
+                shares = ", ".join(
+                    f"{lbl}={b / 1e9:.3f}GB ({b / tot:5.1%})"
+                    for lbl, b in sorted(r["by_label"].items(),
+                                         key=lambda kv: -kv[1]))
+                print(f"  {name:34s} {r['tier']:12s} {shares}")
     else:
         print("no link-occupancy spans in this trace "
               "(tracing ran without fabric transfers)")

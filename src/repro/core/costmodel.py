@@ -152,3 +152,42 @@ def offload_roundtrip_time(tier_bw_gbps: float, tier_latency: float,
         return 0.0
     one_way = sw_overhead + tier_latency + nbytes / (tier_bw_gbps * GB)
     return 2.0 * one_way
+
+
+# ---------------------------------------------------------------------------
+# routed in-flight pricing (repro.colo): base + contention stretch
+# ---------------------------------------------------------------------------
+
+def phase_volume(base_s: float, route: "Route") -> float:
+    """Payload bytes whose *solo* transfer on ``route`` lasts exactly
+    ``base_s`` seconds — the volume to register on a ``Transport`` so a
+    closed-form collective phase occupies its route for its legacy
+    duration.  Zero when the phase is shorter than the route latency
+    (nothing meaningful to serialize)."""
+    if base_s <= route.latency():
+        return 0.0
+    return (base_s - route.latency()) * route.bottleneck_bw
+
+
+def routed_phase_time(transport, route: "Route", base_s: float,
+                      t: float, *, label: Optional[str] = None) -> float:
+    """Price one collective phase of legacy closed-form duration
+    ``base_s`` as an in-flight transfer beginning at modeled time ``t``
+    on a shared ``fabric.Transport``: the phase max-min shares links
+    with everything else in flight (serving spill/fetch traffic,
+    other jobs' collectives) and comes back stretched accordingly.
+
+    Bit-exactness contract (the fig6 regression pins this): the return
+    value is ``base_s`` plus the *contention stretch only*, where the
+    stretch compares the transport's duration against the identical
+    float expression the transport's solo fast path evaluates
+    (``route.latency() + v / route.bottleneck_bw``).  Re-deriving the
+    solo time from ``base_s`` instead would leak one float rounding
+    per phase (``(x * bw) / bw != x``) into every uncontended step.
+    """
+    v = phase_volume(base_s, route)
+    if v <= 0.0:
+        return base_s
+    dur = transport.transfer_s(route, v, t, label=label)
+    solo = route.latency() + v / route.bottleneck_bw
+    return base_s + max(0.0, dur - solo)

@@ -194,6 +194,12 @@ class StepBreakdown:
     bubble: float = 0.0
     offload: float = 0.0
     total: float = 0.0
+    # per-phase inter-fabric bases for routed (in-flight) pricing by
+    # ``repro.colo``: the closed-form seconds each fabric-crossing phase
+    # contributes to ``total``.  Kept out of the sums above — they
+    # decompose ``comm_inter``/``offload``, they do not add to them.
+    comm_pp: float = 0.0        # PP boundary traffic share of comm_inter
+    comm_dp_exposed: float = 0.0  # exposed DP gradient share of comm_inter
 
     @property
     def comm(self) -> float:
@@ -244,6 +250,8 @@ def simulate_step(model: LLMConfig, par: ParallelismConfig, sys: SystemConfig) -
         pp_time = 2.0 * par.n_micro * gate
     out.comm_inter += pp_time
     out.comm_inter_raw += pp_time
+    if par.pp > 1 and pl.pp_boundaries_crossing > 0:
+        out.comm_pp = pp_time       # crosses the inter fabric
 
     # ---- DP gradient reduction ----
     grad_bytes = dtype_bytes * model.n_params / (par.tp * par.pp)
@@ -257,8 +265,11 @@ def simulate_step(model: LLMConfig, par: ParallelismConfig, sys: SystemConfig) -
         dp_time = cm.hierarchical_allreduce_time(dom, int(grad_bytes))
         # bucketed gradient reduction overlaps with backward compute
         bwd = (2.0 / 3.0) * out.compute
-        out.comm_inter += max(0.0, dp_time - c.dp_overlap * bwd)
+        dp_exposed = max(0.0, dp_time - c.dp_overlap * bwd)
+        out.comm_inter += dp_exposed
         out.comm_inter_raw += dp_time
+        if pl.dp_n_groups > 1:
+            out.comm_dp_exposed = dp_exposed   # has an inter-fabric phase
 
     # ---- pipeline bubble (interleaved 1F1B: /vpp) ----
     if par.pp > 1:

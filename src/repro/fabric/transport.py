@@ -60,6 +60,7 @@ class _Flow:
     started: float
     nbytes: float = 0.0               # original payload size
     completion: Optional[float] = None   # estimate returned at begin time
+    label: Optional[str] = None       # "<class>:<owner>" attribution tag
     rates: List[Tuple[float, float]] = field(default_factory=list)
     # (t, bytes/s) at each re-rating interval — recorded only when a
     # tracer is enabled; exported on the transfer's link-occupancy span
@@ -97,21 +98,30 @@ class Transport:
         self.link_bytes: Dict[str, float] = {}
         self.link_peak_flows: Dict[str, int] = {}
         self.link_stretch_s: Dict[str, float] = {}
+        # per-link payload bytes keyed by flow label ("serve:a",
+        # "train:job0", ...) — who occupied the link, not just how much.
+        # Only labeled flows accrue here; unlabeled traffic keeps the
+        # exact legacy accounting and emits byte-identical spans.
+        self.link_label_bytes: Dict[str, Dict[str, float]] = {}
 
     # ---- public API ------------------------------------------------------
     def route(self, src: str, dst: str) -> Route:
         return self.topology.route(src, dst)
 
     def begin_transfer(self, route: Route, nbytes: float,
-                       t: Optional[float] = None) -> float:
+                       t: Optional[float] = None, *,
+                       label: Optional[str] = None) -> float:
         """Start a transfer of ``nbytes`` payload bytes at modeled time
         ``t`` (>= the frontier; earlier begins are clamped forward).
         Returns the modeled completion time.  In-flight transfers
-        sharing any link are re-rated from ``t`` on."""
-        return self._begin(route, nbytes, t)[0]
+        sharing any link are re-rated from ``t`` on.  ``label`` tags
+        the flow for per-tenant/per-job link attribution (convention:
+        ``"<class>:<owner>"``, e.g. ``"serve:a"``, ``"train:job0"``)."""
+        return self._begin(route, nbytes, t, label=label)[0]
 
     def transfer_s(self, route: Route, nbytes: float,
-                   t: Optional[float] = None) -> float:
+                   t: Optional[float] = None, *,
+                   label: Optional[str] = None) -> float:
         """``begin_transfer`` returning the *duration* as seen from the
         requested begin time.  A begin dated before the frontier waits
         for it (causality), and that wait is part of the returned
@@ -123,13 +133,15 @@ class Transport:
         rounding), so callers accumulating step deltas stay
         bit-identical to the pre-transport cost models."""
         t_req = self.now if t is None else float(t)
-        completion, solo, t_eff = self._begin(route, nbytes, t_req)
+        completion, solo, t_eff = self._begin(route, nbytes, t_req,
+                                              label=label)
         if solo and nbytes > 0 and t_eff == t_req:
             return route.latency() + nbytes / route.bottleneck_bw
         return completion - t_req
 
     def _begin(self, route: Route, nbytes: float,
-               t: Optional[float]) -> Tuple[float, bool, float]:
+               t: Optional[float], *,
+               label: Optional[str] = None) -> Tuple[float, bool, float]:
         """Shared begin path: (completion, was_solo, effective_begin)."""
         t = self.now if t is None else max(float(t), self.now)
         self._advance(t)
@@ -139,7 +151,7 @@ class Transport:
             return t + route.latency(), True, t
         solo = not any(self._on_link(l) for l in route.links)
         flow = _Flow(next(self._fid), route, float(nbytes), t,
-                     nbytes=float(nbytes))
+                     nbytes=float(nbytes), label=label)
         self._flows[flow.fid] = flow
         self.peak_inflight = max(self.peak_inflight, len(self._flows))
         for link in route.links:
@@ -328,6 +340,9 @@ class Transport:
             drained = rates.get(fid, 0.0) * dt
             for link in flow.route.links:
                 on_link[link.name] = on_link.get(link.name, 0.0) + drained
+                if flow.label is not None:
+                    by = self.link_label_bytes.setdefault(link.name, {})
+                    by[flow.label] = by.get(flow.label, 0.0) + drained
         for name, nbytes in on_link.items():
             self.link_busy_s[name] = self.link_busy_s.get(name, 0.0) + dt
             self.link_bytes[name] = self.link_bytes.get(name, 0.0) + nbytes
@@ -345,16 +360,18 @@ class Transport:
         if self.tracer.enabled:
             name = f"{flow.route.src}->{flow.route.dst}"
             rates = [(round(t, 9), r) for t, r in flow.rates]
+            extra = {} if flow.label is None else {"label": flow.label}
             self.tracer.span(
                 "fabric", name, flow.started, dur, cat=CAT_FABRIC,
                 fid=flow.fid, bytes=flow.nbytes, solo_s=solo_s,
-                stretch_s=stretch, hops=flow.route.hops, rates=rates)
+                stretch_s=stretch, hops=flow.route.hops, rates=rates,
+                **extra)
             for link in flow.route.links:
                 self.tracer.span(
                     f"link:{link.name}", name, flow.started, dur,
                     cat=CAT_LINK, fid=flow.fid, bytes=flow.nbytes,
                     solo_s=solo_s, capacity=link.capacity,
-                    tier=link_tier(link, self.topology))
+                    tier=link_tier(link, self.topology), **extra)
 
     def _project_completion(self, target: int) -> float:
         """Forward-simulate the current in-flight set (no future

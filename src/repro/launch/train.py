@@ -51,8 +51,10 @@ def main(argv=None):
     p.add_argument("--offload-optimizer", action="store_true")
     # ---- pool-orchestrated resources (repro.pool) ----
     p.add_argument("--pool", default="none",
-                   choices=["none", "scalepool", "baseline"],
-                   help="obtain mesh + tiering from a resource-pool lease")
+                   choices=["none", "scalepool", "baseline", "contention"],
+                   help="obtain mesh + tiering from a resource-pool lease "
+                        "(contention = scalepool estate with overlap-"
+                        "aware placement for co-resident jobs)")
     p.add_argument("--pool-accels", type=int, default=8)
     p.add_argument("--pool-tier2-gb", type=float, default=0.0)
     p.add_argument("--pool-model-parallel", type=int, default=1)

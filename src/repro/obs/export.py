@@ -219,6 +219,9 @@ def link_report(transport, *, window_s: Optional[float] = None
             "mean_rate": nbytes / busy if busy > 0 else 0.0,
             "peak_flows": transport.link_peak_flows.get(name, 0),
             "stretch_s": transport.link_stretch_s.get(name, 0.0),
+            # payload bytes by flow label ("serve:a", "train:job0", ...)
+            # — who occupied the link; empty for unlabeled traffic
+            "by_label": dict(transport.link_label_bytes.get(name, {})),
         }
     return out
 
@@ -294,7 +297,8 @@ def link_report_from_trace(doc: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
         busy = 0.0
         cur_start, cur_end = spans[0][0], spans[0][1]
         peak, active = 1, []
-        for s, t, _ in spans:
+        by_label: Dict[str, float] = {}
+        for s, t, a in spans:
             if s > cur_end:
                 busy += cur_end - cur_start
                 cur_start, cur_end = s, t
@@ -302,6 +306,9 @@ def link_report_from_trace(doc: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
                 cur_end = max(cur_end, t)
             active = [e for e in active if e > s] + [t]
             peak = max(peak, len(active))
+            if a.get("label") is not None:
+                by_label[a["label"]] = (by_label.get(a["label"], 0.0)
+                                        + a.get("bytes", 0.0))
         busy += cur_end - cur_start
         args0 = spans[0][2]
         out[link] = {
@@ -314,6 +321,7 @@ def link_report_from_trace(doc: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
             "peak_flows": peak,
             "stretch_s": sum(max(0.0, (t - s) - a.get("solo_s", t - s))
                              for s, t, a in spans),
+            "by_label": by_label,
         }
     window = max((t for spans in per_track.values()
                   for _, t, _ in spans), default=0.0)

@@ -223,7 +223,7 @@ class Allocator:
     def __init__(self, inventory: Inventory, policy: Optional[str] = None):
         self.inv = inventory
         self.policy = policy or inventory.interconnect
-        if self.policy not in ("scalepool", "baseline"):
+        if self.policy not in ("scalepool", "baseline", "contention"):
             raise ValueError(f"unknown policy {self.policy!r}")
         # free local accel ids per pod, heap-backed (smallest id first for
         # determinism — the same order the old sorted-list scans produced)
@@ -239,13 +239,17 @@ class Allocator:
         # shared trunk (spine -> capacity switch) genuinely caps the
         # aggregate even when individual nodes still have headroom
         self.topo = (inventory.topology()
-                     if self.policy == "scalepool"
+                     if self.policy in ("scalepool", "contention")
                      and inventory.tier2_fabric is not None
                      and inventory.memory_nodes else None)
         self._link_free: Dict[str, float] = (
             {name: l.capacity for name, l in self.topo.links.items()}
             if self.topo is not None else {})
         self._job_links: Dict[str, List[Tuple[str, float]]] = {}
+        # predicted collective/offload route links per live job (link
+        # names on the estate graph) — what ``policy="contention"``
+        # scores candidate placements against
+        self._job_route_links: Dict[str, Tuple[str, ...]] = {}
         self.live: Dict[str, Allocation] = {}
 
     # ---- queries ---------------------------------------------------------
@@ -298,6 +302,7 @@ class Allocator:
             self._free_t2bw[node_id] += bw
         for link_name, bw in self._job_links.pop(job, ()):
             self._link_free[link_name] += bw
+        self._job_route_links.pop(job, None)
 
     # ---- transactional snapshot (for preemption / resize trials) ---------
     def snapshot(self):
@@ -306,7 +311,8 @@ class Allocator:
         return ({k: v.clone() for k, v in self._free.items()},
                 dict(self._free_t2), dict(self._free_t2bw), dict(self.live),
                 dict(self._link_free),
-                {k: list(v) for k, v in self._job_links.items()})
+                {k: list(v) for k, v in self._job_links.items()},
+                dict(self._job_route_links))
 
     def restore(self, snap) -> None:
         self._free = {k: v.clone() for k, v in snap[0].items()}
@@ -315,6 +321,7 @@ class Allocator:
         self.live = dict(snap[3])
         self._link_free = dict(snap[4])
         self._job_links = {k: list(v) for k, v in snap[5].items()}
+        self._job_route_links = dict(snap[6])
 
     # ---- scalepool: composable, hop-minimizing ---------------------------
     def _allocate_scalepool(self, req: JobRequest) -> Optional[Allocation]:
@@ -324,7 +331,11 @@ class Allocator:
         tier2_bw = self._reserve_pool(self._free_t2bw, req.tier2_bw)
         if tier2_bw is None:
             return None
-        pods = self._pick_pods_min_hops(req.n_accels)
+        mem_ids = tuple(sorted(set(tier2) | set(tier2_bw)))
+        if self.policy == "contention":
+            pods = self._pick_pods_contention(req.n_accels, mem_ids)
+        else:
+            pods = self._pick_pods_min_hops(req.n_accels)
         if pods is None:
             return None
         link_plan = self._plan_link_bw(min(pods), tier2_bw)
@@ -346,6 +357,9 @@ class Allocator:
             self._link_free[link_name] -= bw
         if link_plan:
             self._job_links[req.name] = link_plan
+        if self.topo is not None:
+            self._job_route_links[req.name] = \
+                self._route_link_names(pods, mem_ids)
         return Allocation(req.name, accels, tier2, req.n_accels,
                           whole_pods=False, tier2_requested=req.tier2_bytes,
                           kv_bytes=req.kv_bytes, tier2_bw=tier2_bw,
@@ -392,6 +406,74 @@ class Allocator:
             if sum(free[p] for p in group) >= n:
                 return self._greedy_fill(group, free, n)
         # 3. whole fabric
+        return self._greedy_fill(list(free), free, n)
+
+    # ---- contention: hop-minimizing, overlap-avoiding --------------------
+    def _route_link_names(self, pods: List[int],
+                          mem_ids: Tuple[int, ...]) -> Tuple[str, ...]:
+        """Predicted estate links a placement's collective + offload
+        traffic will occupy: gateway (lowest pod) to every other pod of
+        the gang, and gateway to every reserved tier-2 node — the same
+        routes ``repro.colo.job_routes`` pins at run time, widened to
+        the whole gang."""
+        if self.topo is None:
+            return ()
+        gw = min(pods)
+        names = set()
+        for pid in pods:
+            if pid == gw:
+                continue
+            for link in self.topo.route(f"pod:{gw}", f"pod:{pid}").links:
+                names.add(link.name)
+        for node_id in mem_ids:
+            for link in self.topo.route(f"pod:{gw}",
+                                        f"mem:{node_id}").links:
+                names.add(link.name)
+        return tuple(sorted(names))
+
+    def _pick_pods_contention(self, n: int, mem_ids: Tuple[int, ...]
+                              ) -> Optional[List[int]]:
+        """Hop-minimizing placement that breaks ties by predicted link
+        overlap with already-placed jobs' routes: same candidate tiers
+        as ``_pick_pods_min_hops`` (single pod, one leaf group, whole
+        fabric — hops stay the primary key), but within a tier the
+        candidate sharing the fewest links with live jobs wins.  With
+        no live jobs every overlap is zero and the choice reduces
+        exactly to the min-hops pick."""
+        free = {pid: len(v) for pid, v in self._free.items() if len(v)}
+        if sum(free.values()) < n:
+            return None
+        busy: set = set()
+        for links in self._job_route_links.values():
+            busy.update(links)
+
+        def overlap(pods: List[int]) -> int:
+            return sum(1 for name in self._route_link_names(pods, mem_ids)
+                       if name in busy)
+
+        # 1. single pod: (overlap, tightest fit, id) — legacy order when
+        #    nothing is placed yet
+        fitting = [pid for pid, f in free.items() if f >= n]
+        if fitting:
+            return [min(fitting,
+                        key=lambda pid: (overlap([pid]), free[pid], pid))]
+        # 2. one leaf group: legacy takes the first leaf with capacity;
+        #    here the least-overlapping one (leaf id breaks ties)
+        by_leaf: Dict[int, List[int]] = {}
+        for pid in free:
+            by_leaf.setdefault(self.inv.leaf_of(pid), []).append(pid)
+        best = None
+        for leaf in sorted(by_leaf):
+            group = by_leaf[leaf]
+            if sum(free[p] for p in group) < n:
+                continue
+            pods = self._greedy_fill(group, free, n)
+            key = (overlap(pods), leaf)
+            if best is None or key < best[0]:
+                best = (key, pods)
+        if best is not None:
+            return best[1]
+        # 3. whole fabric (one candidate — nothing to score)
         return self._greedy_fill(list(free), free, n)
 
     @staticmethod

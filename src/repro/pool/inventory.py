@@ -69,7 +69,7 @@ class Inventory:
     memory_nodes: Tuple[MemoryNodeSpec, ...]
     inter_fabric: fb.FabricSpec           # pod-to-pod fabric (CXL or IB)
     tier2_fabric: Optional[fb.FabricSpec] # capacity fabric; None = baseline
-    interconnect: str = "scalepool"       # scalepool | baseline
+    interconnect: str = "scalepool"   # scalepool | baseline | contention
     # shared spine -> capacity-switch trunk bandwidth (bytes/s) of the
     # routed estate graph; 0 = full bisection (sum of memory-node
     # bandwidths).  An oversubscribed trunk makes aggregate tier-2
@@ -172,7 +172,11 @@ def build_inventory(
     pods = tuple(PodSpec(i, pod_size, hbm_per_accel_gb * GB, pod_fabric)
                  for i in range(n_pods))
     n_endpoints = n_pods * pod_size
-    if interconnect == "scalepool":
+    if interconnect in ("scalepool", "contention"):
+        # "contention" is the scalepool estate with overlap-aware
+        # placement — the hardware is identical, only WHERE a gang
+        # lands differs (repro.pool.allocator picks the policy up from
+        # Inventory.interconnect)
         inter = fb.cxl_fabric(n_endpoints, link=fb.CXL_COHERENCE)
         tier2 = fb.tier2_memory_fabric(max(8, n_memory_nodes))
         # per-node sustainable bandwidth defaults to the capacity fabric's

@@ -211,8 +211,9 @@ class ResourcePool:
 
 def smoke_pool(policy: str = "scalepool") -> ResourcePool:
     """A small deterministic estate for CPU tests/demos: 4 pods x 8
-    accels, two 1TB memory nodes (scalepool) or none (baseline)."""
+    accels, two 1TB memory nodes (scalepool/contention) or none
+    (baseline)."""
     return ResourcePool(build_inventory(
         n_pods=4, pod_size=8, hbm_per_accel_gb=192.0,
-        n_memory_nodes=(2 if policy == "scalepool" else 0),
+        n_memory_nodes=(0 if policy == "baseline" else 2),
         memory_node_gb=1024.0, interconnect=policy))

@@ -332,11 +332,14 @@ class Scheduler:
         span_endpoints = max(self.inv.pod_size,
                              alloc.n_pods * self.inv.pod_size)
         offloads = job.tier2_bytes > 0
+        # contention-aware placement changes WHERE a gang lands, not the
+        # fabric it trains over: step costs price on the scalepool system
+        sys_kind = "scalepool" if self.policy == "contention" else self.policy
         key = (job.model.name, par.tp, par.pp, par.dp,
                par.global_batch_seqs, par.microbatch_seqs, par.vpp,
-               self.policy, span_endpoints, offloads)
+               sys_kind, span_endpoints, offloads)
         if key not in self._step_cache:
-            system = sim.make_system(self.policy, span_endpoints, self.calib)
+            system = sim.make_system(sys_kind, span_endpoints, self.calib)
             bd = sim.simulate_step(job.model, par, system)
             # jobs without a capacity reservation run no offload traffic;
             # charging them the (policy-dependent) offload path would leak

@@ -309,6 +309,14 @@ class PoolArbiter:
                                     t.engine.clock, cat=CAT_ARBITER,
                                     victim=u, requester=tenant, pages=k,
                                     rid=victim.rid, cost_s=cost)
+                # counter lanes on the arbiter row: the post-revocation
+                # fair shares.  Emitted only on revocation episodes (a
+                # lone tenant never revokes), so single-tenant traced
+                # runs stay bit-identical to the private-pool path.
+                for n, allow in sorted(self._allowances().items()):
+                    self.tracer.counter(self._TRACK, f"allowance:{n}",
+                                        t.engine.clock, float(allow),
+                                        cat=CAT_ARBITER)
 
     def take_charge(self, tenant: str) -> float:
         """Collect (and clear) the swap seconds revocation charged to

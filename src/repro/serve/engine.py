@@ -350,9 +350,12 @@ class Engine:
     def charge_tier2(self, nbytes: float, t: float) -> float:
         """Modeled seconds for one bulk tier-2 transfer beginning at
         modeled time ``t``, fair-sharing links with every transfer
-        already in flight on this engine's transport."""
+        already in flight on this engine's transport.  Flows are
+        labeled ``serve:<tenant>`` so link occupancy can be attributed
+        to the tenant whose paging stalled a request."""
         tx = self.transport            # materializes self.route too
-        return tx.transfer_s(self.route, nbytes, t)
+        return tx.transfer_s(self.route, nbytes, t,
+                             label=f"serve:{self.tenant or 'engine'}")
 
     # ---- construction ----------------------------------------------------
     @classmethod
@@ -501,6 +504,18 @@ class Engine:
         if dt > 0.0:
             self.busy_s += dt
         self.steps += 1
+        if self.tracer.enabled:
+            # counter lanes (Perfetto renders these as area charts):
+            # physical free stack, pause-queue depth, live allowance.
+            # Values are identical between a private pool and a lone
+            # tenant under the arbiter (the fig9 transparency contract),
+            # so traced event streams stay bit-identical across both.
+            self.tracer.counter(self._track, "free_pages", self.clock,
+                                float(self.kv.free_count), cat=CAT_KV)
+            self.tracer.counter(self._track, "paused", self.clock,
+                                float(len(self._paused)))
+            self.tracer.counter(self._track, "allowance", self.clock,
+                                float(self.kv.allowance()), cat=CAT_KV)
         return dt
 
     # ---- internals -------------------------------------------------------

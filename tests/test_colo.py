@@ -1,0 +1,352 @@
+"""repro.colo validation: the co-residency contracts the fig11 claims
+rest on.
+
+* **routed solo bit-exactness** (the satellite bugfix): a training step
+  whose collectives are priced through a quiet ``fabric.Transport`` is
+  bit-identical to the legacy closed-form ``simulate_step`` total, for
+  every fig6 workload on both systems — pinned together with the
+  float-rounding trap (``(x * bw) / bw != x``) the pricing must avoid;
+* **driver degeneracy**: ``run_colo`` with no training actors is
+  bit-identical to ``serve.run_multi_trace``, and a lone training actor
+  under the driver is bit-identical to closed-form step accumulation;
+* **determinism**: interleaved co-residency runs are bit-deterministic,
+  and tracing never perturbs tokens or modeled clocks;
+* **contention-aware placement** (``pool.allocator``): reduces exactly
+  to hop-minimal placement on an empty estate, avoids live jobs' route
+  links when hop-equivalent alternatives exist, and survives
+  release/snapshot/restore; the pool scheduler prices a contention
+  estate identically to scalepool (placement changes WHERE, not the
+  fabric cost model);
+* **flow labels**: per-label link attribution agrees between live
+  transport gauges and the trace-derived report, and unlabeled flows
+  keep label-free spans.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.colo import TrainActor, job_routes, plan_phases, run_colo
+from repro.configs import SMOKE_ARCHS
+from repro.core import costmodel as cmod
+from repro.core import fabric as fb
+from repro.core import simulator as sim
+from repro.core.tiering import KVBudget
+from repro.fabric import Topology, Transport
+from repro.models.api import build_model
+from repro.obs import (Tracer, link_report, link_report_from_trace,
+                       to_chrome_trace)
+from repro.pool import PoolJob, Scheduler, build_inventory
+from repro.pool.allocator import Allocator, JobRequest
+from repro.serve import (Engine, EngineConfig, ServeCostModel, burst_trace,
+                         run_multi_trace)
+
+VOCAB = SMOKE_ARCHS["qwen1.5-0.5b"].vocab
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = SMOKE_ARCHS["qwen1.5-0.5b"].__class__(**{
+        **SMOKE_ARCHS["qwen1.5-0.5b"].__dict__, "compute_dtype": "float32"})
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _estate_topo() -> Topology:
+    return build_inventory(
+        n_pods=4, pod_size=4, hbm_per_accel_gb=64.0, n_memory_nodes=2,
+        memory_node_gb=64.0, interconnect="scalepool").topology()
+
+
+def _actor(name, bd, tx, topo, n_steps):
+    return TrainActor(name, bd, tx, job_routes(topo, [0, 1, 2, 3], [0]),
+                      n_steps=n_steps)
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfix: routed solo pricing is bit-identical to the legacy path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["baseline", "scalepool"])
+def test_routed_solo_step_bit_identical_to_simulate_step(kind):
+    """A training job alone on the fabric must price EXACTLY as the
+    closed-form simulator — not approximately: schedulers compare step
+    times across systems and a rounding-dust divergence would smear
+    every fig6-derived claim."""
+    topo = _estate_topo()
+    for w in sim.FIG6_WORKLOADS:
+        c = dataclasses.replace(sim.Calibration(), ib_load=w.ib_load,
+                                cxl_load=w.cxl_load)
+        bd = sim.simulate_step(w.model, w.par,
+                               sim.make_system(kind, w.par.n_gpus, c))
+        actor = _actor("solo", bd, Transport(topo), topo, n_steps=3)
+        for _ in range(3):
+            assert actor.step() == bd.total     # bit-exact, per step
+        assert actor.clock == 3 * bd.total
+        assert actor.stretch_s == 0.0
+
+
+def test_routed_pricing_sidesteps_volume_roundtrip_rounding():
+    """The trap the bugfix removes: re-deriving the solo duration from
+    the registered volume leaks ``(x * bw) / bw != x`` float dust.  The
+    pre-fix implementation computed exactly that round trip; pin the
+    combo where it visibly diverges AND that routed_phase_time is
+    immune to it."""
+    base, lat, bw = 0.3, 0.03, 3.0
+    topo = Topology("t")
+    topo.add_node("a", "pod")
+    topo.add_node("m", "memory")
+    topo.connect("a", "m", fb.CXL_CAPACITY, capacity=bw, latency=lat)
+    route = topo.route("a", "m")
+    vol = cmod.phase_volume(base, route)
+    assert vol > 0
+    rederived = route.latency() + vol / route.bottleneck_bw
+    assert rederived != base            # the rounding the fix avoids...
+    t = 0.0
+    for _ in range(4):                  # ...and back-to-back phases stay exact
+        got = cmod.routed_phase_time(Transport(topo), route, base, t)
+        assert got == base
+        t += got
+
+
+def test_phase_volume_degenerate_cases():
+    topo = Topology("t")
+    topo.add_node("a", "pod")
+    topo.add_node("m", "memory")
+    topo.connect("a", "m", fb.CXL_CAPACITY, capacity=8.0, latency=0.5)
+    route = topo.route("a", "m")
+    # base inside the route latency: nothing to serialize, nothing priced
+    assert cmod.phase_volume(0.25, route) == 0.0
+    assert cmod.routed_phase_time(Transport(topo), route, 0.25, 0.0) == 0.25
+    # plan_phases drops zero-base and zero-volume phases entirely
+    bd = sim.StepBreakdown()
+    assert plan_phases(bd, {"offload": route}) == ()
+
+
+# ---------------------------------------------------------------------------
+# driver degeneracy + determinism
+# ---------------------------------------------------------------------------
+
+def _serve_setup(model, params, tracer=None):
+    """Two tenants spilling KV over one shared trunk (fig10-shaped)."""
+    cm = ServeCostModel.from_fabric(2.0 * 1e9)
+    topo = Topology("t")
+    topo.add_node("sw", "switch")
+    topo.add_node("mem", "memory")
+    bw = 1e5     # slow trunk: spill flows live long enough to overlap
+                 # the training offload phases (coupling is observable)
+    for t in ("a", "b"):
+        topo.add_node(t, "endpoint")
+        topo.connect(t, "sw", fb.CXL3, capacity=8 * bw, latency=1e-4)
+    topo.connect("sw", "mem", fb.CXL_CAPACITY, capacity=bw, latency=1e-4)
+    tx = Transport(topo, tracer=tracer)
+    engines = {t: Engine.local(model, EngineConfig(max_slots=3, max_seq=64,
+                                                   page_size=8),
+                               params=params,
+                               budget=KVBudget(6, 1e9, 8),
+                               cost_model=cm, transport=tx,
+                               route=topo.route(t, "mem"), tenant=t,
+                               tracer=tracer)
+               for t in ("a", "b")}
+    traces = {t: burst_trace(4, prompt_len=12, max_new_tokens=10,
+                             vocab=VOCAB, seed=i)
+              for i, t in enumerate(("a", "b"))}
+    return engines, traces, tx, topo
+
+
+def _fingerprint(engines, handle_lists):
+    return ([[h.tokens for h in hs] for hs in handle_lists],
+            [[h.latency for h in hs] for hs in handle_lists],
+            [e.clock for e in engines.values()])
+
+
+def test_run_colo_without_training_is_run_multi_trace(model, params):
+    e1, tr1, _, _ = _serve_setup(model, params)
+    ref = run_multi_trace([(e1[t], tr1[t]) for t in ("a", "b")])
+    e2, tr2, _, _ = _serve_setup(model, params)
+    res = run_colo([(e2[t], tr2[t]) for t in ("a", "b")])
+    assert res.train == []
+    assert _fingerprint(e1, ref) == _fingerprint(e2, res.serve_handles)
+
+
+def test_train_only_under_driver_matches_closed_form(model, params):
+    topo = _estate_topo()
+    c = dataclasses.replace(sim.Calibration(), cluster_size=4)
+    bd = sim.simulate_step(sim.MEGATRON,
+                           sim.ParallelismConfig(tp=2, pp=1, dp=4,
+                                                 global_batch_seqs=64),
+                           sim.make_system("scalepool", 8, c))
+    actor = _actor("t", bd, Transport(topo), topo, n_steps=5)
+    res = run_colo([], [actor])
+    assert res.train_stats()["t"]["steps"] == 5
+    assert actor.step_times == [bd.total] * 5
+    assert actor.clock == 5 * bd.total
+
+
+def _colo_run(model, params, tracer=None):
+    engines, traces, tx, topo = _serve_setup(model, params, tracer=tracer)
+    c = dataclasses.replace(sim.Calibration(), cluster_size=4)
+    bd = sim.simulate_step(sim.MEGATRON,
+                           sim.ParallelismConfig(tp=2, pp=1, dp=4,
+                                                 global_batch_seqs=64),
+                           sim.make_system("scalepool", 8, c))
+    # collectives ride the serving trunk so the interleaving contends
+    routes = {"offload": topo.route("a", "mem")}
+    actor = TrainActor("job", bd, tx, routes, n_steps=4)
+    res = run_colo([(engines[t], traces[t]) for t in ("a", "b")], [actor])
+    return engines, actor, res
+
+
+def test_interleaved_colo_run_bit_deterministic(model, params):
+    e1, a1, r1 = _colo_run(model, params)
+    e2, a2, r2 = _colo_run(model, params)
+    assert _fingerprint(e1, r1.serve_handles) == \
+        _fingerprint(e2, r2.serve_handles)
+    assert a1.step_times == a2.step_times
+    assert a1.clock == a2.clock
+    # co-residency actually coupled the workloads (stretch observed)
+    assert a1.stretch_s > 0.0
+
+
+def test_traced_colo_run_identical_to_untraced(model, params):
+    e1, a1, r1 = _colo_run(model, params)
+    e2, a2, r2 = _colo_run(model, params, tracer=Tracer())
+    assert _fingerprint(e1, r1.serve_handles) == \
+        _fingerprint(e2, r2.serve_handles)
+    assert a1.step_times == a2.step_times
+
+
+# ---------------------------------------------------------------------------
+# contention-aware placement
+# ---------------------------------------------------------------------------
+
+def _fig11_inventory():
+    """6 pods over 3 leaves (radix-4 switch), 2 tier-2 nodes: the
+    smallest estate where hop-equivalent placements differ in overlap."""
+    inv = build_inventory(n_pods=6, pod_size=5, hbm_per_accel_gb=64.0,
+                          n_memory_nodes=2, memory_node_gb=64.0,
+                          interconnect="scalepool")
+    inter = inv.inter_fabric
+    inter = dataclasses.replace(
+        inter, topology=dataclasses.replace(
+            inter.topology, switch=dataclasses.replace(
+                inter.topology.switch, radix=4)))
+    return dataclasses.replace(inv, inter_fabric=inter)
+
+
+def test_contention_reduces_to_min_hops_on_empty_estate():
+    for req in (JobRequest("j", 3), JobRequest("k", 8, tier2_bytes=8e9)):
+        pods = {}
+        for policy in ("scalepool", "contention"):
+            a = Allocator(_fig11_inventory(), policy)
+            alloc = a.allocate(req)
+            assert alloc is not None
+            pods[policy] = alloc.pod_ids
+        assert pods["scalepool"] == pods["contention"]
+
+
+def test_contention_placement_avoids_live_routes():
+    """With a serving job live on pod 0 / mem 0, a hop-only allocator
+    lands the training gang next to it on leaf 0; the contention policy
+    takes the hop-equivalent leaf that shares only the trunk."""
+    got = {}
+    for policy in ("scalepool", "contention"):
+        a = Allocator(_fig11_inventory(), policy)
+        svc = a.allocate(JobRequest("svc", 1, tier2_bytes=8e9,
+                                    kv_bytes=1e9))
+        trn = a.allocate(JobRequest("train", 8, tier2_bytes=16e9))
+        assert svc is not None and trn is not None
+        got[policy] = (svc.pod_ids, trn.pod_ids)
+        a.check_conservation()
+    assert got["scalepool"] == ((0,), (0, 1))
+    assert got["contention"][0] == (0,)
+    assert got["contention"][1] == (2, 3)      # own leaf, trunk-only overlap
+
+
+def test_route_links_survive_release_and_snapshot_restore():
+    a = Allocator(_fig11_inventory(), "contention")
+    a.allocate(JobRequest("svc", 1, tier2_bytes=8e9, kv_bytes=1e9))
+    assert "svc" in a._job_route_links
+    snap = a.snapshot()
+    a.allocate(JobRequest("train", 8, tier2_bytes=16e9))
+    assert set(a._job_route_links) == {"svc", "train"}
+    a.restore(snap)
+    assert set(a._job_route_links) == {"svc"}
+    links_before = a._job_route_links["svc"]
+    a.allocate(JobRequest("train", 8, tier2_bytes=16e9))
+    assert a._job_route_links["svc"] == links_before
+    a.release("train")
+    a.release("svc")
+    assert a._job_route_links == {}
+    a.check_conservation()
+
+
+def test_scheduler_prices_contention_estate_as_scalepool():
+    """Placement policy changes WHERE a gang lands, never the fabric
+    cost model: one job's schedule is identical on both policies."""
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=2, global_batch_seqs=64)
+
+    def finish(policy):
+        inv = build_inventory(n_pods=4, pod_size=8, hbm_per_accel_gb=192.0,
+                              n_memory_nodes=2, memory_node_gb=1024.0,
+                              interconnect=policy)
+        s = Scheduler(inv, policy)
+        s.submit(PoolJob("j", sim.MEGATRON, par, n_steps=20,
+                         tier2_bytes=64e9))
+        return s.run().records["j"].finish_t
+
+    assert finish("contention") == finish("scalepool")
+
+
+# ---------------------------------------------------------------------------
+# flow labels
+# ---------------------------------------------------------------------------
+
+def test_link_label_attribution_live_vs_trace():
+    topo = Topology("t")
+    for n in ("a", "b"):
+        topo.add_node(n, "pod")
+    topo.add_node("m", "memory")
+    topo.connect("a", "m", fb.CXL_CAPACITY, capacity=10.0, latency=0.0)
+    topo.connect("b", "m", fb.CXL_CAPACITY, capacity=10.0, latency=0.0)
+    tracer = Tracer()
+    tx = Transport(topo, tracer=tracer)
+    tx.begin_transfer(topo.route("a", "m"), 40.0, 0.0, label="serve:a")
+    tx.begin_transfer(topo.route("b", "m"), 40.0, 1.0, label="train:j")
+    tx.begin_transfer(topo.route("a", "m"), 40.0, 2.0)          # unlabeled
+    tx.quiesce()
+    live = link_report(tx)
+    from_trace = link_report_from_trace(to_chrome_trace(tracer))
+    for name in live:
+        if name in from_trace:      # live lists every link, trace only
+            assert live[name]["by_label"] == \
+                pytest.approx(from_trace[name]["by_label"])
+        else:                       # the traversed ones
+            assert live[name]["by_label"] == {}
+    assert live["a->m"]["by_label"] == pytest.approx({"serve:a": 40.0})
+    assert live["b->m"]["by_label"] == pytest.approx({"train:j": 40.0})
+    # labeled bytes never exceed total link bytes (unlabeled keep legacy
+    # accounting and label-free spans)
+    for name, row in live.items():
+        assert sum(row["by_label"].values()) <= row["bytes"] + 1e-6
+    unlabeled = [e for e in tracer.events()
+                 if e.ph == "X" and "label" not in e.args]
+    assert unlabeled, "unlabeled flow must emit label-free spans"
+
+
+def test_engine_emits_kv_counters_when_traced(model, params):
+    tracer = Tracer()
+    eng = Engine.local(model, EngineConfig(max_slots=3, max_seq=64,
+                                           page_size=8),
+                       params=params, budget=KVBudget(6, 1e9, 8),
+                       tenant="a", tracer=tracer)
+    from repro.serve import run_trace
+    run_trace(eng, burst_trace(3, prompt_len=12, max_new_tokens=8,
+                               vocab=VOCAB, seed=0))
+    names = {e.name for e in tracer.events() if e.ph == "C"}
+    assert {"free_pages", "paused", "allowance"} <= names
