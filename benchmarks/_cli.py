@@ -2,9 +2,14 @@
 
 Every ``fig*.py`` exposes ``run() -> (lines, summary)``; this wraps it
 in the one argparse surface they all share — ``--smoke`` (when the
-module's ``run`` takes it) and ``--json PATH`` (write the headline
+module's ``run`` takes it), ``--json PATH`` (write the headline
 summary as a machine-readable ``repro.obs`` benchmark document instead
-of scraping the CSV stdout).
+of scraping the CSV stdout) and, for modules whose ``run`` takes a
+``trace_out``, ``--trace-out PATH`` plus the ``repro.analysis``
+self-check: ``--sanitize`` replays the exported Perfetto trace through
+the modeled-time sanitizer and fails the benchmark on any causality or
+conservation violation; ``--sanitize-out PATH`` writes the report as
+JSON (the CI artifact next to the trace).
 """
 
 from __future__ import annotations
@@ -16,13 +21,36 @@ import json
 
 def bench_main(name: str, run, argv=None) -> int:
     ap = argparse.ArgumentParser(prog=name)
-    takes_smoke = "smoke" in inspect.signature(run).parameters
+    params = inspect.signature(run).parameters
+    takes_smoke = "smoke" in params
+    takes_trace = "trace_out" in params
     if takes_smoke:
         ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the headline metrics as JSON")
+    if takes_trace:
+        ap.add_argument("--trace-out", default=None, metavar="PATH",
+                        help="write a Perfetto trace of the traced run")
+        ap.add_argument("--sanitize", action="store_true",
+                        help="replay the exported trace through the "
+                             "repro.analysis modeled-time sanitizer; "
+                             "violations fail the benchmark")
+        ap.add_argument("--sanitize-out", default=None, metavar="PATH",
+                        help="write the sanitizer report as JSON "
+                             "(implies --sanitize)")
     args = ap.parse_args(argv)
-    lines, summary = run(smoke=args.smoke) if takes_smoke else run()
+
+    kwargs = {}
+    if takes_smoke:
+        kwargs["smoke"] = args.smoke
+    trace_path = None
+    if takes_trace:
+        trace_path = args.trace_out
+        if (args.sanitize or args.sanitize_out) and trace_path is None:
+            trace_path = f"{name}_trace.json"   # sanitizing needs a trace
+        kwargs["trace_out"] = trace_path
+
+    lines, summary = run(**kwargs)
     for line in lines:
         print(line)
     print(json.dumps(summary, indent=2, default=str))
@@ -32,4 +60,15 @@ def bench_main(name: str, run, argv=None) -> int:
     ok = summary.get("all_claims_pass", summary.get("ok", True))
     if summary.get("fail_cells"):
         ok = False
+
+    if takes_trace and (args.sanitize or args.sanitize_out) and trace_path:
+        from repro.analysis import sanitize_trace_file
+        report = sanitize_trace_file(trace_path)
+        print(report.format())
+        if args.sanitize_out:
+            with open(args.sanitize_out, "w") as f:
+                json.dump(report.to_doc(), f, indent=2)
+                f.write("\n")
+        if not report.ok:
+            ok = False
     return 0 if ok else 1

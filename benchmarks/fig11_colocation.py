@@ -53,9 +53,7 @@ route for exactly its closed-form seconds when uncontended).
 
 from __future__ import annotations
 
-import argparse
 import dataclasses
-import json
 import time
 from typing import Dict, List, Tuple
 
@@ -317,21 +315,11 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write the headline metrics as JSON")
-    ap.add_argument("--trace-out", default=None, metavar="PATH",
-                    help="write a Perfetto trace of the hop-only run")
-    args = ap.parse_args(argv)
-    lines, summary = run(smoke=args.smoke, trace_out=args.trace_out)
-    for line in lines:
-        print(line)
-    print(json.dumps(summary, indent=2, default=str))
-    if args.json:
-        from repro.obs import write_json
-        write_json(args.json, "fig11", summary)
-    return 0 if summary["all_claims_pass"] else 1
+    try:
+        from benchmarks._cli import bench_main
+    except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
+        from _cli import bench_main
+    return bench_main("fig11", run, argv)
 
 
 if __name__ == "__main__":

@@ -76,19 +76,21 @@ def _cost_model(full_cfg, engine) -> ServeCostModel:
         cm, tier2_bw=cm.tier2_bw * engine.kv.page_bytes / full_page)
 
 
-def _run_config(model, full_cfg, trace, budget, *, static=False, lease=None):
+def _run_config(model, full_cfg, trace, budget, *, static=False, lease=None,
+                tracer=None):
     cfg = EngineConfig(max_slots=SLOTS, max_seq=PROMPT + MAX_NEW,
                        page_size=PAGE, reserve_lifetime=static)
     if lease is not None:
-        eng = Engine.from_lease(model, lease, cfg, budget=budget)
+        eng = Engine.from_lease(model, lease, cfg, budget=budget,
+                                tracer=tracer)
     else:
-        eng = Engine.local(model, cfg, budget=budget)
+        eng = Engine.local(model, cfg, budget=budget, tracer=tracer)
     eng.cost = _cost_model(full_cfg, eng)
     handles = run_trace(eng, trace)
     return handles, eng.stats()
 
 
-def run(smoke: bool = True) -> Tuple[List[str], Dict]:
+def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
     t0 = time.time()
     mcfg = get_config(ARCH, smoke=True)
     full_cfg = get_config(ARCH, smoke=False)
@@ -105,8 +107,19 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
         "unbudgeted": dict(budget=KVBudget(None, 0.0, PAGE)),
     }
 
+    # tracing is passive, and ONLY the paged_tier2 run gets the tracer:
+    # each config's engine owns a private degenerate transport, and
+    # mixing several transports' flows onto one recorder would
+    # interleave unrelated runs on the shared fabric/link tracks
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(1 << 16)
+
     lines, results = [], {}
     for name, kw in configs.items():
+        if name == "paged_tier2" and tracer is not None:
+            kw = dict(kw, tracer=tracer)
         handles, stats = _run_config(model, full_cfg, trace, **kw)
         lat = latency_summary(handles)
         results[name] = {"handles": handles, "stats": stats, "lat": lat}
@@ -168,6 +181,13 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
         "lease_local_identical": lease_ok,
         "all_claims_pass": ok,
     }
+    if trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(tracer, trace_out)
+        lines.append(f"fig7serve.trace,0,events={len(tracer)};"
+                     f"out={trace_out}")
+        summary["trace"] = {"path": trace_out, "events": len(tracer),
+                            "dropped": tracer.dropped}
     return lines, summary
 
 

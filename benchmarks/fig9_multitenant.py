@@ -86,7 +86,7 @@ def _ecfg() -> EngineConfig:
                         page_size=PAGE)
 
 
-def run(smoke: bool = True) -> Tuple[List[str], Dict]:
+def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
     t0 = time.time()
     mcfg = get_config(ARCH, smoke=True)
     full_cfg = get_config(ARCH, smoke=False)
@@ -94,6 +94,14 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
     params = model.init(jax.random.PRNGKey(0))
     traffic = _traffic(smoke, mcfg.vocab)
     n_tenants = len(TENANTS)
+    # tracing is passive; ONLY the fair-share pooled run is recorded
+    # (the static/solo reference engines own private degenerate
+    # transports whose flows would interleave unrelated runs on the
+    # recorder's shared tracks)
+    tracer = None
+    if trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer(1 << 16)
 
     # ---- static 1/N partitions: each tenant a private engine ------------
     static_handles: Dict[str, list] = {}
@@ -106,13 +114,13 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
         static_handles[name] = run_trace(eng, traffic[name])
 
     # ---- fair-share pooling: one arbiter, one physical pool -------------
-    arb = PoolArbiter(POOL_PAGES, page_size=PAGE)
+    arb = PoolArbiter(POOL_PAGES, page_size=PAGE, tracer=tracer)
     engines = {}
     for name in TENANTS:
         eng = Engine.local(model, _ecfg(), params=params,
                            budget=KVBudget(tier2_bytes=KV_T2_BYTES / n_tenants,
                                            page_size=PAGE),
-                           arbiter=arb, tenant=name)
+                           arbiter=arb, tenant=name, tracer=tracer)
         eng.cost = _cost_model(full_cfg, eng)
         engines[name] = eng
     fair_lists = run_multi_trace([(engines[n], traffic[n]) for n in TENANTS])
@@ -189,6 +197,13 @@ def run(smoke: bool = True) -> Tuple[List[str], Dict]:
         "single_tenant_bit_exact": bit_exact,
         "all_claims_pass": ok,
     }
+    if trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(tracer, trace_out)
+        lines.append(f"fig9mt.trace,0,events={len(tracer)};"
+                     f"out={trace_out}")
+        summary["trace"] = {"path": trace_out, "events": len(tracer),
+                            "dropped": tracer.dropped}
     return lines, summary
 
 

@@ -80,3 +80,30 @@ print(f"\nreading: every modeled second of the {summary['shared_degradation']:.2
       f"p95 blow-up is on the trunk's queue — the isolated and "
       f"hierarchical estates keep per-tenant leaf links below "
       f"saturation, which is the paper's case for tiered fabrics.")
+
+# ---------------------------------------------------------------------------
+# 4. self-check: replay the exported stream through the modeled-time
+#    sanitizer (repro.analysis).  Invariants the sanitizer enforces:
+#
+#      finite-clock            every ts/dur finite, dur >= 0
+#      track-monotone          per-track event ends never regress
+#      span-serial             one engine never overlaps two compute spans
+#      transfer-causality      every fabric span pairs with a prior
+#                              begin_transfer carrying the same fid+bytes
+#      link-conservation       dur >= solo_s, bytes <= capacity x dur,
+#                              and per link the span-interval UNION times
+#                              capacity covers the total bytes moved
+#      kv-conservation         free + hot pages == pool at every step-end
+#                              sample, across arbiter revocations
+#      revocation-attribution  swap seconds charged to a tenant never
+#                              exceed revocation costs priced against it
+#
+#    The same check runs live in CI via `--sanitize` on the fig7/9/10/11
+#    smoke benchmarks, and offline via scripts/sanitize_trace.py.
+# ---------------------------------------------------------------------------
+from repro.analysis import sanitize_trace_doc
+
+report = sanitize_trace_doc(doc)
+print(f"\n== modeled-time sanitizer ==")
+print(report.format())
+assert report.ok, "the exported trace violates a causality invariant"

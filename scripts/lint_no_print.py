@@ -1,54 +1,26 @@
-"""Lint: no bare ``print(`` in the library (``src/repro/``).
+"""DEPRECATED shim — the bare-print lint moved into the framework.
 
-Library code must report through ``repro.obs`` — metrics via the
-registry, timelines via the tracer, and any human-facing console
-output through the one sanctioned site, ``repro.obs.console``.  A bare
-``print`` in ``src/repro`` is either debug residue or a report that
-belongs in the registry, so CI fails on it.
+This entry point is kept so existing CI invocations and docs don't
+break; it now delegates to ``repro.analysis.lints`` running ONLY the
+``no-bare-print`` rule.  Prefer the full rule set:
 
-AST-based (not grep): only actual ``print(...)`` *calls* of the
-builtin count — the word appearing in a docstring, comment, or as an
-attribute (``obj.print(...)``) does not.  ``benchmarks/``, ``scripts/``
-and ``examples/`` are CLI surfaces and stay free to print.
+    PYTHONPATH=src python -m repro.analysis.lints [PATH...]
 
-    python scripts/lint_no_print.py            # lints src/repro
-    python scripts/lint_no_print.py PATH...    # lint specific trees
+which adds ``no-wallclock``, ``compat-imports`` and
+``no-mutable-default`` on top, with per-line
+``# repro: allow(<rule>)`` suppressions.
 """
-import ast
+
+import os
 import sys
-from pathlib import Path
 
-ALLOWED = {Path("src/repro/obs/console.py")}
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
 
-
-def print_calls(path: Path):
-    tree = ast.parse(path.read_text(), filename=str(path))
-    for node in ast.walk(tree):
-        if (isinstance(node, ast.Call)
-                and isinstance(node.func, ast.Name)
-                and node.func.id == "print"):
-            yield node.lineno
-
-
-def main(argv=None) -> int:
-    roots = [Path(p) for p in (argv or sys.argv[1:])] or [Path("src/repro")]
-    bad = []
-    for root in roots:
-        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
-        for f in files:
-            if f in ALLOWED:
-                continue
-            for line in print_calls(f):
-                bad.append(f"{f}:{line}")
-    if bad:
-        sys.stderr.write(
-            "bare print() in library code (use repro.obs.console or the "
-            "metrics registry):\n  " + "\n  ".join(bad) + "\n")
-        return 1
-    sys.stderr.write(f"lint_no_print: clean "
-                     f"({', '.join(str(r) for r in roots)})\n")
-    return 0
-
+from repro.analysis.lints import main                   # noqa: E402
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    sys.stderr.write("lint_no_print.py is a deprecation shim: running "
+                     "repro.analysis.lints --rule no-bare-print\n")
+    argv = sys.argv[1:] or ["src/repro"]
+    raise SystemExit(main(["--rule", "no-bare-print"] + argv))

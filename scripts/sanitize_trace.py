@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Offline modeled-time sanitizer: replay exported Perfetto traces
+through ``repro.analysis`` and fail on causality / conservation
+violations.
+
+    PYTHONPATH=src python scripts/sanitize_trace.py TRACE.json [...]
+        [--json REPORT.json]
+
+Exit status 1 if any trace violates an invariant (the report names
+rule, track, and modeled timestamp per violation).  ``--json`` writes
+the report document(s) for CI artifacts; with several inputs the file
+holds ``{path: report}``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
+
+from repro.analysis import sanitize_trace_file          # noqa: E402
+from repro.obs.console import emit                      # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="check exported traces against the modeled-time "
+                    "causality and conservation invariants")
+    ap.add_argument("traces", nargs="+", metavar="TRACE.json")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the sanitizer report(s) as JSON")
+    args = ap.parse_args(argv)
+    reports = {}
+    ok = True
+    for path in args.traces:
+        report = sanitize_trace_file(path)
+        reports[path] = report.to_doc()
+        emit(f"== {path}")
+        emit(report.format())
+        ok &= report.ok
+    if args.json:
+        doc = (next(iter(reports.values())) if len(reports) == 1
+               else reports)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

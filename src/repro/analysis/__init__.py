@@ -1,0 +1,57 @@
+"""repro.analysis — static + dynamic correctness tooling for the estate.
+
+Two halves, one discipline (modeled-time determinism — the property
+every headline claim in this repo rests on):
+
+    lints     — pluggable AST rule engine (``repro.analysis.lints``)
+                with per-line ``# repro: allow(<rule>)`` suppressions:
+                ``no-bare-print``, ``no-wallclock``, ``compat-imports``,
+                ``no-mutable-default``.  CLI:
+                ``python -m repro.analysis.lints src/repro``.
+    sanitizer — modeled-time causality checker over ``obs.Tracer``
+                event streams, live (``attach(tracer)``) or offline
+                from an exported Perfetto JSON
+                (``sanitize_trace_file``); wired into every benchmark
+                CLI as ``--sanitize`` and ``scripts/sanitize_trace.py``.
+
+Invariants the sanitizer enforces
+---------------------------------
+
+* **finite-clock** — every ``ts``/``dur`` finite, ``dur >= 0``.
+* **track-monotone** — per-track event *end* times never regress: one
+  track is one actor's timeline.  (Exempt: the arbiter's track, which
+  stamps events at victims' clocks; future-dated ``submit`` instants;
+  ``recompute_drop`` decisions that precede already-emitted spill
+  ends.)
+* **span-serial** — an engine's compute spans (prefill/decode) never
+  overlap: one engine runs one program at a time.
+* **transfer-causality** — every fabric transfer span pairs 1:1 with a
+  ``begin_transfer`` instant of the same flow id, begin <= completion,
+  payload bytes agree.
+* **link-conservation** — per link span ``dur >= solo_s`` and
+  ``bytes <= capacity * dur``; per link, total bytes fit inside the
+  interval-union of its occupancy spans times capacity (concurrent
+  flows share a link, they don't multiply it).
+* **kv-conservation** — at every engine step-end sample, free pages +
+  resident pages across the pool's tenants == pool size: no page
+  leaked or double-freed, arbiter revocations included.
+* **revocation-attribution** — seconds charged to a victim tenant
+  never exceed the revocation costs recorded against it.
+
+This module deliberately imports nothing heavyweight (no jax): the
+lint CLI and offline sanitizer must start fast enough to run on every
+commit.
+"""
+
+from repro.analysis.sanitizer import (RULES, Sanitizer, SanitizerReport,
+                                      TraceViolation, attach,
+                                      events_from_trace_doc,
+                                      sanitize_events, sanitize_tracer,
+                                      sanitize_trace_doc,
+                                      sanitize_trace_file)
+
+__all__ = [
+    "RULES", "Sanitizer", "SanitizerReport", "TraceViolation", "attach",
+    "events_from_trace_doc", "sanitize_events", "sanitize_tracer",
+    "sanitize_trace_doc", "sanitize_trace_file",
+]

@@ -1,0 +1,372 @@
+"""Pluggable AST lint rules for the modeled-time estate.
+
+The repo's headline claims (bit-identical traced/untraced runs,
+solo-exact transport pricing, conservation of link busy-seconds) rest
+on *modeled-time determinism*: library code must never read the host
+wall clock, draw unseeded randomness, or bypass the observability
+layer.  These rules are the static half of that discipline — the
+dynamic half is ``repro.analysis.sanitizer``, which checks the event
+streams the instrumented runs actually emit.
+
+Each rule is an AST visitor keyed by a stable name; violations carry
+``path:line`` plus a message.  A justified exception is annotated
+inline on the offending line::
+
+    t0 = time.time()    # repro: allow(no-wallclock) host-side profiling
+
+Shipped rules:
+
+``no-bare-print``
+    No ``print(`` calls anywhere under ``src/repro`` — human-facing
+    output goes through ``repro.obs.console``, reports through the
+    metrics registry.  (Migrated from ``scripts/lint_no_print.py``,
+    which is now a shim over this framework.)
+``no-wallclock``
+    Inside the modeled-time subsystems (``serve/``, ``fabric/``,
+    ``pool/``, ``colo/``, ``obs/``): no ``time.time()`` /
+    ``perf_counter()`` / ``datetime.now()`` and no *unseeded* module-
+    level ``random`` / ``np.random`` calls.  Wall clocks and ambient
+    RNG state make event streams host-dependent; modeled clocks and
+    explicitly-seeded generators do not.
+``compat-imports``
+    The jax surfaces that drifted across 0.4.x vs >=0.6 (``shard_map``
+    kwargs, ``set_mesh``/``use_mesh``, pallas compiler params,
+    ``Compiled.cost_analysis()`` shape) must be reached through
+    ``repro.core.compat``, never imported from jax directly.
+``no-mutable-default``
+    No mutable literals (list/dict/set displays or comprehensions) as
+    function-parameter or dataclass-field defaults — the shared-
+    instance aliasing bug class.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.lints [PATH...]   # default src/repro
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "LintViolation", "Rule", "RULES", "iter_py_files", "lint_file",
+    "lint_paths", "main", "suppressed_lines",
+]
+
+# one inline annotation silences one rule on one line:
+#   ``# repro: allow(<rule>)`` with an optional trailing reason
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(\s*([\w\-,\s]+?)\s*\)")
+
+# subsystems that run on the modeled clock: the no-wallclock scope
+MODELED_TIME_DIRS = ("serve", "fabric", "pool", "colo", "obs")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def suppressed_lines(source: str) -> dict:
+    """Map line number -> set of rule names allowed on that line."""
+    out: dict = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+class Rule:
+    """One lint rule.  Subclasses set ``name``/``description`` and
+    implement ``check``; ``applies_to`` scopes the rule by path."""
+
+    name: str = ""
+    description: str = ""
+
+    def applies_to(self, path: Path) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, path: Path,
+              source: str) -> Iterator[Tuple[int, str]]:
+        raise NotImplementedError
+
+
+def _call_name(node: ast.AST) -> Optional[str]:
+    """Dotted name of a call target: ``a.b.c`` -> "a.b.c", else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class NoBarePrint(Rule):
+    name = "no-bare-print"
+    description = ("bare print() in library code — use repro.obs.console "
+                   "or the metrics registry")
+
+    def check(self, tree, path, source):
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                yield node.lineno, ("bare print() in library code (route "
+                                    "through repro.obs.console)")
+
+
+class NoWallclock(Rule):
+    name = "no-wallclock"
+    description = ("wall-clock reads / unseeded RNG inside modeled-time "
+                   "subsystems break trace determinism")
+
+    # module-level calls that read host state
+    _WALLCLOCK_CALLS = {
+        "time.time", "time.time_ns", "time.perf_counter",
+        "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+        "time.process_time",
+        "datetime.now", "datetime.utcnow", "datetime.today", "date.today",
+        "datetime.datetime.now", "datetime.datetime.utcnow",
+        "datetime.datetime.today", "datetime.date.today",
+    }
+    # module-state RNG namespaces: any call into them is ambient/unseeded
+    _RNG_MODULES = ("random.", "np.random.", "numpy.random.",
+                    "jax.random.")            # jax.random.* is keyed, so
+    # jax.random is NOT ambient — exclude it below; listed here only to
+    # document the decision
+    _RNG_CLASS_OK = {"Random", "RandomState", "Generator", "SeedSequence",
+                     "default_rng", "PRNGKey", "key"}
+    _WALLCLOCK_IMPORTS = {
+        ("time", "time"), ("time", "time_ns"), ("time", "perf_counter"),
+        ("time", "perf_counter_ns"), ("time", "monotonic"),
+        ("time", "monotonic_ns"), ("time", "process_time"),
+        ("datetime", "datetime"), ("datetime", "date"),
+    }
+
+    def applies_to(self, path: Path) -> bool:
+        parts = set(path.parts)
+        return "repro" in parts and bool(parts & set(MODELED_TIME_DIRS))
+
+    def _rng_violation(self, dotted: str, node: ast.Call) -> Optional[str]:
+        for mod in ("random.", "np.random.", "numpy.random."):
+            if dotted.startswith(mod):
+                fn = dotted[len(mod):]
+                if fn in ("seed",):
+                    return (f"{dotted}() mutates global RNG state — "
+                            f"construct a seeded generator instead")
+                if fn not in self._RNG_CLASS_OK:
+                    return (f"{dotted}() draws from ambient RNG state — "
+                            f"use a seeded RandomState/Generator")
+                # constructing a generator is fine only when seeded
+                if not node.args and not any(
+                        kw.arg in ("seed", "x") for kw in node.keywords):
+                    return (f"{dotted}() without a seed is "
+                            f"host-nondeterministic")
+        return None
+
+    def check(self, tree, path, source):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                dotted = _call_name(node.func)
+                if dotted is None:
+                    continue
+                if dotted in self._WALLCLOCK_CALLS:
+                    yield node.lineno, (
+                        f"{dotted}() reads the host wall clock inside a "
+                        f"modeled-time subsystem")
+                    continue
+                msg = self._rng_violation(dotted, node)
+                if msg is not None:
+                    yield node.lineno, msg
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    if (node.module, alias.name) in self._WALLCLOCK_IMPORTS:
+                        yield node.lineno, (
+                            f"'from {node.module} import {alias.name}' "
+                            f"pulls a wall-clock surface into a "
+                            f"modeled-time subsystem")
+
+
+class CompatImports(Rule):
+    name = "compat-imports"
+    description = ("version-drifted jax surfaces must be reached via "
+                   "repro.core.compat")
+
+    _DRIFTED_NAMES = {"shard_map", "set_mesh", "use_mesh",
+                      "CompilerParams", "TPUCompilerParams"}
+    # receivers sanctioned to expose the drifted call shape
+    _OK_RECEIVERS = {"compat"}
+
+    def applies_to(self, path: Path) -> bool:
+        return not str(path).endswith("core/compat.py")
+
+    def check(self, tree, path, source):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and node.module.split(".")[0] == "jax":
+                for alias in node.names:
+                    if alias.name in self._DRIFTED_NAMES:
+                        yield node.lineno, (
+                            f"'from {node.module} import {alias.name}' — "
+                            f"this surface drifted across jax versions; "
+                            f"import it from repro.core.compat")
+            elif isinstance(node, ast.Call):
+                dotted = _call_name(node.func)
+                if dotted is None:
+                    continue
+                head, _, tail = dotted.rpartition(".")
+                if tail == "cost_analysis" and head \
+                        and head not in self._OK_RECEIVERS:
+                    yield node.lineno, (
+                        f"{dotted}() — Compiled.cost_analysis() changed "
+                        f"shape across jax versions; call "
+                        f"repro.core.compat.cost_analysis(compiled)")
+                elif tail in ("CompilerParams", "TPUCompilerParams") \
+                        and head.split(".")[0] not in self._OK_RECEIVERS:
+                    yield node.lineno, (
+                        f"{dotted}() — pallas compiler params drifted; "
+                        f"use repro.core.compat.tpu_compiler_params()")
+
+
+class NoMutableDefault(Rule):
+    name = "no-mutable-default"
+    description = ("mutable literal as a function/dataclass default "
+                   "aliases one instance across calls")
+
+    _MUTABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                ast.SetComp)
+
+    def _defaults(self, fn) -> Iterator[ast.AST]:
+        args = fn.args
+        yield from (d for d in args.defaults if d is not None)
+        yield from (d for d in args.kw_defaults if d is not None)
+
+    def _is_dataclass(self, cls: ast.ClassDef) -> bool:
+        for dec in cls.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = _call_name(target) or ""
+            if name.split(".")[-1] == "dataclass":
+                return True
+        return False
+
+    def check(self, tree, path, source):
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for d in self._defaults(node):
+                    if isinstance(d, self._MUTABLE):
+                        yield d.lineno, (
+                            f"mutable default in {node.name}() is shared "
+                            f"across calls — default to None (or a "
+                            f"dataclasses.field factory)")
+            elif isinstance(node, ast.ClassDef) and self._is_dataclass(node):
+                for stmt in node.body:
+                    value = None
+                    if isinstance(stmt, ast.AnnAssign):
+                        value = stmt.value
+                    elif isinstance(stmt, ast.Assign):
+                        value = stmt.value
+                    if isinstance(value, self._MUTABLE):
+                        yield value.lineno, (
+                            f"mutable default on dataclass {node.name} "
+                            f"field — use dataclasses.field("
+                            f"default_factory=...)")
+
+
+RULES: Tuple[Rule, ...] = (NoBarePrint(), NoWallclock(), CompatImports(),
+                           NoMutableDefault())
+
+
+def iter_py_files(roots: Sequence[Path]) -> Iterator[Path]:
+    for root in roots:
+        if root.is_file():
+            yield root
+        else:
+            yield from sorted(root.rglob("*.py"))
+
+
+def lint_file(path: Path, rules: Iterable[Rule] = RULES
+              ) -> List[LintViolation]:
+    """All un-suppressed violations in one file."""
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as err:
+        return [LintViolation("syntax", str(path), err.lineno or 0,
+                              f"does not parse: {err.msg}")]
+    allowed = suppressed_lines(source)
+    out: List[LintViolation] = []
+    for rule in rules:
+        if not rule.applies_to(path):
+            continue
+        for line, message in rule.check(tree, path, source):
+            if rule.name in allowed.get(line, ()):
+                continue
+            out.append(LintViolation(rule.name, str(path), line, message))
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out
+
+
+def lint_paths(paths: Sequence[Path], rules: Iterable[Rule] = RULES
+               ) -> List[LintViolation]:
+    out: List[LintViolation] = []
+    for f in iter_py_files([Path(p) for p in paths]):
+        out.extend(lint_file(f, rules))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI: lint the given trees (default ``src/repro``); exit 1 on any
+    un-annotated violation."""
+    import argparse
+
+    from repro.obs.console import emit, warn
+
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lints",
+        description="AST lint rules guarding modeled-time determinism")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    metavar="PATH", help="files or trees to lint")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="NAME", dest="rules",
+                    help="run only the named rule (repeatable)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list available rules and exit")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule in RULES:
+            emit(f"{rule.name:20s} {rule.description}")
+        return 0
+    rules: Iterable[Rule] = RULES
+    if args.rules:
+        by_name = {r.name: r for r in RULES}
+        unknown = [n for n in args.rules if n not in by_name]
+        if unknown:
+            warn(f"unknown rule(s): {', '.join(unknown)} "
+                 f"(have: {', '.join(by_name)})")
+            return 2
+        rules = tuple(by_name[n] for n in args.rules)
+    violations = lint_paths([Path(p) for p in args.paths], rules)
+    for v in violations:
+        emit(v.format())
+    names = ", ".join(r.name for r in rules)
+    where = ", ".join(str(p) for p in args.paths)
+    if violations:
+        warn(f"{len(violations)} lint violation(s) over {where} "
+             f"[{names}] — annotate justified lines with "
+             f"'# repro: allow(<rule>) <reason>'")
+        return 1
+    import sys
+    emit(f"repro.analysis.lints: clean ({where}) [{names}]",
+         stream=sys.stderr)
+    return 0

@@ -1,0 +1,7 @@
+"""``python -m repro.analysis.lints [PATH...]``."""
+
+import sys
+
+from repro.analysis.lints import main
+
+sys.exit(main())

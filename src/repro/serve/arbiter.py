@@ -165,6 +165,18 @@ class PoolArbiter:
                 f"physical pool must serve the same cache geometry")
         kv = _TenantKV(self, tenant, tier2_bytes)
         self._tenants[tenant] = _Tenant(tenant, engine, kv)
+        if self.tracer.enabled and len(self._tenants) >= 2:
+            # pool membership, re-announced per registration past the
+            # first: the repro.analysis sanitizer switches its page
+            # conservation check from per-engine to pool-wide on this
+            # event.  Gated on >= 2 tenants so a lone tenant's traced
+            # stream stays bit-identical to the private-pool path.
+            # register() runs inside Engine.__init__ BEFORE the engine's
+            # clock attribute exists, hence the getattr.
+            self.tracer.instant(self._TRACK, "pool_tenants",
+                                getattr(engine, "clock", 0.0),
+                                cat=CAT_ARBITER, pages=self.num_pages,
+                                tenants=sorted(self._tenants))
         return kv
 
     @property
@@ -292,7 +304,7 @@ class PoolArbiter:
                     self.tracer.instant(self._TRACK, "recompute_drop",
                                         t.engine.clock, cat=CAT_ARBITER,
                                         victim=u, requester=tenant,
-                                        rid=victim.rid)
+                                        rid=victim.rid, pages=len(hot))
                 continue
             # the victim's pages ride ITS tier-2 route: register the
             # transfer on the victim engine's transport at its clock

@@ -510,12 +510,23 @@ class Engine:
             # Values are identical between a private pool and a lone
             # tenant under the arbiter (the fig9 transparency contract),
             # so traced event streams stay bit-identical across both.
+            if self.steps == 1:
+                # pool geometry, once: the conservation baseline the
+                # repro.analysis sanitizer checks page counters against
+                self.tracer.instant(self._track, "kv_pool", self.clock,
+                                    cat=CAT_KV, pages=self.kv.num_pages)
             self.tracer.counter(self._track, "free_pages", self.clock,
                                 float(self.kv.free_count), cat=CAT_KV)
             self.tracer.counter(self._track, "paused", self.clock,
                                 float(len(self._paused)))
             self.tracer.counter(self._track, "allowance", self.clock,
                                 float(self.kv.allowance()), cat=CAT_KV)
+            # hot_pages LAST in the step-end block: the sanitizer treats
+            # it as the tenant's authoritative residency sample and
+            # checks free + sum(hot) == pool against the same block's
+            # free_pages value
+            self.tracer.counter(self._track, "hot_pages", self.clock,
+                                float(self.kv.hot_used()), cat=CAT_KV)
         return dt
 
     # ---- internals -------------------------------------------------------
@@ -682,7 +693,9 @@ class Engine:
             self.tracer.instant(self._track, "recompute_drop",
                                 self.clock if t is None else t,
                                 cat=CAT_KV, rid=st.rid,
-                                generated=len(st.handle.tokens))
+                                generated=len(st.handle.tokens),
+                                pages=self.kv.hot_count(st.rid)
+                                if self.kv.holds(st.rid) else 0)
         self.kv.free(st.rid)
         st.index = 0
         st.handle.status = RequestStatus.QUEUED

@@ -1,0 +1,236 @@
+"""``repro.analysis.lints`` — the AST rule framework.
+
+Each rule gets a good/bad source pair exercised through a synthetic
+``src/repro/...`` tree (the wallclock rule is path-scoped, so fixture
+placement matters), plus the suppression annotation, the CLI entry
+point, and the headline guarantee: the real ``src/repro`` tree lints
+clean under the full rule set.
+"""
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lints import (RULES, LintViolation, iter_py_files,
+                                  lint_file, lint_paths, main,
+                                  suppressed_lines)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _write(tmp_path: Path, rel: str, source: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return p
+
+
+def _rules_hit(tmp_path, rel, source):
+    return {v.rule for v in lint_file(_write(tmp_path, rel, source))}
+
+
+# ---------------------------------------------------------------------------
+# no-bare-print
+# ---------------------------------------------------------------------------
+
+def test_bare_print_flagged(tmp_path):
+    hits = _rules_hit(tmp_path, "src/repro/models/m.py",
+                      'print("hello")\n')
+    assert "no-bare-print" in hits
+
+
+def test_console_and_method_prints_clean(tmp_path):
+    src = """\
+        from repro.obs.console import emit
+        emit("hello")
+        logger.print("method calls are not bare print")
+    """
+    assert "no-bare-print" not in _rules_hit(
+        tmp_path, "src/repro/models/m.py", src)
+
+
+# ---------------------------------------------------------------------------
+# no-wallclock
+# ---------------------------------------------------------------------------
+
+def test_wallclock_call_flagged_in_modeled_time_dir(tmp_path):
+    src = """\
+        import time
+        t0 = time.time()
+        t1 = time.perf_counter()
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/serve/engine2.py", src))
+    assert sum(v.rule == "no-wallclock" for v in vs) == 2
+
+
+def test_wallclock_unscoped_outside_modeled_time_dirs(tmp_path):
+    # same source, but models/ is host-side code: rule does not apply
+    src = "import time\nt0 = time.time()\n"
+    assert "no-wallclock" not in _rules_hit(
+        tmp_path, "src/repro/models/host.py", src)
+
+
+def test_wallclock_from_import_flagged(tmp_path):
+    src = "from time import perf_counter\n"
+    assert "no-wallclock" in _rules_hit(
+        tmp_path, "src/repro/fabric/t.py", src)
+
+
+def test_ambient_rng_flagged_seeded_generators_allowed(tmp_path):
+    src = """\
+        import random
+        import numpy as np
+        x = random.random()              # ambient state: flagged
+        np.random.seed(0)                # global mutation: flagged
+        rng = random.Random(42)          # seeded generator: fine
+        rs = np.random.RandomState(7)    # seeded generator: fine
+        bad = random.Random()            # unseeded generator: flagged
+        k = jax.random.PRNGKey(0)        # keyed, never ambient: fine
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/pool/r.py", src))
+    wall = [v for v in vs if v.rule == "no-wallclock"]
+    assert len(wall) == 3
+    assert {v.line for v in wall} == {3, 4, 7}
+
+
+# ---------------------------------------------------------------------------
+# compat-imports
+# ---------------------------------------------------------------------------
+
+def test_drifted_jax_import_flagged(tmp_path):
+    src = "from jax.experimental.shard_map import shard_map\n"
+    assert "compat-imports" in _rules_hit(
+        tmp_path, "src/repro/models/shard.py", src)
+
+
+def test_cost_analysis_must_go_through_compat(tmp_path):
+    src = """\
+        from repro.core import compat
+        a = compiled.cost_analysis()
+        b = compat.cost_analysis(compiled)
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/models/c.py", src))
+    compat = [v for v in vs if v.rule == "compat-imports"]
+    assert [v.line for v in compat] == [2]
+
+
+def test_compat_module_itself_is_exempt(tmp_path):
+    src = "from jax.experimental.shard_map import shard_map\n"
+    assert "compat-imports" not in _rules_hit(
+        tmp_path, "src/repro/core/compat.py", src)
+
+
+# ---------------------------------------------------------------------------
+# no-mutable-default
+# ---------------------------------------------------------------------------
+
+def test_mutable_function_defaults_flagged(tmp_path):
+    src = """\
+        def f(xs=[], *, opts={}):
+            return xs, opts
+
+        def g(xs=None, *, opts=()):
+            return xs, opts
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/models/d.py", src))
+    assert sum(v.rule == "no-mutable-default" for v in vs) == 2
+
+
+def test_mutable_dataclass_field_flagged_factory_clean(tmp_path):
+    src = """\
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Cfg:
+            xs: list = []
+            ys: list = dataclasses.field(default_factory=list)
+
+        class NotADataclass:
+            xs = []              # plain class attr: out of scope
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/models/e.py", src))
+    bad = [v for v in vs if v.rule == "no-mutable-default"]
+    assert [v.line for v in bad] == [5]
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_allow_annotation_suppresses_named_rule(tmp_path):
+    src = ('print("x")  # repro: allow(no-bare-print) CLI banner\n'
+           'print("y")\n')
+    vs = lint_file(_write(tmp_path, "src/repro/models/s.py", src))
+    assert [v.line for v in vs] == [2]
+
+
+def test_allow_list_and_wrong_rule(tmp_path):
+    src = """\
+        import time
+        t = time.time()  # repro: allow(no-wallclock, no-bare-print) both
+        u = time.time()  # repro: allow(no-bare-print) wrong rule
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/serve/s.py", src))
+    assert [v.line for v in vs] == [3]
+
+
+def test_suppressed_lines_parser():
+    src = ("a = 1\n"
+           "b = 2  # repro: allow(rule-a,rule-b)\n"
+           "c = 3  # repro:allow( rule-c ) reason text\n")
+    assert suppressed_lines(src) == {2: {"rule-a", "rule-b"},
+                                     3: {"rule-c"}}
+
+
+# ---------------------------------------------------------------------------
+# framework plumbing + CLI
+# ---------------------------------------------------------------------------
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    vs = lint_file(_write(tmp_path, "src/repro/models/bad.py",
+                          "def broken(:\n"))
+    assert len(vs) == 1 and vs[0].rule == "syntax"
+
+
+def test_violation_format_names_path_line_rule():
+    v = LintViolation("no-bare-print", "src/repro/x.py", 7, "msg")
+    assert v.format() == "src/repro/x.py:7: no-bare-print: msg"
+
+
+def test_iter_py_files_accepts_files_and_trees(tmp_path):
+    a = _write(tmp_path, "src/repro/a.py", "x = 1\n")
+    b = _write(tmp_path, "src/repro/sub/b.py", "y = 2\n")
+    _write(tmp_path, "src/repro/sub/notes.txt", "not python\n")
+    assert list(iter_py_files([a])) == [a]
+    assert set(iter_py_files([tmp_path])) == {a, b}
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = _write(tmp_path, "src/repro/serve/cli.py",
+                 'import time\nprint(time.time())\n')
+    assert main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "no-bare-print" in out and "no-wallclock" in out
+    good = _write(tmp_path, "src/repro/serve/ok.py", "x = 1\n")
+    assert main([str(good)]) == 0
+    # --rule filters down to one rule; unknown names are a usage error
+    assert main(["--rule", "no-wallclock", str(bad)]) == 1
+    assert "no-bare-print" not in capsys.readouterr().out
+    assert main(["--rule", "nope", str(bad)]) == 2
+    assert main(["--list-rules"]) == 0
+
+
+def test_rule_registry_matches_issue_contract():
+    names = {r.name for r in RULES}
+    assert {"no-bare-print", "no-wallclock", "compat-imports",
+            "no-mutable-default"} <= names
+
+
+# ---------------------------------------------------------------------------
+# the headline guarantee
+# ---------------------------------------------------------------------------
+
+def test_real_src_repro_lints_clean():
+    vs = lint_paths([REPO / "src" / "repro"])
+    assert vs == [], "\n".join(v.format() for v in vs)

@@ -1,0 +1,423 @@
+"""``repro.analysis.sanitizer`` — the modeled-time causality checker.
+
+Two halves:
+
+* synthetic event streams, one per rule: a hand-corrupted stream
+  (clock regression, double-freed page, over-line-rate link span,
+  charge without a priced revocation, ...) must be REJECTED with the
+  right rule name, track, and timestamp, and the matching clean stream
+  must pass;
+* live instrumented runs: a private paged engine and a multi-tenant
+  arbiter estate both sanitize clean, the live ``attach`` hook agrees
+  with the offline passes (``sanitize_tracer`` and the Perfetto
+  export round-trip), and every stateful rule actually checked
+  something (no vacuous passes).
+"""
+
+import json
+import math
+
+import jax
+import pytest
+
+from repro.analysis import (RULES, Sanitizer, attach, sanitize_events,
+                            sanitize_tracer, sanitize_trace_doc,
+                            sanitize_trace_file)
+from repro.analysis.sanitizer import TraceViolation
+from repro.configs import SMOKE_ARCHS
+from repro.core.tiering import KVBudget
+from repro.obs import Tracer, to_chrome_trace, write_chrome_trace
+from repro.obs.trace import CAT_ENGINE, CAT_KV, CAT_LINK, Event
+from repro.serve import (Engine, EngineConfig, PoolArbiter, burst_trace,
+                         run_multi_trace, run_trace)
+
+VOCAB = SMOKE_ARCHS["qwen1.5-0.5b"].vocab
+POOL_PAGES = 6          # tight: forces paging under the heavy trace
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = SMOKE_ARCHS["qwen1.5-0.5b"].__class__(**{
+        **SMOKE_ARCHS["qwen1.5-0.5b"].__dict__, "compute_dtype": "float32"})
+    from repro.models.api import build_model
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _cfg(**kw):
+    base = dict(max_slots=3, max_seq=64, page_size=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _heavy(n=5, seed=0, max_new=10):
+    return burst_trace(n, prompt_len=12, max_new_tokens=max_new,
+                       vocab=VOCAB, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# synthetic streams: event constructors
+# ---------------------------------------------------------------------------
+
+def _span(track, name, ts, dur, cat=CAT_ENGINE, **args):
+    return Event("X", cat, track, name, ts, dur, args)
+
+
+def _instant(track, name, ts, cat=CAT_ENGINE, **args):
+    return Event("i", cat, track, name, ts, 0.0, args)
+
+
+def _counter(track, name, ts, value, cat=CAT_ENGINE):
+    return Event("C", cat, track, name, ts, 0.0, {"value": value})
+
+
+def _only(report, rule):
+    """Assert exactly one violation and it names ``rule``; return it."""
+    assert not report.ok
+    assert [v.rule for v in report.violations] == [rule], report.format()
+    return report.violations[0]
+
+
+# ---------------------------------------------------------------------------
+# per-rule rejection: hand-corrupted streams
+# ---------------------------------------------------------------------------
+
+def test_finite_clock_rejects_nan_and_negative_dur():
+    v = _only(sanitize_events([_span("engine:a", "decode",
+                                     float("nan"), 0.1)]),
+              "finite-clock")
+    assert v.track == "engine:a" and math.isnan(v.ts)
+    _only(sanitize_events([_span("engine:a", "decode", 1.0, -0.5)]),
+          "finite-clock")
+    assert sanitize_events([_span("engine:a", "decode", 1.0, 0.5)]).ok
+
+
+def test_track_monotone_rejects_clock_regression():
+    evs = [_span("engine:a", "prefill", 0.0, 1.0),
+           _span("engine:a", "kv_fetch", 0.2, 0.1, cat=CAT_KV)]
+    v = _only(sanitize_events(evs), "track-monotone")   # ends 0.3 < 1.0
+    assert v.track == "engine:a"
+    assert v.ts == pytest.approx(0.2)
+    assert "backwards" in v.message
+
+
+def test_track_monotone_exemptions():
+    # future-dated submits, arbiter-track interleavings, and drop
+    # decisions stamped before already-emitted spill ends are all legal
+    evs = [_span("engine:a", "prefill", 0.0, 1.0),
+           _instant("engine:a", "submit", 0.1),
+           _instant("engine:a", "recompute_drop", 0.2, cat=CAT_KV),
+           _instant("pool:arbiter", "revoke", 5.0),
+           _instant("pool:arbiter", "charge", 2.0)]
+    assert sanitize_events(evs).ok
+
+
+def test_span_serial_rejects_overlapping_compute_spans():
+    evs = [_span("engine:a", "decode", 0.0, 1.0),
+           _span("engine:a", "decode", 0.5, 1.0)]
+    v = _only(sanitize_events(evs), "span-serial")
+    assert v.ts == pytest.approx(0.5)
+
+
+def test_span_serial_ignores_kv_and_link_tracks():
+    # a revocation spill legitimately overlaps the victim's compute,
+    # and per-link sub-tracks carry concurrent flows by design
+    evs = [_span("engine:a", "decode", 0.0, 1.0),
+           _span("engine:a", "kv_spill", 0.5, 1.0, cat=CAT_KV, pages=2),
+           _span("engine:a/kv", "kv_spill", 0.5, 1.0, cat=CAT_KV)]
+    assert sanitize_events(evs).ok
+
+
+def test_transfer_span_without_begin_rejected():
+    v = _only(sanitize_events(
+        [_span("fabric", "xfer", 1.0, 0.5, cat="fabric",
+               fid=7, bytes=100.0)]), "transfer-causality")
+    assert "no begin_transfer" in v.message and v.track == "fabric"
+
+
+def test_transfer_begin_after_span_start_rejected():
+    evs = [_instant("fabric", "begin_transfer", 2.0, cat="fabric",
+                    fid=7, bytes=100.0),
+           _span("fabric", "xfer", 1.0, 0.5, cat="fabric",
+                 fid=7, bytes=100.0)]
+    # begin at t=2.0 "causes" a span starting at t=1.0
+    assert not sanitize_events(evs).ok
+
+
+def test_transfer_byte_mismatch_rejected_and_clean_pair_passes():
+    begin = _instant("fabric", "begin_transfer", 0.0, cat="fabric",
+                     fid=7, bytes=100.0)
+    bad = sanitize_events([begin, _span("fabric", "xfer", 0.5, 0.5,
+                                        cat="fabric", fid=7, bytes=300.0)])
+    _only(bad, "transfer-causality")
+    good = sanitize_events([begin, _span("fabric", "xfer", 0.5, 0.5,
+                                         cat="fabric", fid=7, bytes=100.0)])
+    assert good.ok
+    assert any("1 transfer span(s) paired" in n for n in good.notes)
+
+
+def test_unmatched_begin_is_a_note_not_a_violation():
+    rep = sanitize_events([_instant("fabric", "begin_transfer", 0.0,
+                                    cat="fabric", fid=9, bytes=10.0)])
+    assert rep.ok
+    assert any("in flight" in n for n in rep.notes)
+
+
+def test_link_span_faster_than_solo_rejected():
+    v = _only(sanitize_events(
+        [_span("link:xlink0", "xfer", 0.0, 0.5, cat=CAT_LINK,
+               bytes=10.0, solo_s=1.0, capacity=1e9)]),
+        "link-conservation")
+    assert "FASTER" in v.message
+
+
+def test_link_span_over_line_rate_rejected():
+    # fires per-span AND again in the end-of-stream union check
+    rep = sanitize_events(
+        [_span("link:xlink0", "xfer", 0.0, 1.0, cat=CAT_LINK,
+               bytes=200.0, solo_s=0.5, capacity=100.0)])
+    assert not rep.ok
+    assert {v.rule for v in rep.violations} == {"link-conservation"}
+    assert "line rate" in rep.violations[0].message
+
+
+def test_link_union_conservation_rejects_multiplied_link():
+    # two fully-overlapping spans, each individually at line rate: the
+    # union is 1 busy second at 100 B/s but 200 bytes "moved" — the
+    # link was silently counted twice
+    evs = [_span("link:xlink0", "a", 0.0, 1.0, cat=CAT_LINK,
+                 bytes=100.0, solo_s=1.0, capacity=100.0),
+           _span("link:xlink0", "b", 0.0, 1.0, cat=CAT_LINK,
+                 bytes=100.0, solo_s=1.0, capacity=100.0)]
+    v = _only(sanitize_events(evs), "link-conservation")
+    assert v.track == "link:xlink0" and "busy window" in v.message
+    # fair-shared version: same bytes spread over a stretched window
+    ok = [_span("link:xlink0", "a", 0.0, 2.0, cat=CAT_LINK,
+                bytes=100.0, solo_s=1.0, capacity=100.0),
+          _span("link:xlink0", "b", 0.0, 2.0, cat=CAT_LINK,
+                bytes=100.0, solo_s=1.0, capacity=100.0)]
+    assert sanitize_events(ok).ok
+
+
+def _solo_kv(free, hot, pool=10.0, ts=1.0):
+    return [_instant("engine:a", "kv_pool", 0.0, cat=CAT_KV, pages=pool),
+            _counter("engine:a", "free_pages", ts, free, cat=CAT_KV),
+            _counter("engine:a", "hot_pages", ts, hot, cat=CAT_KV)]
+
+
+def test_kv_conservation_solo_pool():
+    assert sanitize_events(_solo_kv(4.0, 6.0)).ok
+    leak = _only(sanitize_events(_solo_kv(4.0, 5.0)), "kv-conservation")
+    assert "leaked" in leak.message and leak.ts == pytest.approx(1.0)
+    conjured = _only(sanitize_events(_solo_kv(4.0, 7.0)),
+                     "kv-conservation")
+    assert "conjured" in conjured.message
+
+
+def _shared_kv(hot_a, hot_b, free_b, pool=12.0):
+    """A's step-end sample lands before B has allocated anything, so
+    A sees ``pool - hot_a`` free; B's sample follows once it holds
+    ``hot_b`` (consistent: ``free_b = pool - hot_a - hot_b``)."""
+    return [
+        _instant("pool:arbiter", "pool_tenants", 0.0, cat="arbiter",
+                 pages=pool, tenants=["a", "b"]),
+        _counter("engine:a", "free_pages", 1.0, pool - hot_a,
+                 cat=CAT_KV),
+        _counter("engine:a", "hot_pages", 1.0, hot_a, cat=CAT_KV),
+        _counter("engine:b", "free_pages", 2.0, free_b, cat=CAT_KV),
+        _counter("engine:b", "hot_pages", 2.0, hot_b, cat=CAT_KV),
+    ]
+
+
+def test_kv_conservation_shared_pool():
+    assert sanitize_events(_shared_kv(5.0, 3.0, free_b=4.0)).ok
+    v = _only(sanitize_events(_shared_kv(5.0, 3.0, free_b=5.0)),
+              "kv-conservation")
+    assert v.track == "engine:b" and "conjured" in v.message
+
+
+def test_kv_double_free_via_oversized_revoke():
+    evs = _shared_kv(5.0, 3.0, free_b=4.0) + [
+        # the arbiter claims 9 pages from a tenant holding 5
+        _instant("pool:arbiter", "revoke", 3.0, cat="arbiter",
+                 victim="a", requester="b", pages=9, rid=0, cost_s=0.1)]
+    v = _only(sanitize_events(evs), "kv-conservation")
+    assert v.track == "engine:a" and "freed twice" in v.message
+    assert v.ts == pytest.approx(3.0)
+
+
+def test_kv_revoke_folds_into_next_sample():
+    evs = _shared_kv(5.0, 3.0, free_b=4.0) + [
+        _instant("pool:arbiter", "revoke", 3.0, cat="arbiter",
+                 victim="a", requester="b", pages=2, rid=0, cost_s=0.1),
+        # victim's next sample reflects the revocation; free grew by 2
+        _counter("engine:a", "free_pages", 4.0, 6.0, cat=CAT_KV),
+        _counter("engine:a", "hot_pages", 4.0, 3.0, cat=CAT_KV)]
+    assert sanitize_events(evs).ok
+
+
+def test_kv_rule_disabled_on_pre_instrumented_trace():
+    # a revoke with no page count (old trace): the rule switches off
+    # with a note instead of guessing
+    evs = _shared_kv(5.0, 3.0, free_b=4.0) + [
+        _instant("pool:arbiter", "revoke", 3.0, cat="arbiter",
+                 victim="a", requester="b", rid=0, cost_s=0.1),
+        _counter("engine:a", "free_pages", 4.0, 0.0, cat=CAT_KV),
+        _counter("engine:a", "hot_pages", 4.0, 0.0, cat=CAT_KV)]
+    rep = sanitize_events(evs)
+    assert rep.ok
+    assert any("kv-conservation disabled" in n for n in rep.notes)
+
+
+def test_revocation_attribution_rejects_unpriced_charge():
+    # kv context first so the revoke's page movement is accounted for
+    base = _shared_kv(2.0, 0.0, free_b=10.0)
+    revoke = _instant("pool:arbiter", "revoke", 3.0, cat="arbiter",
+                      victim="a", requester="b", pages=2, rid=0,
+                      cost_s=0.5)
+    ok = sanitize_events(base + [
+        revoke, _instant("pool:arbiter", "charge", 4.0, cat="arbiter",
+                         tenant="a", cost_s=0.5)])
+    assert ok.ok and ok.checks["revocation-attribution"] == 1
+    v = _only(sanitize_events(base + [
+        revoke, _instant("pool:arbiter", "charge", 4.0, cat="arbiter",
+                         tenant="a", cost_s=0.7)]),
+        "revocation-attribution")
+    assert "billed" in v.message
+    # a charge against a tenant nobody revoked is the degenerate case
+    _only(sanitize_events(
+        [_instant("pool:arbiter", "charge", 2.0, cat="arbiter",
+                  tenant="z", cost_s=0.1)]),
+        "revocation-attribution")
+
+
+def test_truncated_stream_skips_stateful_rules():
+    # the same double-free stream, but the ring dropped events: the
+    # baselines may be gone, so stateful rules stand down (with a note)
+    evs = _shared_kv(5.0, 3.0, free_b=4.0) + [
+        _instant("pool:arbiter", "revoke", 3.0, cat="arbiter",
+                 victim="a", requester="b", pages=9, rid=0, cost_s=0.1)]
+    rep = sanitize_events(evs, truncated=True)
+    assert rep.ok
+    assert rep.checks["kv-conservation"] == 0
+    assert any("truncated" in n for n in rep.notes)
+    # monotonicity still applies: it needs no dropped baseline
+    assert not sanitize_events(
+        [_span("engine:a", "prefill", 0.0, 1.0),
+         _span("engine:a", "decode", 0.2, 0.1)], truncated=True).ok
+
+
+def test_report_shapes():
+    rep = sanitize_events([_span("engine:a", "decode",
+                                 float("inf"), 0.1)])
+    assert set(RULES) == set(rep.checks)
+    v = rep.violations[0]
+    assert isinstance(v, TraceViolation)
+    assert v.rule in rep.format() and "FAIL" in rep.format()
+    doc = rep.to_doc()
+    assert doc["ok"] is False and doc["events"] == 1
+    assert doc["violations"][0]["rule"] == "finite-clock"
+    json.dumps(doc)    # must be serializable for CI artifacts
+
+
+# ---------------------------------------------------------------------------
+# live instrumented runs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_solo(model, params):
+    """Private paged engine under pressure, sanitized live via hook."""
+    tracer = Tracer()
+    live = attach(tracer)
+    eng = Engine.local(model, _cfg(), params=params,
+                       budget=KVBudget(tier1_pages=POOL_PAGES,
+                                       tier2_bytes=1e9, page_size=8),
+                       tenant="a", tracer=tracer)
+    handles = run_trace(eng, _heavy())
+    live.detach()
+    assert eng.stats()["preempt_swaps"] > 0, "pressure not exercised"
+    return {"tracer": tracer, "live": live.finish()}
+
+
+def test_live_solo_run_sanitizes_clean(traced_solo):
+    rep = traced_solo["live"]
+    assert rep.ok, rep.format()
+    # the stateful solo rules all actually checked something
+    assert rep.checks["kv-conservation"] > 0
+    assert rep.checks["span-serial"] > 0
+    assert rep.checks["track-monotone"] > 0
+
+
+def test_live_hook_agrees_with_offline_passes(traced_solo, tmp_path):
+    live = traced_solo["live"]
+    offline = sanitize_tracer(traced_solo["tracer"])
+    assert offline.ok and offline.events == live.events
+    assert offline.checks == live.checks
+    # ... and with the Perfetto export round-trip (µs quantization and
+    # track reconstruction included)
+    doc = to_chrome_trace(traced_solo["tracer"])
+    rt = sanitize_trace_doc(doc)
+    assert rt.ok, rt.format()
+    assert rt.events == live.events
+    path = tmp_path / "solo_trace.json"
+    write_chrome_trace(traced_solo["tracer"], str(path))
+    assert sanitize_trace_file(str(path)).ok
+
+
+def test_live_multitenant_estate_sanitizes_clean(model, params):
+    """Arbiter + two tenants with forced revocation: the shared-pool
+    accounting and attribution rules must hold on a real estate."""
+    tracer = Tracer()
+    arb = PoolArbiter(POOL_PAGES, page_size=8, tracer=tracer)
+    kw = dict(params=params,
+              budget=KVBudget(tier2_bytes=1e9, page_size=8),
+              arbiter=arb, tracer=tracer)
+    a = Engine.local(model, _cfg(), tenant="a", **kw)
+    b = Engine.local(model, _cfg(), tenant="b", **kw)
+    import dataclasses
+    ta = _heavy(8, seed=1, max_new=16)              # saturates the pool
+    tb = [dataclasses.replace(r, arrival_time=1e-4)  # arrives mid-burst
+          for r in _heavy(2, seed=2, max_new=4)]
+    run_multi_trace([(a, ta), (b, tb)])
+    assert arb.revoked_pages > 0, "revocation not exercised"
+    rep = sanitize_tracer(tracer)
+    assert rep.ok, rep.format()
+    assert rep.checks["kv-conservation"] > 0
+    assert rep.checks["revocation-attribution"] > 0
+
+
+def test_corrupted_export_is_rejected(traced_solo):
+    # hand-corrupt a real exported trace: conjure one phantom hot page
+    doc = to_chrome_trace(traced_solo["tracer"])
+    for e in doc["traceEvents"]:
+        if e.get("ph") == "C" and e.get("name") == "hot_pages":
+            e["args"]["value"] += 1.0
+            break
+    rep = sanitize_trace_doc(doc)
+    assert not rep.ok
+    assert any(v.rule == "kv-conservation" for v in rep.violations)
+
+
+def test_sanitizer_detach_stops_observation():
+    tracer = Tracer()
+    s = attach(tracer)
+    tracer.span("t", "a", 0.0, 1.0)
+    s.detach()
+    tracer.span("t", "b", 5.0, 1.0)
+    rep = s.finish()
+    assert rep.events == 1
+
+
+def test_sanitizer_is_importable_without_jax_side_effects():
+    # repro.analysis must stay importable on hosts without the
+    # accelerator stack: it may not pull in jax transitively
+    import subprocess
+    import sys
+    code = ("import sys; import repro.analysis; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    proc = subprocess.run([sys.executable, "-c", code])
+    assert proc.returncode == 0
