@@ -9,7 +9,17 @@ of scraping the CSV stdout) and, for modules whose ``run`` takes a
 self-check: ``--sanitize`` replays the exported Perfetto trace through
 the modeled-time sanitizer and fails the benchmark on any causality or
 conservation violation; ``--sanitize-out PATH`` writes the report as
-JSON (the CI artifact next to the trace).
+JSON (the CI artifact next to the trace).  ``--trace-stream PATH``
+(modules whose ``run`` takes ``trace_stream``) streams every event to
+a lossless JSONL log through ``obs.JsonlSink`` — unlike the ring-
+backed export, nothing is ever dropped.
+
+Modules that define a racecheck scenario (a ``Callable[[Tracer],
+Mapping]`` passed to ``bench_main``) also get ``--racecheck K``: the
+scenario runs once unperturbed and K more times under seeded
+tie-break perturbations (``repro.analysis.racecheck``), and any
+divergence in outcomes or trace events fails the benchmark with the
+first divergent event named.
 """
 
 from __future__ import annotations
@@ -19,11 +29,12 @@ import inspect
 import json
 
 
-def bench_main(name: str, run, argv=None) -> int:
+def bench_main(name: str, run, argv=None, scenario=None) -> int:
     ap = argparse.ArgumentParser(prog=name)
     params = inspect.signature(run).parameters
     takes_smoke = "smoke" in params
     takes_trace = "trace_out" in params
+    takes_stream = "trace_stream" in params
     if takes_smoke:
         ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -38,6 +49,15 @@ def bench_main(name: str, run, argv=None) -> int:
         ap.add_argument("--sanitize-out", default=None, metavar="PATH",
                         help="write the sanitizer report as JSON "
                              "(implies --sanitize)")
+    if takes_stream:
+        ap.add_argument("--trace-stream", default=None, metavar="PATH",
+                        help="stream every trace event of the traced run "
+                             "to a lossless JSONL log (obs.JsonlSink)")
+    if scenario is not None:
+        ap.add_argument("--racecheck", default=0, type=int, metavar="K",
+                        help="run the module's racecheck scenario under "
+                             "K seeded schedule perturbations and fail "
+                             "on any outcome or trace divergence")
     args = ap.parse_args(argv)
 
     kwargs = {}
@@ -49,6 +69,8 @@ def bench_main(name: str, run, argv=None) -> int:
         if (args.sanitize or args.sanitize_out) and trace_path is None:
             trace_path = f"{name}_trace.json"   # sanitizing needs a trace
         kwargs["trace_out"] = trace_path
+    if takes_stream and args.trace_stream:
+        kwargs["trace_stream"] = args.trace_stream
 
     lines, summary = run(**kwargs)
     for line in lines:
@@ -69,6 +91,14 @@ def bench_main(name: str, run, argv=None) -> int:
             with open(args.sanitize_out, "w") as f:
                 json.dump(report.to_doc(), f, indent=2)
                 f.write("\n")
+        if not report.ok:
+            ok = False
+
+    if scenario is not None and args.racecheck > 0:
+        from repro.analysis import racecheck
+        report = racecheck(scenario, seeds=range(1, args.racecheck + 1),
+                           label=name)
+        print(report.format())
         if not report.ok:
             ok = False
     return 0 if ok else 1

@@ -152,7 +152,8 @@ def _run_topology(kind: str, model, full_cfg, params, traces,
     }
 
 
-def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
+def run(smoke: bool = True, trace_out: str = None,
+        trace_stream: str = None) -> Tuple[List[str], Dict]:
     t0 = time.time()
     mcfg = get_config(ARCH, smoke=True)
     full_cfg = get_config(ARCH, smoke=False)
@@ -176,10 +177,13 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
     # tracing is passive (events record already-computed modeled times),
     # so the traced shared run stays bit-identical to the untraced one —
     # the tokens_invariant claim below still compares all three
-    tracer = None
-    if trace_out:
+    tracer, sink = None, None
+    if trace_out or trace_stream:
         from repro.obs import Tracer
         tracer = Tracer(1 << 17)
+        if trace_stream:
+            from repro.obs import JsonlSink
+            sink = JsonlSink(trace_stream, tracer)
     results = {k: _run_topology(k, model, full_cfg, params, traces, bw,
                                 tracer=tracer if k == "shared" else None)
                for k in ("isolated", "shared", "hierarchical")}
@@ -255,7 +259,54 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
             "trunk_stretch_s": trunk["stretch_s"],
             "trunk_peak_flows": trunk["peak_flows"],
         }
+    if sink is not None:
+        sink.close()
+        lines.append(f"fig10.stream,0,events={sink.written};"
+                     f"out={trace_stream}")
+        summary["trace_stream"] = {"path": trace_stream,
+                                   "events": sink.written}
     return lines, summary
+
+
+_SCENARIO_CACHE: Dict[str, object] = {}
+
+
+def racecheck_scenario(tracer) -> Dict[str, object]:
+    """The shared-trunk contention run at smoke scale, for the
+    ``repro.analysis.racecheck`` harness: the transport's water-filling
+    re-rates and drain order plus ``run_multi_trace``'s interleave
+    selection must be bit-identical under perturbed candidate orders.
+    Model build + params cached across the K+1 runs (read-only);
+    engines, transport, and traces are fresh per run."""
+    if not _SCENARIO_CACHE:
+        mcfg = get_config(ARCH, smoke=True)
+        full_cfg = get_config(ARCH, smoke=False)
+        model = build_model(mcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        probe = Engine.local(model, EngineConfig(max_slots=SLOTS,
+                                                 max_seq=PROMPT + MAX_NEW,
+                                                 page_size=PAGE),
+                             params=params,
+                             budget=KVBudget(QUOTA, 1e9, PAGE))
+        _SCENARIO_CACHE.update(
+            mcfg=mcfg, full_cfg=full_cfg, model=model, params=params,
+            bw=_page_bw(full_cfg, probe.kv.page_bytes))
+    c = _SCENARIO_CACHE
+    traces = {t: burst_trace(4, prompt_len=PROMPT, max_new_tokens=MAX_NEW,
+                             vocab=c["mcfg"].vocab, seed=i)
+              for i, t in enumerate(TENANTS)}
+    r = _run_topology("shared", c["model"], c["full_cfg"], c["params"],
+                      traces, c["bw"], tracer=tracer)
+    return {
+        "tokens": {t: [list(h.tokens) for h in r["handles"][t]]
+                   for t in TENANTS},
+        "latency": {t: [h.latency for h in r["handles"][t]]
+                    for t in TENANTS},
+        "p95": r["p95"],
+        "agg_p95": r["agg_p95"],
+        "swaps": r["swaps"],
+        "transport": r["transport"],
+    }
 
 
 def main(argv=None) -> int:
@@ -263,7 +314,7 @@ def main(argv=None) -> int:
         from benchmarks._cli import bench_main
     except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
         from _cli import bench_main
-    return bench_main("fig10", run, argv)
+    return bench_main("fig10", run, argv, scenario=racecheck_scenario)
 
 
 if __name__ == "__main__":

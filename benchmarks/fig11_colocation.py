@@ -202,7 +202,8 @@ def _run_policy(policy: str, model, full_cfg, params, traces, bw,
     }
 
 
-def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
+def run(smoke: bool = True, trace_out: str = None,
+        trace_stream: str = None) -> Tuple[List[str], Dict]:
     t0 = time.time()
     mcfg = get_config(ARCH, smoke=True)
     full_cfg = get_config(ARCH, smoke=False)
@@ -221,10 +222,13 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
     # enough steps for training to span the serving burst window
     n_steps = 8 if smoke else 16
 
-    tracer = None
-    if trace_out:
+    tracer, sink = None, None
+    if trace_out or trace_stream:
         from repro.obs import Tracer
         tracer = Tracer(1 << 17)
+        if trace_stream:
+            from repro.obs import JsonlSink
+            sink = JsonlSink(trace_stream, tracer)
     results = {
         "hop_only": _run_policy("scalepool", model, full_cfg, params,
                                 traces, bw, n_steps, tracer=tracer),
@@ -311,7 +315,56 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
             "trunk_busy_s": trunk["busy_s"],
             "trunk_by_label": trunk["by_label"],
         }
+    if sink is not None:
+        sink.close()
+        lines.append(f"fig11.stream,0,events={sink.written};"
+                     f"out={trace_stream}")
+        summary["trace_stream"] = {"path": trace_stream,
+                                   "events": sink.written}
     return lines, summary
+
+
+_SCENARIO_CACHE: Dict[str, object] = {}
+
+
+def racecheck_scenario(tracer) -> Dict[str, object]:
+    """The hop-only co-residency run at reduced scale, for the
+    ``repro.analysis.racecheck`` harness: ``run_colo``'s serve/train
+    interleave selection, the transport's shared-trunk re-rating, and
+    the placement path must all be bit-identical under perturbed
+    candidate orders.  Model build + params cached across the K+1 runs
+    (read-only); estate, engines, actors, and traces are fresh."""
+    if not _SCENARIO_CACHE:
+        mcfg = get_config(ARCH, smoke=True)
+        full_cfg = get_config(ARCH, smoke=False)
+        model = build_model(mcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        probe = Engine.local(model, EngineConfig(max_slots=SLOTS,
+                                                 max_seq=PROMPT + MAX_NEW,
+                                                 page_size=PAGE),
+                             params=params,
+                             budget=KVBudget(QUOTA, 1e9, PAGE))
+        _SCENARIO_CACHE.update(
+            mcfg=mcfg, full_cfg=full_cfg, model=model, params=params,
+            bw=_page_bw(full_cfg, probe.kv.page_bytes))
+    c = _SCENARIO_CACHE
+    traces = {t: burst_trace(4, prompt_len=PROMPT, max_new_tokens=MAX_NEW,
+                             vocab=c["mcfg"].vocab, seed=i)
+              for i, t in enumerate(TENANTS)}
+    r = _run_policy("scalepool", c["model"], c["full_cfg"], c["params"],
+                    traces, c["bw"], 4, tracer=tracer)
+    return {
+        "tokens": {t: [list(h.tokens) for h in r["handles"][t]]
+                   for t in TENANTS},
+        "latency": {t: [h.latency for h in r["handles"][t]]
+                    for t in TENANTS},
+        "p95": r["p95"],
+        "agg_p95": r["agg_p95"],
+        "train": r["train"],
+        "placement": r["placement"],
+        "links": r["links"],
+        "transport": r["transport"],
+    }
 
 
 def main(argv=None) -> int:
@@ -319,7 +372,7 @@ def main(argv=None) -> int:
         from benchmarks._cli import bench_main
     except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
         from _cli import bench_main
-    return bench_main("fig11", run, argv)
+    return bench_main("fig11", run, argv, scenario=racecheck_scenario)
 
 
 if __name__ == "__main__":

@@ -86,7 +86,8 @@ def _ecfg() -> EngineConfig:
                         page_size=PAGE)
 
 
-def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
+def run(smoke: bool = True, trace_out: str = None,
+        trace_stream: str = None) -> Tuple[List[str], Dict]:
     t0 = time.time()
     mcfg = get_config(ARCH, smoke=True)
     full_cfg = get_config(ARCH, smoke=False)
@@ -98,10 +99,12 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
     # (the static/solo reference engines own private degenerate
     # transports whose flows would interleave unrelated runs on the
     # recorder's shared tracks)
-    tracer = None
-    if trace_out:
-        from repro.obs import Tracer
+    tracer, sink = None, None
+    if trace_out or trace_stream:
+        from repro.obs import JsonlSink, Tracer
         tracer = Tracer(1 << 16)
+        if trace_stream:
+            sink = JsonlSink(trace_stream, tracer)
 
     # ---- static 1/N partitions: each tenant a private engine ------------
     static_handles: Dict[str, list] = {}
@@ -204,7 +207,55 @@ def run(smoke: bool = True, trace_out: str = None) -> Tuple[List[str], Dict]:
                      f"out={trace_out}")
         summary["trace"] = {"path": trace_out, "events": len(tracer),
                             "dropped": tracer.dropped}
+    if sink is not None:
+        sink.close()
+        lines.append(f"fig9mt.stream,0,events={sink.written};"
+                     f"out={trace_stream}")
+        summary["trace_stream"] = {"path": trace_stream,
+                                   "events": sink.written}
     return lines, summary
+
+
+_SCENARIO_CACHE: Dict[str, object] = {}
+
+
+def racecheck_scenario(tracer) -> Dict[str, object]:
+    """Fair-share pooled multi-tenant serving at smoke scale, for the
+    ``repro.analysis.racecheck`` schedule-perturbation harness: the
+    arbiter's share/victim computations and ``run_multi_trace``'s
+    interleave selection must be bit-identical however their candidate
+    enumerations are ordered.  Model build + params are cached across
+    the harness's K+1 runs (read-only pytrees; every engine, arbiter,
+    and trace is fresh per run)."""
+    if not _SCENARIO_CACHE:
+        mcfg = get_config(ARCH, smoke=True)
+        model = build_model(mcfg)
+        _SCENARIO_CACHE.update(
+            mcfg=mcfg, full_cfg=get_config(ARCH, smoke=False), model=model,
+            params=model.init(jax.random.PRNGKey(0)))
+    c = _SCENARIO_CACHE
+    traffic = _traffic(True, c["mcfg"].vocab)
+    arb = PoolArbiter(POOL_PAGES, page_size=PAGE, tracer=tracer)
+    engines = {}
+    for name in TENANTS:
+        eng = Engine.local(c["model"], _ecfg(), params=c["params"],
+                           budget=KVBudget(
+                               tier2_bytes=KV_T2_BYTES / len(TENANTS),
+                               page_size=PAGE),
+                           arbiter=arb, tenant=name, tracer=tracer)
+        eng.cost = _cost_model(c["full_cfg"], eng)
+        engines[name] = eng
+    lists = run_multi_trace([(engines[n], traffic[n]) for n in TENANTS])
+    handles = dict(zip(TENANTS, lists))
+    return {
+        "tokens": {t: [list(h.tokens) for h in handles[t]]
+                   for t in TENANTS},
+        "latency": {t: [h.latency for h in handles[t]] for t in TENANTS},
+        "clock": {t: engines[t].clock for t in TENANTS},
+        "revoked_pages": arb.revoked_pages,
+        "revocations": arb.revocations,
+        "stats": {t: engines[t].stats() for t in TENANTS},
+    }
 
 
 def main(argv=None) -> int:
@@ -212,7 +263,7 @@ def main(argv=None) -> int:
         from benchmarks._cli import bench_main
     except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
         from _cli import bench_main
-    return bench_main("fig9mt", run, argv)
+    return bench_main("fig9mt", run, argv, scenario=racecheck_scenario)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@ a flight recorder attached, export the Chrome/Perfetto timeline, and
 read the per-link utilization report that *attributes* the shared
 tenants' ~1.55x p95 degradation to tier-2 trunk occupancy — the same
 three artifacts ``--trace-out`` and ``scripts/trace_report.py`` give
-you on any serving run.
+you on any serving run.  Then the determinism toolchain on top of the
+same run: the lossless JSONL stream (``--trace-stream``), the A/B
+trace differ (``scripts/trace_diff.py``), and the schedule-perturbation
+race detector (``--racecheck K`` / ``repro.analysis.racecheck``).
 
     PYTHONPATH=src python examples/trace_explorer.py      # from repo root
 """
@@ -107,3 +110,42 @@ report = sanitize_trace_doc(doc)
 print(f"\n== modeled-time sanitizer ==")
 print(report.format())
 assert report.ok, "the exported trace violates a causality invariant"
+
+# ---------------------------------------------------------------------------
+# 5. A/B diffing.  The Perfetto export quantizes clocks to whole µs; the
+#    JSONL stream (``--trace-stream``, repro.obs.JsonlSink) is the
+#    lossless sibling: every event is written through a tracer hook
+#    BEFORE the ring can drop it, with full float precision.  Two
+#    recordings — two seeds, two branches, before/after a refactor —
+#    are compared structurally with repro.analysis.diff_trace_files
+#    (CLI: scripts/trace_diff.py A B): per track, the FIRST divergent
+#    event is named field by field, plus end-clock drift and per-label
+#    link-byte drift.  Identical run -> empty diff:
+# ---------------------------------------------------------------------------
+from repro.analysis import diff_trace_files
+
+diff = diff_trace_files(trace_path, trace_path)
+print(f"\n== A/B trace diff (against itself) ==")
+print(diff.format())
+assert diff.identical
+
+# ---------------------------------------------------------------------------
+# 6. the race detector.  Everything above trusts that the modeled
+#    estate is DETERMINISTIC — same inputs, bit-identical trace.  The
+#    racecheck harness (repro.analysis.racecheck) attacks that claim:
+#    it re-runs a scenario K times with the ``tiebreak`` seam active,
+#    which perturbs every incidental enumeration order inside the
+#    scheduler's same-timestamp drain, the arbiter's victim scan, and
+#    the transport's flow re-rating.  Spec'd tie-breaks (FIFO by seq,
+#    victim = max-over then min-name) are sort keys and never move; if
+#    any outcome or trace event shifts, an incidental order leaked into
+#    a decision, and the report names the first divergent event.  CI
+#    runs this as `--racecheck 4` on the fig9/10/11 smoke benchmarks:
+# ---------------------------------------------------------------------------
+from benchmarks.fig10_contention import racecheck_scenario
+from repro.analysis import racecheck
+
+rc = racecheck(racecheck_scenario, seeds=(1, 2), label="fig10")
+print(f"\n== schedule-perturbation racecheck ==")
+print(rc.format())
+assert rc.ok, "fig10 is order-dependent — see the first divergent event"

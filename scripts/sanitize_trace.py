@@ -1,11 +1,12 @@
 #!/usr/bin/env python
-"""Offline modeled-time sanitizer: replay exported Perfetto traces
-through ``repro.analysis`` and fail on causality / conservation
-violations.
+"""Offline modeled-time sanitizer: replay trace files through
+``repro.analysis`` and fail on causality / conservation violations.
 
     PYTHONPATH=src python scripts/sanitize_trace.py TRACE.json [...]
         [--json REPORT.json]
 
+Inputs may be exported Perfetto/Chrome JSON documents or lossless
+``obs.JsonlSink`` streams (``*.jsonl``, from ``--trace-stream``).
 Exit status 1 if any trace violates an invariant (the report names
 rule, track, and modeled timestamp per violation).  ``--json`` writes
 the report document(s) for CI artifacts; with several inputs the file
@@ -22,22 +23,30 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
                                 "src"))
 
-from repro.analysis import sanitize_trace_file          # noqa: E402
+from repro.analysis import sanitize_events, sanitize_trace_file  # noqa: E402
 from repro.obs.console import emit                      # noqa: E402
+
+
+def _sanitize(path: str):
+    if path.endswith(".jsonl"):
+        from repro.obs import events_from_jsonl
+        # a JSONL stream is lossless by construction — never truncated
+        return sanitize_events(events_from_jsonl(path))
+    return sanitize_trace_file(path)
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="check exported traces against the modeled-time "
                     "causality and conservation invariants")
-    ap.add_argument("traces", nargs="+", metavar="TRACE.json")
+    ap.add_argument("traces", nargs="+", metavar="TRACE.json|TRACE.jsonl")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the sanitizer report(s) as JSON")
     args = ap.parse_args(argv)
     reports = {}
     ok = True
     for path in args.traces:
-        report = sanitize_trace_file(path)
+        report = _sanitize(path)
         reports[path] = report.to_doc()
         emit(f"== {path}")
         emit(report.format())

@@ -1,0 +1,53 @@
+#!/usr/bin/env python
+"""A/B trace differ: structurally compare two trace recordings and
+report the first divergent event per track.
+
+    PYTHONPATH=src python scripts/trace_diff.py A.json B.json
+        [--json REPORT.json] [--expect-identical]
+
+Inputs may be exported Perfetto/Chrome JSON documents or lossless
+``obs.JsonlSink`` streams (``*.jsonl``, from ``--trace-stream``) — the
+two sides need not use the same format.  Exit status 1 if the traces
+differ (the first divergent event per track is named, with clock and
+by-label byte drift summaries); ``--json`` writes the diff document
+for CI artifacts.  ``--expect-identical`` is implied — the flag exists
+for self-documenting CI invocations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
+
+from repro.analysis import diff_trace_files             # noqa: E402
+from repro.obs.console import emit                      # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare two trace recordings event by event; "
+                    "nonzero exit on the first divergence")
+    ap.add_argument("trace_a", metavar="A.json|A.jsonl")
+    ap.add_argument("trace_b", metavar="B.json|B.jsonl")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the diff report as JSON")
+    ap.add_argument("--expect-identical", action="store_true",
+                    help="(default behavior; for readable CI steps)")
+    args = ap.parse_args(argv)
+    diff = diff_trace_files(args.trace_a, args.trace_b)
+    emit(f"== {args.trace_a} vs {args.trace_b}")
+    emit(diff.format())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(diff.to_doc(), f, indent=2)
+            f.write("\n")
+    return 0 if diff.identical else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,18 +1,30 @@
 """repro.analysis — static + dynamic correctness tooling for the estate.
 
-Two halves, one discipline (modeled-time determinism — the property
+Four layers, one discipline (modeled-time determinism — the property
 every headline claim in this repo rests on):
 
     lints     — pluggable AST rule engine (``repro.analysis.lints``)
                 with per-line ``# repro: allow(<rule>)`` suppressions:
                 ``no-bare-print``, ``no-wallclock``, ``compat-imports``,
-                ``no-mutable-default``.  CLI:
+                ``no-mutable-default``, ``no-unordered-iteration``,
+                ``no-float-equality``.  CLI:
                 ``python -m repro.analysis.lints src/repro``.
     sanitizer — modeled-time causality checker over ``obs.Tracer``
                 event streams, live (``attach(tracer)``) or offline
                 from an exported Perfetto JSON
                 (``sanitize_trace_file``); wired into every benchmark
                 CLI as ``--sanitize`` and ``scripts/sanitize_trace.py``.
+    racecheck — schedule-perturbation determinism harness: the
+                ``tiebreak`` seam shuffles incidental candidate
+                enumerations in the scheduler/arbiter/transport/
+                interleave drivers, and ``racecheck`` proves a
+                scenario's outcomes and trace are bit-identical under
+                K perturbed schedules (``--racecheck K`` on the fig
+                CLIs).
+    tracediff — structural A/B differ over two trace event streams:
+                per-track first divergent event, clock drift, and
+                by-label byte drift; ``scripts/trace_diff.py`` is the
+                CLI.
 
 Invariants the sanitizer enforces
 ---------------------------------
@@ -43,15 +55,24 @@ lint CLI and offline sanitizer must start fast enough to run on every
 commit.
 """
 
+from repro.analysis import tiebreak
+from repro.analysis.racecheck import (RaceDivergence, RaceReport,
+                                      SeedResult, racecheck)
 from repro.analysis.sanitizer import (RULES, Sanitizer, SanitizerReport,
                                       TraceViolation, attach,
                                       events_from_trace_doc,
                                       sanitize_events, sanitize_tracer,
                                       sanitize_trace_doc,
                                       sanitize_trace_file)
+from repro.analysis.tracediff import (EventDelta, TraceDiff, diff_events,
+                                      diff_tracers, diff_trace_docs,
+                                      diff_trace_files)
 
 __all__ = [
-    "RULES", "Sanitizer", "SanitizerReport", "TraceViolation", "attach",
-    "events_from_trace_doc", "sanitize_events", "sanitize_tracer",
-    "sanitize_trace_doc", "sanitize_trace_file",
+    "EventDelta", "RULES", "RaceDivergence", "RaceReport", "Sanitizer",
+    "SanitizerReport", "SeedResult", "TraceDiff", "TraceViolation",
+    "attach", "diff_events", "diff_tracers", "diff_trace_docs",
+    "diff_trace_files", "events_from_trace_doc", "racecheck",
+    "sanitize_events", "sanitize_tracer", "sanitize_trace_doc",
+    "sanitize_trace_file", "tiebreak",
 ]

@@ -37,6 +37,28 @@ Shipped rules:
     No mutable literals (list/dict/set displays or comprehensions) as
     function-parameter or dataclass-field defaults — the shared-
     instance aliasing bug class.
+``no-unordered-iteration``
+    In the scheduling decision paths (``pool/scheduler.py``,
+    ``serve/arbiter.py``, ``fabric/transport.py``): no ``for`` loop or
+    comprehension directly over a dict view (``.items()`` /
+    ``.values()`` / ``.keys()``) or a set.  Insertion order is
+    deterministic *today*, which is the trap — a refactor that changes
+    insertion order silently changes scheduling outcomes and every run
+    of the changed code agrees with itself.  Route the enumeration
+    through ``sorted(...)`` (canonical) or
+    ``repro.analysis.tiebreak.order(...)`` (the racecheck
+    perturbation seam), or annotate a proof of order-insensitivity
+    (integer sums, ``any``/``all``, total-order ``min``/``max`` keys,
+    per-key independent writes).
+``no-float-equality``
+    Inside the modeled-time subsystems (``serve/``, ``fabric/``,
+    ``pool/``, ``colo/``): no ``==`` / ``!=`` against a modeled-time
+    value (``clock``, ``*_s``, ``t``, ``dt``, ``completion``, ...).
+    Accumulated floats are association-sensitive; two clocks that are
+    "the same time" may differ in the last ulp, so float equality on
+    them is a latent heisenbug.  The sanctioned patterns — identity
+    tests of an uncopied stored float (heap keys, progress checks) —
+    are annotated where they occur.
 
 CLI::
 
@@ -283,8 +305,131 @@ class NoMutableDefault(Rule):
                             f"default_factory=...)")
 
 
+class NoUnorderedIteration(Rule):
+    name = "no-unordered-iteration"
+    description = ("dict/set enumeration order must not feed scheduling "
+                   "decisions — sort it, seam it, or prove it "
+                   "order-insensitive")
+
+    # the decision paths whose enumeration order picks winners: event
+    # draining / DRF admission, water-filling / victim selection, and
+    # in-flight flow re-rating
+    _FILES = ("pool/scheduler.py", "serve/arbiter.py",
+              "fabric/transport.py")
+    _VIEWS = {"items", "values", "keys"}
+    # wrappers that make enumeration order canonical (sorted) or
+    # deliberately perturbed (the repro.analysis.tiebreak seam)
+    _SAFE_CALLS = {"sorted"}
+    _SEAM_ATTR = "order"
+
+    def applies_to(self, path: Path) -> bool:
+        p = str(path)
+        return any(p.endswith(f) for f in self._FILES)
+
+    def _iter_violation(self, it: ast.AST) -> Optional[str]:
+        if isinstance(it, ast.Call):
+            fn = it.func
+            if isinstance(fn, ast.Name) and fn.id in self._SAFE_CALLS:
+                return None
+            if isinstance(fn, ast.Attribute) \
+                    and fn.attr == self._SEAM_ATTR:
+                return None         # tiebreak.order(...) racecheck seam
+            if isinstance(fn, ast.Attribute) and fn.attr in self._VIEWS:
+                return (f"iteration over .{fn.attr}() exposes dict "
+                        f"insertion order to a scheduling decision — "
+                        f"wrap in sorted(...) or tiebreak.order(...), "
+                        f"or annotate a proof of order-insensitivity")
+            if isinstance(fn, ast.Name) and fn.id in ("set", "frozenset"):
+                return ("iteration over a set exposes hash order — "
+                        "wrap in sorted(...)")
+        if isinstance(it, (ast.Set, ast.SetComp)):
+            return ("iteration over a set display exposes hash order — "
+                    "wrap in sorted(...)")
+        return None
+
+    def check(self, tree, path, source):
+        # a comprehension fed DIRECTLY to sorted(...) is canonicalized
+        # by construction — its internal enumeration order cannot leak
+        sanctioned = {
+            id(arg)
+            for node in ast.walk(tree)
+            if isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in self._SAFE_CALLS
+            for arg in node.args
+            if isinstance(arg, (ast.ListComp, ast.SetComp,
+                                ast.GeneratorExp))
+        }
+        for node in ast.walk(tree):
+            iters: List[ast.AST] = []
+            if isinstance(node, ast.For):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.DictComp, ast.GeneratorExp)):
+                if id(node) in sanctioned:
+                    continue
+                iters.extend(g.iter for g in node.generators)
+            for it in iters:
+                msg = self._iter_violation(it)
+                if msg is not None:
+                    yield it.lineno, msg
+
+
+class NoFloatEquality(Rule):
+    name = "no-float-equality"
+    description = ("== / != on modeled-time values — accumulated floats "
+                   "are association-sensitive; compare with a tolerance "
+                   "or annotate the identity-test exceptions")
+
+    # modeled-time subsystems (obs excluded: it never *computes* times,
+    # only records them)
+    _DIRS = ("serve", "fabric", "pool", "colo")
+    # identifier heuristics for "this is a modeled-time value"
+    _EXACT = {"t", "ts", "dt", "now", "t0", "t1", "t_req", "t_eff",
+              "before", "clock", "horizon", "deadline"}
+    _SUBSTR = ("time", "clock", "deadline", "arrival", "completion",
+               "latency", "horizon")
+    _SUFFIXES = ("_s", "_t", "_ts")
+
+    def applies_to(self, path: Path) -> bool:
+        parts = set(path.parts)
+        return "repro" in parts and bool(parts & set(self._DIRS))
+
+    def _timeish(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Attribute):
+            ident = node.attr
+        elif isinstance(node, ast.Name):
+            ident = node.id
+        else:
+            return None
+        low = ident.lower()
+        if low in self._EXACT or low.endswith(self._SUFFIXES) \
+                or any(s in low for s in self._SUBSTR):
+            return ident
+        return None
+
+    def check(self, tree, path, source):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            if not any(isinstance(op, (ast.Eq, ast.NotEq))
+                       for op in node.ops):
+                continue
+            for operand in [node.left, *node.comparators]:
+                ident = self._timeish(operand)
+                if ident is not None:
+                    yield node.lineno, (
+                        f"float equality against modeled-time value "
+                        f"{ident!r} — accumulated clocks differ in the "
+                        f"last ulp across association orders; compare "
+                        f"with a tolerance (or annotate an identity "
+                        f"test of one stored float)")
+                    break
+
+
 RULES: Tuple[Rule, ...] = (NoBarePrint(), NoWallclock(), CompatImports(),
-                           NoMutableDefault())
+                           NoMutableDefault(), NoUnorderedIteration(),
+                           NoFloatEquality())
 
 
 def iter_py_files(roots: Sequence[Path]) -> Iterator[Path]:

@@ -53,6 +53,25 @@ Rules (one violation names rule, track, and modeled timestamp):
     Swap seconds ``charge``d to a tenant never exceed the revocation
     costs recorded against it as victim — nobody is billed for
     traffic that was not priced.
+``sched-gang-atomic``
+    Pool-scheduler gang admission is all-or-nothing: every
+    gang-tagged ``admit`` instant on ``pool:sched`` is covered by a
+    same-timestamp ``gang_admit`` naming exactly that many members —
+    an uncovered member is a split gang, the failure mode atomic
+    admission exists to prevent.
+``sched-accel-conservation``
+    At every admission-round sample, ``free_accels`` plus
+    ``busy_accels`` equals the pool total announced by ``sched_pool``:
+    no accelerator leaked by a preemption rollback or double-granted
+    by an elastic grow.
+``sched-job-span``
+    Per job, lifecycle events are causally ordered: ``submit`` <=
+    ``hold`` <= ``admit`` <= ``run:*`` segment starts, ``finish`` >=
+    the last admit; a job never admits twice without an intervening
+    preempt/finish; ``finish``'s ``jct_s`` equals finish minus submit.
+``sched-drf-share``
+    Every ``drf_share:*`` sample lies in [0, 1] — a dominant share
+    above 1 means DRF admitted past a resource's capacity.
 
 Offline mode reuses the ``link_report_from_trace`` reconstruction
 idiom: thread-name metadata maps (pid, tid) back to tracks, µs back to
@@ -79,9 +98,11 @@ __all__ = [
 
 RULES = ("finite-clock", "track-monotone", "span-serial",
          "transfer-causality", "link-conservation", "kv-conservation",
-         "revocation-attribution")
+         "revocation-attribution", "sched-gang-atomic",
+         "sched-accel-conservation", "sched-job-span", "sched-drf-share")
 
 _ARBITER_TRACK = "pool:arbiter"
+_SCHED_TRACK = "pool:sched"
 # float tolerance on modeled seconds: within-step costs accumulate in
 # different association orders on different paths ((a+b)+c vs a+(b+c)),
 # and the µs export round-trips through two more multiplies
@@ -176,6 +197,14 @@ class Sanitizer:
         # revocation attribution (per tenant, cumulative seconds)
         self._revoked_s: Dict[str, float] = {}
         self._charged_s: Dict[str, float] = {}
+        # pool-scheduler lifecycle state (track "pool:sched")
+        self._sched_total: Optional[float] = None   # sched_pool accels
+        self._sched_free: Optional[float] = None    # last free_accels
+        # gang -> [(admit ts, job)] awaiting a covering gang_admit
+        self._gang_admits: Dict[str, List[Tuple[float, str]]] = {}
+        self._job_submit: Dict[str, float] = {}
+        self._job_admit: Dict[str, float] = {}      # last admit ts
+        self._job_live: Dict[str, bool] = {}        # currently admitted
         self._tracer: Optional[Tracer] = None
         if truncated:
             self.notes.append(
@@ -208,6 +237,7 @@ class Sanitizer:
         if not self.truncated:
             self._feed_kv(ev)
             self._feed_attribution(ev)
+        self._feed_sched(ev)
 
     def _check_monotone(self, ev: Event) -> None:
         if ev.track == _ARBITER_TRACK \
@@ -381,6 +411,148 @@ class Sanitizer:
                        f"{'leaked' if free + hot < pool else 'conjured'}"
                        f" {abs(free + hot - pool):.0f} page(s)")
 
+    # ---- pool-scheduler lifecycle (track "pool:sched") -------------------
+    def _feed_sched(self, ev: Event) -> None:
+        if ev.track != _SCHED_TRACK:
+            return
+        if ev.ph == PH_COUNTER and ev.name.startswith("drf_share:"):
+            # stateless bound — checked even on truncated recordings
+            v = float(ev.args.get("value", 0.0))
+            self.checks["sched-drf-share"] += 1
+            if not -1e-9 <= v <= 1.0 + 1e-9:
+                self._fail("sched-drf-share", ev.track, ev.ts,
+                           f"{ev.name!r} = {v!r} outside [0, 1] — DRF "
+                           f"admitted past a resource's capacity")
+            return
+        if self.truncated:
+            return          # stateful baselines below may be dropped
+        if ev.ph == PH_COUNTER:
+            if ev.name == "free_accels":
+                self._sched_free = float(ev.args.get("value", 0.0))
+            elif ev.name == "busy_accels":
+                busy = float(ev.args.get("value", 0.0))
+                free = self._sched_free
+                if self._sched_total is None or free is None:
+                    return      # no geometry announced (pre-instrumented)
+                self.checks["sched-accel-conservation"] += 1
+                if abs(free + busy - self._sched_total) > 0.5:
+                    what = ("leaked" if free + busy < self._sched_total
+                            else "conjured")
+                    self._fail(
+                        "sched-accel-conservation", ev.track, ev.ts,
+                        f"free {free:.0f} + busy {busy:.0f} != pool "
+                        f"{self._sched_total:.0f} accels — {what} "
+                        f"{abs(free + busy - self._sched_total):.0f}")
+            return
+        if ev.ph == PH_SPAN and ev.name.startswith("run:"):
+            job = ev.args.get("job")
+            if job is None:
+                return
+            self.checks["sched-job-span"] += 1
+            if not self._job_live.get(job):
+                self._fail("sched-job-span", ev.track, ev.ts,
+                           f"run segment for job {job!r} at {ev.ts:.9f}s "
+                           f"while the job is not admitted")
+            admit = self._job_admit.get(job)
+            if admit is not None and ev.ts < admit - _tol(admit):
+                self._fail("sched-job-span", ev.track, ev.ts,
+                           f"run segment for job {job!r} starts at "
+                           f"{ev.ts:.9f}s, before its last admit at "
+                           f"{admit:.9f}s")
+            return
+        if ev.ph != PH_INSTANT:
+            return
+        if ev.name == "sched_pool":
+            self._sched_total = float(ev.args.get("accels", 0.0))
+        elif ev.name == "submit":
+            job = ev.args.get("job")
+            if job is not None:
+                self._job_submit.setdefault(job, ev.ts)
+        elif ev.name == "hold":
+            self._check_job_after_submit(ev, "hold")
+        elif ev.name == "admit":
+            job = self._check_job_after_submit(ev, "admit")
+            if job is None:
+                return
+            self.checks["sched-job-span"] += 1
+            if self._job_live.get(job):
+                self._fail("sched-job-span", ev.track, ev.ts,
+                           f"job {job!r} admitted twice with no "
+                           f"intervening preempt/finish")
+            self._job_admit[job] = ev.ts
+            self._job_live[job] = True
+            gang = ev.args.get("gang") or ""
+            if gang:
+                self._gang_admits.setdefault(gang, []).append((ev.ts, job))
+        elif ev.name == "gang_admit":
+            self._check_gang_admit(ev)
+        elif ev.name == "preempt":
+            job = ev.args.get("job")
+            if job is not None:
+                self._job_live[job] = False
+        elif ev.name == "finish":
+            job = ev.args.get("job")
+            if job is None:
+                return
+            self.checks["sched-job-span"] += 1
+            if not self._job_live.get(job):
+                self._fail("sched-job-span", ev.track, ev.ts,
+                           f"job {job!r} finished while not admitted")
+            self._job_live[job] = False
+            admit = self._job_admit.get(job)
+            if admit is not None and ev.ts < admit - _tol(admit):
+                self._fail("sched-job-span", ev.track, ev.ts,
+                           f"job {job!r} finishes at {ev.ts:.9f}s, before "
+                           f"its last admit at {admit:.9f}s")
+            submit = self._job_submit.get(job)
+            jct = ev.args.get("jct_s")
+            if submit is not None and jct is not None \
+                    and abs(float(jct) - (ev.ts - submit)) > _tol(ev.ts):
+                self._fail("sched-job-span", ev.track, ev.ts,
+                           f"job {job!r} reports jct_s={float(jct):.9f} "
+                           f"but finish - submit = "
+                           f"{ev.ts - submit:.9f}s")
+
+    def _check_job_after_submit(self, ev: Event,
+                                what: str) -> Optional[str]:
+        """Shared submit-precedes check; returns the job name (None if
+        the event is unattributable, which is its own violation)."""
+        job = ev.args.get("job")
+        self.checks["sched-job-span"] += 1
+        if job is None:
+            self._fail("sched-job-span", ev.track, ev.ts,
+                       f"{ev.name!r} instant carries no job name")
+            return None
+        submit = self._job_submit.get(job)
+        if submit is None:
+            self._fail("sched-job-span", ev.track, ev.ts,
+                       f"job {job!r} {what} at {ev.ts:.9f}s was never "
+                       f"submitted")
+        elif ev.ts < submit - _tol(submit):
+            self._fail("sched-job-span", ev.track, ev.ts,
+                       f"job {job!r} {what} at {ev.ts:.9f}s precedes its "
+                       f"submit at {submit:.9f}s")
+        return job
+
+    def _check_gang_admit(self, ev: Event) -> None:
+        gang = ev.args.get("gang")
+        want = int(ev.args.get("members", 0))
+        buf = self._gang_admits.pop(gang, [])
+        got = [j for ts, j in buf if abs(ts - ev.ts) <= _tol(ev.ts)]
+        stale = [j for ts, j in buf if abs(ts - ev.ts) > _tol(ev.ts)]
+        self.checks["sched-gang-atomic"] += 1
+        for j in sorted(stale):
+            self._fail("sched-gang-atomic", ev.track, ev.ts,
+                       f"gang {gang!r}: member {j!r} admitted at a "
+                       f"different timestamp than its gang_admit "
+                       f"({ev.ts:.9f}s) — gang split across rounds")
+        if len(got) != want:
+            self._fail("sched-gang-atomic", ev.track, ev.ts,
+                       f"gang {gang!r}: gang_admit names {want} "
+                       f"member(s) but {len(got)} gang-tagged admit(s) "
+                       f"landed at {ev.ts:.9f}s "
+                       f"({sorted(got)})")
+
     def _feed_attribution(self, ev: Event) -> None:
         if ev.ph != PH_INSTANT or ev.track != _ARBITER_TRACK:
             return
@@ -416,6 +588,13 @@ class Sanitizer:
                            f"{busy:.9f}s of occupied time at "
                            f"{cap:.3e} B/s — more payload than the "
                            f"link's busy window can carry")
+        for gang in sorted(self._gang_admits):
+            members = sorted(j for _, j in self._gang_admits[gang])
+            self.checks["sched-gang-atomic"] += 1
+            self._fail("sched-gang-atomic", _SCHED_TRACK,
+                       self._gang_admits[gang][0][0],
+                       f"gang {gang!r}: gang-tagged admit(s) {members} "
+                       f"never covered by a gang_admit — split gang")
         if self._begun:
             fids = sorted(self._begun, key=str)[:5]
             self.notes.append(

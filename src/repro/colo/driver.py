@@ -27,6 +27,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
+from repro.analysis import tiebreak
 from repro.colo.collectives import TrainActor
 from repro.serve.engine import RequestHandle
 
@@ -86,7 +87,11 @@ def run_colo(pairs: Sequence[Pair], train: Sequence[TrainActor] = (), *,
             raise RuntimeError(
                 "co-residency deadlock: every engine is blocked on pages "
                 "another tenant holds and no training remains")
-        t, j = min(live)
+        # total-order selection over (clock, candidate index): equal
+        # clocks break serve-before-train by index (spec, not incident)
+        # — the racecheck seam permutes the list to prove the selection
+        # never depends on construction order
+        t, j = min(tiebreak.order(live))
         if j >= n_serve:
             actors[j - n_serve].step()      # always makes progress
             blocked.clear()
@@ -100,7 +105,7 @@ def run_colo(pairs: Sequence[Pair], train: Sequence[TrainActor] = (), *,
                 state[j][2] += 1
         before = eng.clock
         dt = eng.step()
-        if dt > 0.0 or eng.idle or eng.clock != before:
+        if dt > 0.0 or eng.idle or eng.clock != before:  # repro: allow(no-float-equality) identity test — did step() assign a new clock value at all, not a time comparison
             blocked.clear()
         else:
             others = [c[0] for c in cands if c[1] != j]

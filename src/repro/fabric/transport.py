@@ -39,6 +39,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis import tiebreak
 from repro.fabric.topology import Link, Route, Topology
 from repro.obs.export import link_tier
 from repro.obs.metrics import MetricsRegistry
@@ -135,7 +136,7 @@ class Transport:
         t_req = self.now if t is None else float(t)
         completion, solo, t_eff = self._begin(route, nbytes, t_req,
                                               label=label)
-        if solo and nbytes > 0 and t_eff == t_req:
+        if solo and nbytes > 0 and t_eff == t_req:  # repro: allow(no-float-equality) identity test of an unclamped begin time, not a tolerance compare — t_eff IS t_req unless max() replaced it
             return route.latency() + nbytes / route.bottleneck_bw
         return completion - t_req
 
@@ -155,7 +156,7 @@ class Transport:
         self._flows[flow.fid] = flow
         self.peak_inflight = max(self.peak_inflight, len(self._flows))
         for link in route.links:
-            n_on = sum(1 for f in self._flows.values()
+            n_on = sum(1 for f in self._flows.values()  # repro: allow(no-unordered-iteration) integer count — exact and commutative in any order
                        if link in f.route.links)
             if n_on > self.link_peak_flows.get(link.name, 0):
                 self.link_peak_flows[link.name] = n_on
@@ -170,7 +171,7 @@ class Transport:
                 + route.latency()
         if self.tracer.enabled:
             rate0 = self._rates({fid: f.remaining for fid, f
-                                 in self._flows.items()})[flow.fid]
+                                 in self._flows.items()})[flow.fid]  # repro: allow(no-unordered-iteration) per-key dict build — no cross-key effects
             flow.rates.append((t, rate0))
             self.tracer.instant(
                 "fabric", "begin_transfer", t, cat=CAT_FABRIC,
@@ -186,7 +187,7 @@ class Transport:
     def link_flows(self, link_name: str) -> int:
         """In-flight transfers currently crossing ``link_name``."""
         link = self.topology.links[link_name]
-        return sum(1 for f in self._flows.values() if link in f.route.links)
+        return sum(1 for f in self._flows.values() if link in f.route.links)  # repro: allow(no-unordered-iteration) integer count — exact and commutative in any order
 
     def quiesce(self) -> float:
         """Advance the frontier until every in-flight flow has drained
@@ -195,7 +196,7 @@ class Transport:
         only *actually* drain as later begins advance the clock, so the
         last transfers' busy seconds are otherwise still pending."""
         while self._flows:
-            remaining = {fid: f.remaining for fid, f in self._flows.items()}
+            remaining = {fid: f.remaining for fid, f in self._flows.items()}  # repro: allow(no-unordered-iteration) per-key dict build — no cross-key effects
             horizon, _, _ = self._drain_interval(remaining, self.now)
             self._advance(horizon)
         return self.now
@@ -237,7 +238,7 @@ class Transport:
 
     # ---- fluid simulation ------------------------------------------------
     def _on_link(self, link: Link) -> bool:
-        return any(link in f.route.links for f in self._flows.values())
+        return any(link in f.route.links for f in self._flows.values())  # repro: allow(no-unordered-iteration) boolean any() — commutative in any order
 
     def _rates(self, remaining: Dict[int, float]) -> Dict[int, float]:
         """Max-min fair rate per flow (progressive filling): repeatedly
@@ -245,16 +246,22 @@ class Transport:
         split of its residual capacity, remove them, repeat."""
         rates: Dict[int, float] = {}
         live = set(remaining)
-        residual = {name: l.capacity for name, l in self.topology.links.items()}
+        residual = {name: l.capacity for name, l in self.topology.links.items()}  # repro: allow(no-unordered-iteration) per-key dict build — no cross-key effects
         members: Dict[str, List[int]] = {}
-        for fid in sorted(live):
+        # member-list order is incidental: flows frozen on one
+        # bottleneck all receive the SAME share, so the residual
+        # subtractions commute bit-exactly (equal values in any
+        # association) — the racecheck seam permutes the build
+        for fid in tiebreak.order(sorted(live)):
             for l in self._flows[fid].route.links:
                 members.setdefault(l.name, []).append(fid)
         while live:
             # bottleneck link: smallest equal share among links with
-            # unfrozen flows (ties broken by link name: deterministic)
+            # unfrozen flows — a TOTAL-order min over (share, name), so
+            # the enumeration order of ``members`` cannot pick the
+            # winner
             best: Optional[Tuple[float, str]] = None
-            for name, fids in members.items():
+            for name, fids in members.items():  # repro: allow(no-unordered-iteration) total-order min over (share, name) — enumeration order irrelevant
                 unfrozen = [f for f in fids if f in live]
                 if not unfrozen:
                     continue
@@ -271,7 +278,7 @@ class Transport:
                 live.discard(fid)
                 for l in self._flows[fid].route.links:
                     residual[l.name] -= share
-            residual = {k: max(0.0, v) for k, v in residual.items()}
+            residual = {k: max(0.0, v) for k, v in residual.items()}  # repro: allow(no-unordered-iteration) per-key clamp rebuild — no cross-key effects
         return rates
 
     def _drain_interval(self, remaining: Dict[int, float], now: float,
@@ -287,21 +294,26 @@ class Transport:
         exact — with the residue epsilon as a backstop."""
         rates = self._rates(remaining)
         fts = {fid: now + rem / rates[fid]
-               for fid, rem in remaining.items()
+               for fid, rem in remaining.items()  # repro: allow(no-unordered-iteration) per-key dict build — no cross-key effects
                if rates.get(fid, 0.0) > 0}
         if not fts and cap is None:
             raise RuntimeError("transport: in-flight set cannot drain "
                                "(zero-rate flow)")
-        horizon = min(fts.values()) if fts else cap
+        horizon = min(fts.values()) if fts else cap  # repro: allow(no-unordered-iteration) min() of floats — commutative in any order
         if cap is not None:
             horizon = min(horizon, cap)
         dt = horizon - now
         finished: List[int] = []
-        for fid in list(remaining):
+        # scan order is incidental (per-key updates only) — the seam
+        # permutes it; ``finished`` is canonicalized to fid order below
+        # because finish order FEEDS order-sensitive effects downstream
+        # (trace span emission, float stretch accumulation)
+        for fid in tiebreak.order(remaining):
             remaining[fid] -= rates.get(fid, 0.0) * dt
             if fts.get(fid, float("inf")) <= horizon \
                     or remaining[fid] <= _EPS_BYTES:
                 finished.append(fid)
+        finished.sort()
         return horizon, finished, rates
 
     def _advance(self, t: float) -> None:
@@ -312,19 +324,23 @@ class Transport:
         link-occupancy spans hit the flight recorder (its actual
         modeled finish is known here, not at begin time)."""
         while self.now < t and self._flows:
-            remaining = {fid: f.remaining for fid, f in self._flows.items()}
+            remaining = {fid: f.remaining for fid, f in self._flows.items()}  # repro: allow(no-unordered-iteration) per-key dict build — no cross-key effects
             horizon, finished, rates = self._drain_interval(
                 remaining, self.now, cap=t)
             dt = horizon - self.now
             if dt > 0:
                 self._account_interval(dt, rates)
             if self.tracer.enabled:
-                for fid, rate in rates.items():
+                for fid, rate in rates.items():  # repro: allow(no-unordered-iteration) per-flow independent appends — no cross-key effects
                     fl = self._flows[fid]
                     if not fl.rates or fl.rates[-1][1] != rate:
                         fl.rates.append((self.now, rate))
-            for fid, rem in remaining.items():
+            for fid, rem in remaining.items():  # repro: allow(no-unordered-iteration) per-key write-back — no cross-key effects
                 self._flows[fid].remaining = rem
+            # ``finished`` is in canonical fid order (begin order):
+            # trace span emission and stretch accumulation are
+            # order-sensitive, so the drain scan's order must not leak
+            # into them
             for fid in finished:
                 self._finish_flow(self._flows.pop(fid), horizon)
             self.now = horizon
@@ -336,14 +352,20 @@ class Transport:
         each crossing flow's drained bytes (hops pipeline, so a flow's
         payload is serialized across every link of its route)."""
         on_link: Dict[str, float] = {}
-        for fid, flow in self._flows.items():
+        # canonical (fid-sorted) accumulation: per-link byte totals are
+        # float adds of UNEQUAL values, which do not commute bit-exactly
+        # — the in-flight dict's insertion order must never pick the
+        # association.  (Today insertion order IS fid order, so this is
+        # an identity change that pins the invariant.)
+        for fid in sorted(self._flows):
+            flow = self._flows[fid]
             drained = rates.get(fid, 0.0) * dt
             for link in flow.route.links:
                 on_link[link.name] = on_link.get(link.name, 0.0) + drained
                 if flow.label is not None:
                     by = self.link_label_bytes.setdefault(link.name, {})
                     by[flow.label] = by.get(flow.label, 0.0) + drained
-        for name, nbytes in on_link.items():
+        for name, nbytes in on_link.items():  # repro: allow(no-unordered-iteration) per-key single add into each gauge — no cross-key effects
             self.link_busy_s[name] = self.link_busy_s.get(name, 0.0) + dt
             self.link_bytes[name] = self.link_bytes.get(name, 0.0) + nbytes
 
@@ -377,7 +399,7 @@ class Transport:
         """Forward-simulate the current in-flight set (no future
         arrivals) until ``target`` drains; pure projection — real state
         is only advanced by ``_advance`` as begin times arrive."""
-        remaining = {fid: f.remaining for fid, f in self._flows.items()}
+        remaining = {fid: f.remaining for fid, f in self._flows.items()}  # repro: allow(no-unordered-iteration) per-key dict build — no cross-key effects
         now = self.now
         for _ in range(len(remaining) + 1):
             horizon, finished, _ = self._drain_interval(remaining, now)

@@ -37,13 +37,15 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                adapt, write_json)
 from repro.obs.trace import (CAT_ARBITER, CAT_ENGINE, CAT_FABRIC, CAT_KV,
                              CAT_LINK, CAT_REQUEST, CAT_SCHED, NULL_TRACER,
-                             Event, NullTracer, Tracer, resolve)
+                             Event, JsonlSink, NullTracer, Tracer,
+                             events_from_jsonl, resolve)
 
 __all__ = [
     "CAT_ARBITER", "CAT_ENGINE", "CAT_FABRIC", "CAT_KV", "CAT_LINK",
     "CAT_REQUEST", "CAT_SCHED", "Counter", "Event", "Gauge", "Histogram",
-    "MetricsRegistry", "NULL_TRACER", "NullTracer", "Tracer", "adapt",
-    "format_link_report", "link_report", "link_report_from_trace",
-    "link_tier", "resolve", "tier_report", "to_chrome_trace",
-    "validate_trace_events", "write_chrome_trace", "write_json",
+    "JsonlSink", "MetricsRegistry", "NULL_TRACER", "NullTracer", "Tracer",
+    "adapt", "events_from_jsonl", "format_link_report", "link_report",
+    "link_report_from_trace", "link_tier", "resolve", "tier_report",
+    "to_chrome_trace", "validate_trace_events", "write_chrome_trace",
+    "write_json",
 ]

@@ -1,6 +1,7 @@
 """The ONE sanctioned stdout channel for ``src/repro`` runtime code.
 
-The lint step (``scripts/lint_no_print.py``, run in CI) forbids bare
+The lint step (``repro.analysis.lints``' ``no-bare-print`` rule, run
+in CI) forbids bare
 ``print(`` calls anywhere under ``src/repro`` so runtime reporting
 cannot silently bypass the observability layer; this module is the
 single exempt site.  CLI drivers (``repro.launch.*``) route their

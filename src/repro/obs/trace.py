@@ -38,6 +38,7 @@ prefix before the first ``":"``.
 
 from __future__ import annotations
 
+import json
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 # Chrome trace_event phase tags (the subset the exporter emits)
@@ -219,6 +220,82 @@ class NullTracer(Tracer):
 
 
 NULL_TRACER = NullTracer()
+
+
+class JsonlSink:
+    """Streaming trace sink: one JSON object per recorded event, written
+    through a ``Tracer.add_hook`` tap *before* the ring can drop it.
+
+    The ring bounds what survives in memory; the sink bounds nothing —
+    a million-step run streams a complete, lossless event log to disk
+    in the tracer's native units (modeled seconds, full float precision)
+    rather than the exporter's µs-integer Chrome encoding.  The line
+    format is the ``Event`` tuple by name::
+
+        {"ph": "X", "cat": "link", "track": "link:a->b",
+         "name": "xfer", "ts": 0.0125, "dur": 0.004, "args": {...}}
+
+    ``events_from_jsonl`` reads the stream back into ``Event`` objects,
+    so the sanitizer and ``analysis.tracediff`` consume streamed logs
+    and ring exports interchangeably.  Use as a context manager or call
+    ``close()``; the hook detaches on close.
+    """
+
+    def __init__(self, path: str, tracer: Optional["Tracer"] = None):
+        self.path = path
+        self._f = open(path, "w")
+        self.written = 0
+        self._tracer: Optional[Tracer] = None
+        if tracer is not None:
+            self.attach(tracer)
+
+    def attach(self, tracer: "Tracer") -> "JsonlSink":
+        if self._tracer is not None:
+            raise RuntimeError("JsonlSink is already attached")
+        tracer.add_hook(self._on_event)
+        self._tracer = tracer
+        return self
+
+    def _on_event(self, ev: Event) -> None:
+        self._f.write(json.dumps(
+            {"ph": ev.ph, "cat": ev.cat, "track": ev.track,
+             "name": ev.name, "ts": ev.ts, "dur": ev.dur,
+             "args": ev.args},
+            separators=(",", ":"), sort_keys=True) + "\n")
+        self.written += 1
+
+    def close(self) -> None:
+        if self._tracer is not None:
+            self._tracer.remove_hook(self._on_event)
+            self._tracer = None
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+def events_from_jsonl(path: str) -> List[Event]:
+    """Rebuild ``Event`` objects from a ``JsonlSink`` stream (skips
+    blank lines; raises with the line number on a malformed one)."""
+    out: List[Event] = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, start=1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+                out.append(Event(d["ph"], d["cat"], d["track"], d["name"],
+                                 d["ts"], d.get("dur", 0.0),
+                                 d.get("args") or {}))
+            except (ValueError, KeyError, TypeError) as e:
+                raise ValueError(
+                    f"{path}:{lineno}: bad trace event line: {e}") from e
+    return out
 
 
 def resolve(tracer: Optional[Tracer]) -> Tracer:

@@ -36,6 +36,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis import tiebreak
 from repro.core import simulator as sim
 from repro.obs.trace import CAT_SCHED, resolve
 from repro.pool.allocator import Allocation, Allocator, JobRequest
@@ -155,12 +156,12 @@ class ScheduleResult:
 
     @property
     def mean_jct(self) -> float:
-        jcts = [r.jct for r in self.records.values() if r.jct is not None]
+        jcts = [r.jct for r in self.records.values() if r.jct is not None]  # repro: allow(no-unordered-iteration) records insert in submit() call order — spec'd, not incidental
         return sum(jcts) / len(jcts) if jcts else 0.0
 
     @property
     def mean_queue_delay(self) -> float:
-        qs = [r.queue_delay for r in self.records.values()
+        qs = [r.queue_delay for r in self.records.values()  # repro: allow(no-unordered-iteration) records insert in submit() call order — spec'd, not incidental
               if r.queue_delay is not None]
         return sum(qs) / len(qs) if qs else 0.0
 
@@ -177,7 +178,7 @@ class ScheduleResult:
                     mean_fragmentation=self.mean_fragmentation,
                     makespan=self.makespan,
                     n_finished=sum(r.finish_t is not None
-                                   for r in self.records.values()))
+                                   for r in self.records.values()))  # repro: allow(no-unordered-iteration) integer count — exact and commutative in any order
 
 
 class Scheduler:
@@ -216,6 +217,7 @@ class Scheduler:
         self._granted_area = 0.0
         self._frag_samples: List[float] = []
         self._step_cache: Dict[Tuple, float] = {}
+        self._geom_emitted = False
 
     # ---- public API ------------------------------------------------------
     def submit(self, job: PoolJob) -> None:
@@ -223,18 +225,34 @@ class Scheduler:
         self.records[job.name] = JobRecord(job.name, job.submit_t)
 
     def run(self, until: float = math.inf) -> ScheduleResult:
+        if self.tracer.enabled and not self._geom_emitted:
+            # pool geometry, once: the conservation baseline the
+            # repro.analysis sanitizer checks accel counters against
+            self._geom_emitted = True
+            self.tracer.instant(self._TRACK, "sched_pool", self._now,
+                                cat=CAT_SCHED,
+                                accels=self.inv.total_accels)
         while self._events:
             if self._events[0][0] > until:
                 break   # leave the event for a later run() call
-            t, _, kind, data = heapq.heappop(self._events)
+            t, seq, kind, data = heapq.heappop(self._events)
             self._advance(t)
-            self._handle(kind, data)
             # drain every event sharing this timestamp BEFORE admitting:
             # co-submitted jobs (a DRF gang in particular) must be
             # visible to one admission round together, or the first
             # member admits alone and all-or-nothing is vacuous
-            while self._events and self._events[0][0] == t:
-                _, _, kind, data = heapq.heappop(self._events)
+            batch = [(seq, kind, data)]
+            while self._events and self._events[0][0] == t:  # repro: allow(no-float-equality) heap keys are stored floats compared by identity — equality DEFINES the same-timestamp batch
+                _, seq, kind, data = heapq.heappop(self._events)
+                batch.append((seq, kind, data))
+            # canonical handling order for one timestamp: submits FIFO
+            # by submission sequence (spec), then finishes by sequence.
+            # Heap pop order within a timestamp is thereby provably
+            # irrelevant — the racecheck seam permutes the batch and the
+            # sort restores the canonical order bit-exactly
+            for _, kind, data in sorted(tiebreak.order(batch),
+                                        key=lambda e: (e[1] != "submit",
+                                                       e[0])):
                 self._handle(kind, data)
             self._admit_and_grow()
         # partial horizon: accrue the tail window [last_event, until) —
@@ -316,8 +334,8 @@ class Scheduler:
     def _advance(self, t: float) -> None:
         dt = t - self._last_t
         if dt > 0:
-            busy = sum(r.alloc.n_requested for r in self._running.values())
-            granted = sum(r.alloc.n_granted for r in self._running.values())
+            busy = sum(r.alloc.n_requested for r in self._running.values())  # repro: allow(no-unordered-iteration) integer sum — exact and commutative in any order
+            granted = sum(r.alloc.n_granted for r in self._running.values())  # repro: allow(no-unordered-iteration) integer sum — exact and commutative in any order
             self._util_area += busy * dt
             self._granted_area += granted * dt
             self._last_t = t
@@ -417,6 +435,16 @@ class Scheduler:
         else:
             self._admit_fifo()
         self._grow_elastic()
+        if self.tracer.enabled:
+            # accel conservation sample, once per admission round:
+            # free + granted-to-running == pool total, checked by the
+            # repro.analysis sanitizer's sched-accel-conservation rule
+            free = self.alloc.free_accels()
+            busy = sum(r.alloc.n_granted for r in self._running.values())  # repro: allow(no-unordered-iteration) integer sum — exact and commutative in any order
+            self.tracer.counter(self._TRACK, "free_accels", self._now,
+                                float(free), cat=CAT_SCHED)
+            self.tracer.counter(self._TRACK, "busy_accels", self._now,
+                                float(busy), cat=CAT_SCHED)
 
     def _admit_fifo(self) -> None:
         # FIFO with optional backfill; preemption only for head-of-line.
@@ -471,7 +499,12 @@ class Scheduler:
         caps = (self.inv.total_accels, self.inv.total_tier2,
                 self.inv.total_tier2_bw)
         use = [0.0, 0.0, 0.0]
-        for run in self._running.values():
+        # canonical (name-sorted) accumulation order: tier-2 bytes/bw
+        # are float adds, and float addition is not associative — the
+        # incidental insertion order of ``_running`` must never pick
+        # which association the share gets
+        for name in sorted(self._running):
+            run = self._running[name]
             if run.job.drf_user != user:
                 continue
             use[0] += run.alloc.n_requested
@@ -492,7 +525,7 @@ class Scheduler:
                 return False
             allocs.append((job, alloc))
         for job, alloc in allocs:
-            self._start(job, job.par, alloc)
+            self._start(job, job.par, alloc, in_gang=len(jobs) > 1)
         if len(jobs) > 1:
             self._log(f"admit gang {jobs[0].gang!r} "
                       f"({len(jobs)} jobs, all-or-nothing)")
@@ -528,6 +561,13 @@ class Scheduler:
                 key = next(k for k in order if user_of[k] == user)
                 if self._try_admit_gang(gangs[key]):
                     admitted = {id(j) for j in gangs[key]}
+                    if self.tracer.enabled:
+                        # post-admission dominant share of the user who
+                        # just admitted — the sanitizer's
+                        # sched-drf-share rule bounds it to [0, 1]
+                        self.tracer.counter(
+                            self._TRACK, f"drf_share:{user}", self._now,
+                            self._dominant_share(user), cat=CAT_SCHED)
                     break
             if admitted is None:
                 return
@@ -556,7 +596,7 @@ class Scheduler:
 
     # ---- lifecycle -------------------------------------------------------
     def _start(self, job: PoolJob, par: sim.ParallelismConfig,
-               alloc: Allocation) -> None:
+               alloc: Allocation, *, in_gang: bool = False) -> None:
         st = self.step_time(job, par, alloc)
         rec = self.records[job.name]
         if rec.start_t is None:
@@ -572,11 +612,16 @@ class Scheduler:
                   f"pods={list(alloc.pod_ids)} granted={alloc.n_granted} "
                   f"(stranded={alloc.n_stranded}) step={st*1e3:.1f}ms")
         if self.tracer.enabled:
+            # ``gang`` is set ONLY for members co-admitted through the
+            # all-or-nothing path: the sanitizer's sched-gang-atomic
+            # rule requires every gang-tagged admit to be covered by a
+            # same-timestamp gang_admit naming the full member count
             self.tracer.instant(self._TRACK, "admit", self._now,
                                 cat=CAT_SCHED, job=job.name, dp=par.dp,
                                 pods=list(alloc.pod_ids),
                                 granted=alloc.n_granted,
-                                stranded=alloc.n_stranded, step_s=st)
+                                stranded=alloc.n_stranded, step_s=st,
+                                gang=job.gang if in_gang else "")
 
     def _account_segment(self, run: _Running) -> None:
         dt = self._now - run.seg_start

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import tiebreak
 from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import CAT_ARBITER, resolve
@@ -188,14 +189,19 @@ class PoolArbiter:
         """Max-min fair (water-filling) page shares over live tenants:
         equal split, with tenants demanding less than their level
         donating the surplus to the still-unsatisfied."""
+        # registration-order enumeration is incidental: every decision
+        # below reduces through sorted() or integer arithmetic, and the
+        # racecheck seam permutes these builds to prove it
         demands = {n: min(t.engine._page_demand(), self.num_pages)
-                   for n, t in self._tenants.items()}
+                   for n, t in tiebreak.order(self._tenants.items())}
         shares = {n: 0 for n in self._tenants}
-        pending = {n: d for n, d in demands.items() if d > 0}
+        pending = {n: d for n, d in tiebreak.order(demands.items())
+                   if d > 0}
         remaining = self.num_pages
         while pending:
             level = remaining // len(pending)
-            sat = [n for n, d in pending.items() if d <= level]
+            sat = [n for n, d in tiebreak.order(pending.items())
+                   if d <= level]
             if not sat:
                 # nobody saturates at this level: split evenly, with the
                 # integer remainder going one page each to the first
@@ -216,7 +222,8 @@ class PoolArbiter:
         quantity a tenant may keep *scheduled*.  Exceeding it is legal
         only until somebody under-share allocates (revocation)."""
         shares = self._shares()
-        used = {n: t.kv.hot_used() for n, t in self._tenants.items()}
+        used = {n: t.kv.hot_used()
+                for n, t in tiebreak.order(self._tenants.items())}
         free = len(self._free)
         out = {}
         for n in self._tenants:
@@ -234,7 +241,7 @@ class PoolArbiter:
         revocable (pages of *paused* sequences — running rows are never
         yanked mid-decode)."""
         out = {}
-        for n, t in self._tenants.items():
+        for n, t in tiebreak.order(self._tenants.items()):
             over = t.kv.hot_used() - allowances[n]
             if over <= 0:
                 continue
@@ -252,7 +259,7 @@ class PoolArbiter:
         if deficit <= 0:
             return 0
         evictable = sum(v for n, v in
-                        self._evictable_over(allowances).items()
+                        self._evictable_over(allowances).items()  # repro: allow(no-unordered-iteration) integer sum — exact and commutative in any order
                         if n != tenant)
         return min(deficit, evictable)
 
@@ -270,8 +277,15 @@ class PoolArbiter:
 
         allowances = self._allowances()     # frozen for this pass
         while len(self._free) < need:
-            best = None
-            for u, t in sorted(self._tenants.items()):
+            # victim selection is a TOTAL-order reduction — most pages
+            # over share, ties to the lexicographically first tenant —
+            # so the scan order over the tenant dict is provably
+            # irrelevant (the racecheck seam permutes it).  The old
+            # form (sorted scan + strict ``>``) encoded the same
+            # tie-break implicitly in enumeration order; an unsorted
+            # refactor of that scan would have silently changed victims
+            cands = []
+            for u, t in tiebreak.order(self._tenants.items()):
                 if u == tenant:
                     continue
                 over = t.kv.hot_used() - allowances[u]
@@ -281,8 +295,9 @@ class PoolArbiter:
                           if t.kv.holds(s.rid) and t.kv.hot_count(s.rid) > 0]
                 if not paused:
                     continue
-                if best is None or over > best[0]:
-                    best = (over, u, t, paused)
+                cands.append((over, u, t, paused))
+            best = (min(cands, key=lambda c: (-c[0], c[1]))
+                    if cands else None)
             if best is None:
                 raise KVBudgetExceeded(
                     f"{tenant!r}: revocation cannot free "

@@ -492,8 +492,8 @@ class Engine:
         dt += self._swap_in(dt)
         dt += self._admit(dt)
         dt += self._decode_once(dt)
-        if dt == 0.0 and self._queue and not self._paused \
-                and all(s is None for s in self._slots):
+        if (dt == 0.0 and self._queue and not self._paused  # repro: allow(no-float-equality) 0.0 is an exact no-work sentinel (no phase ran), never an accumulated time
+                and all(s is None for s in self._slots)):
             # nothing runnable and the FIFO head has not arrived yet:
             # idle-advance to its arrival (the same jump run_trace makes)
             # so directly-submitted future-dated requests make progress

@@ -13,6 +13,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.analysis import tiebreak
 from repro.serve.api import Request, RequestHandle
 
 
@@ -132,7 +133,11 @@ def run_multi_trace(pairs, *, max_steps: int = 1_000_000
             raise RuntimeError(
                 "multi-tenant deadlock: every engine is blocked on pages "
                 "another tenant holds")
-        t, j = min(live)
+        # candidate-list construction order is incidental: selection is
+        # a total-order min over (clock, engine index) — equal clocks
+        # break by index (the spec'd interleave), and the racecheck
+        # seam permutes the list to prove nothing else leaks in
+        t, j = min(tiebreak.order(live))
         eng, pend = state[j][0], state[j][1]
         if eng.idle:
             eng.advance_clock(t)
@@ -142,7 +147,7 @@ def run_multi_trace(pairs, *, max_steps: int = 1_000_000
                 state[j][2] += 1
         before = eng.clock
         dt = eng.step()
-        if dt > 0.0 or eng.idle or eng.clock != before:
+        if dt > 0.0 or eng.idle or eng.clock != before:  # repro: allow(no-float-equality) identity test — did step() assign a new clock value at all, not a time comparison
             blocked.clear()
         else:
             others = [c[0] for c in cands if c[1] != j]

@@ -155,6 +155,81 @@ def test_mutable_dataclass_field_flagged_factory_clean(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# no-unordered-iteration
+# ---------------------------------------------------------------------------
+
+def test_unordered_iteration_flagged_in_decision_files(tmp_path):
+    src = """\
+        for k, v in queue.items():
+            admit(k, v)
+        winners = [j for j in jobs.values()]
+        losers = {x for x in set(names)}
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/pool/scheduler.py", src))
+    bad = [v for v in vs if v.rule == "no-unordered-iteration"]
+    assert {v.line for v in bad} == {1, 3, 4}
+
+
+def test_unordered_iteration_sanctioned_forms_clean(tmp_path):
+    src = """\
+        from repro.analysis import tiebreak
+        for k in sorted(queue.items()):
+            admit(k)
+        for j in tiebreak.order(jobs.values()):
+            admit(j)
+        names = sorted(j.name for j in jobs.values())
+        total = sum(v for v in sizes.values())  # repro: allow(no-unordered-iteration) commutative int sum
+    """
+    assert "no-unordered-iteration" not in _rules_hit(
+        tmp_path, "src/repro/fabric/transport.py", src)
+
+
+def test_unordered_iteration_scoped_to_decision_paths(tmp_path):
+    # the same source elsewhere (no scheduling decisions) is fine
+    src = "for k in queue.items():\n    admit(k)\n"
+    assert "no-unordered-iteration" not in _rules_hit(
+        tmp_path, "src/repro/models/m.py", src)
+
+
+# ---------------------------------------------------------------------------
+# no-float-equality
+# ---------------------------------------------------------------------------
+
+def test_float_equality_on_modeled_time_flagged(tmp_path):
+    src = """\
+        if eng.clock == before:
+            pass
+        done = t_req != deadline
+        ok = arrival_time == 0.0
+    """
+    vs = lint_file(_write(tmp_path, "src/repro/serve/e.py", src))
+    bad = [v for v in vs if v.rule == "no-float-equality"]
+    assert {v.line for v in bad} == {1, 3, 4}
+
+
+def test_float_equality_tolerance_and_non_time_clean(tmp_path):
+    src = """\
+        if abs(eng.clock - before) < 1e-9:
+            pass
+        if name == "decode":                 # not a time identifier
+            pass
+        if count != 3:
+            pass
+        moved = eng.clock != before  # repro: allow(no-float-equality) progress probe, not a time compare
+    """
+    assert "no-float-equality" not in _rules_hit(
+        tmp_path, "src/repro/colo/d.py", src)
+
+
+def test_float_equality_scoped_to_modeled_time_dirs(tmp_path):
+    src = "ok = t0 == t1\n"
+    assert "no-float-equality" not in _rules_hit(
+        tmp_path, "src/repro/models/host.py", src)
+    assert "no-float-equality" in _rules_hit(
+        tmp_path, "src/repro/pool/p.py", src)
+
+
+# ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
 
@@ -224,7 +299,8 @@ def test_cli_exit_codes(tmp_path, capsys):
 def test_rule_registry_matches_issue_contract():
     names = {r.name for r in RULES}
     assert {"no-bare-print", "no-wallclock", "compat-imports",
-            "no-mutable-default"} <= names
+            "no-mutable-default", "no-unordered-iteration",
+            "no-float-equality"} <= names
 
 
 # ---------------------------------------------------------------------------

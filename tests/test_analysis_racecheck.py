@@ -1,0 +1,327 @@
+"""The determinism race-detector stack: the ``tiebreak`` perturbation
+seam, the ``tracediff`` structural A/B differ, and the ``racecheck``
+harness — including mutation tests that inject a real order-dependent
+tie-break into the pool scheduler and assert racecheck catches it with
+the correct first-divergent-event blame, plus no-false-positive runs
+over the scheduler, transport, and multi-tenant serving estates."""
+
+import dataclasses
+
+import pytest
+
+from repro.analysis import (RaceDivergence, diff_events, racecheck,
+                            tiebreak)
+from repro.analysis.tracediff import diff_trace_files
+from repro.core import fabric as fb
+from repro.core import simulator as sim
+from repro.fabric import Topology, Transport
+from repro.obs import JsonlSink, Tracer, events_from_jsonl
+from repro.pool import PoolJob, Scheduler, build_inventory
+
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# the tiebreak seam
+# ---------------------------------------------------------------------------
+
+def test_tiebreak_inactive_is_identity():
+    items = ["c", "a", "b", "d"]
+    assert not tiebreak.active()
+    out = tiebreak.order(items)
+    assert out == items and out is not items     # fresh list, same order
+    assert tiebreak.order(iter(items)) == items
+
+
+def test_tiebreak_perturb_shuffles_deterministically():
+    items = list(range(12))
+    with tiebreak.perturb(7):
+        assert tiebreak.active()
+        first = tiebreak.order(items)
+    with tiebreak.perturb(7):
+        again = tiebreak.order(items)
+    assert first == again                        # seeded, reproducible
+    assert sorted(first) == items                # a permutation
+    with tiebreak.perturb(8):
+        other = tiebreak.order(items)
+    assert other != first                        # seeds explore orders
+    assert not tiebreak.active()                 # context restored
+
+
+def test_tiebreak_nesting_restores_outer():
+    with tiebreak.perturb(1):
+        outer = tiebreak.current()
+        with tiebreak.perturb(2):
+            assert tiebreak.current() is not outer
+        assert tiebreak.current() is outer
+    assert tiebreak.current() is None
+
+
+# ---------------------------------------------------------------------------
+# tracediff
+# ---------------------------------------------------------------------------
+
+def _mk(tracer_fill):
+    tr = Tracer()
+    tracer_fill(tr)
+    return tr.events()
+
+
+def test_tracediff_identical():
+    def fill(tr):
+        tr.span("engine:a", "decode", 0.0, 1.0, tokens=3)
+        tr.instant("pool:sched", "admit", 2.0, job="x")
+    d = diff_events(_mk(fill), _mk(fill))
+    assert d.identical and d.first() is None
+    assert "identical" in d.format()
+
+
+def test_tracediff_blames_first_divergent_event_and_fields():
+    def a(tr):
+        tr.instant("pool:sched", "admit", 1.0, job="x")
+        tr.instant("pool:sched", "finish", 2.0, job="x")
+    def b(tr):
+        tr.instant("pool:sched", "admit", 1.0, job="y")
+        tr.instant("pool:sched", "finish", 2.0, job="x")
+    d = diff_events(_mk(a), _mk(b))
+    assert not d.identical
+    first = d.first()
+    assert first.track == "pool:sched" and first.index == 0
+    assert first.fields == ("args",)
+    assert "x" in first.format() and "y" in first.format()
+
+
+def test_tracediff_length_and_track_mismatches():
+    def a(tr):
+        tr.instant("t1", "e", 0.0)
+        tr.instant("t1", "f", 1.0)
+        tr.instant("only_a", "g", 0.5)
+    def b(tr):
+        tr.instant("t1", "e", 0.0)
+        tr.instant("only_b", "h", 0.5)
+    d = diff_events(_mk(a), _mk(b))
+    assert d.only_a == ["only_a"] and d.only_b == ["only_b"]
+    delta = next(x for x in d.divergences if x.track == "t1")
+    assert delta.index == 1 and delta.a is not None and delta.b is None
+
+
+def test_tracediff_clock_and_label_byte_drift():
+    def a(tr):
+        tr.span("link:sw->mem", "xfer", 0.0, 1.0, cat="link",
+                label="serve:a", bytes=100.0)
+    def b(tr):
+        tr.span("link:sw->mem", "xfer", 0.0, 1.5, cat="link",
+                label="serve:a", bytes=160.0)
+    d = diff_events(_mk(a), _mk(b))
+    assert d.clock_delta["link:sw->mem"] == pytest.approx(0.5)
+    assert d.label_bytes_delta["serve:a"] == pytest.approx(60.0)
+
+
+def test_tracediff_files_jsonl_roundtrip(tmp_path):
+    def fill(tr):
+        tr.span("engine:a", "prefill", 0.0, 0.5, cat="engine", tokens=8)
+        tr.counter("engine:a", "free_pages", 0.5, 3.0)
+    pa, pb = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    for p in (pa, pb):
+        tr = Tracer()
+        with JsonlSink(p, tr):
+            fill(tr)
+    assert events_from_jsonl(pa) == _mk(fill)
+    assert diff_trace_files(pa, pb).identical
+
+
+# ---------------------------------------------------------------------------
+# racecheck harness semantics
+# ---------------------------------------------------------------------------
+
+def test_racecheck_passes_canonicalized_scenario():
+    def good(tracer):
+        items = {"b": 2.0, "a": 1.0, "c": 3.0}
+        for i, (k, v) in enumerate(sorted(tiebreak.order(items.items()))):
+            tracer.instant("t", k, float(i), v=v)
+        return {"n": len(items)}
+    rep = racecheck(good, seeds=(1, 2, 3), label="good")
+    assert rep.ok and rep.baseline_events == 3
+    assert "OK (bit-identical)" in rep.format()
+    rep.check()                                  # must not raise
+
+
+def test_racecheck_catches_order_dependence_with_blame():
+    def bad(tracer):
+        order = tiebreak.order({"b": 2.0, "a": 1.0, "c": 3.0}.items())
+        for i, (k, v) in enumerate(order):       # no canonical sort!
+            tracer.instant("t", k, float(i), v=v)
+        return {"first": order[0][0]}
+    rep = racecheck(bad, seeds=(1, 2, 3), label="bad")
+    assert not rep.ok and rep.divergent
+    first = rep.divergent[0].trace_diff.first()
+    assert first.track == "t" and first.index == 0
+    assert any("first" in d for d in rep.divergent[0].outcome_diffs)
+    with pytest.raises(RaceDivergence, match="DIVERGED"):
+        racecheck(bad, seeds=(1,), check=True)
+
+
+def test_racecheck_rejects_nested_and_non_mapping():
+    with tiebreak.perturb(1):
+        with pytest.raises(RuntimeError, match="inside"):
+            racecheck(lambda tr: {}, seeds=(1,))
+    with pytest.raises(TypeError, match="Mapping"):
+        racecheck(lambda tr: [1, 2], seeds=(1,))
+
+
+# ---------------------------------------------------------------------------
+# real-estate no-false-positive runs (jax-free paths)
+# ---------------------------------------------------------------------------
+
+def _inventory():
+    return build_inventory(n_pods=4, pod_size=8, hbm_per_accel_gb=192.0,
+                           n_memory_nodes=2, memory_node_gb=1024.0,
+                           interconnect="scalepool")
+
+
+PAR = sim.ParallelismConfig(tp=2, pp=1, dp=3, global_batch_seqs=66)
+
+
+def _sched_scenario(tracer):
+    """DRF queueing, a staggered declared gang, a second user, elastic
+    grow and a finish cascade — the decision paths the seam perturbs."""
+    sched = Scheduler(_inventory(), queueing="drf", tracer=tracer)
+    for i, t in enumerate([0.0, 1.0]):
+        sched.submit(PoolJob(f"g{i}", sim.MEGATRON, PAR, n_steps=10,
+                             submit_t=t, gang="pair", gang_size=2,
+                             user="u"))
+    sched.submit(PoolJob("solo", sim.MEGATRON,
+                         dataclasses.replace(PAR, dp=2), n_steps=5,
+                         submit_t=0.5, user="v"))
+    sched.submit(PoolJob("el", sim.MEGATRON,
+                         dataclasses.replace(PAR, dp=4), n_steps=6,
+                         submit_t=0.5, user="w", elastic=True, min_dp=1))
+    res = sched.run()
+    return {"summary": res.summary(),
+            "trace": list(res.trace),
+            "finish": {n: r.finish_t for n, r in res.records.items()}}
+
+
+def test_racecheck_scheduler_no_false_positive():
+    rep = racecheck(_sched_scenario, seeds=(1, 2, 3, 4), label="sched")
+    assert rep.ok, rep.format()
+    assert rep.baseline_events > 10
+
+
+def _transport_scenario(tracer):
+    """Concurrent transfers fair-sharing one trunk: water-filling
+    re-rates, drain order, and per-flow accounting under the seam."""
+    topo = Topology("rc")
+    for e in ("a", "b", "c"):
+        topo.add_node(e)
+    topo.add_node("sw", "switch")
+    topo.add_node("mem", "memory")
+    for e in ("a", "b", "c"):
+        topo.connect(e, "sw", fb.CXL3, capacity=8 * GB, latency=1e-6)
+    topo.connect("sw", "mem", fb.CXL_CAPACITY, capacity=1 * GB,
+                 latency=1e-6)
+    tx = Transport(topo, tracer=tracer)
+    routes = {e: topo.route(e, "mem") for e in ("a", "b", "c")}
+    done = {}
+    # overlapping, staggered, different sizes: every re-rate has >1
+    # live flow and the finish order interleaves sources
+    for i, (src, nbytes, t0) in enumerate([
+            ("a", 512e6, 0.0), ("b", 256e6, 0.1), ("c", 768e6, 0.2),
+            ("a", 128e6, 0.3), ("b", 512e6, 0.35), ("c", 64e6, 0.4)]):
+        done[f"{src}#{i}"] = tx.transfer_s(routes[src], nbytes, t0,
+                                           label=f"serve:{src}")
+    tx.quiesce()
+    return {"done": done, "stats": tx.stats()}
+
+
+def test_racecheck_transport_no_false_positive():
+    rep = racecheck(_transport_scenario, seeds=(1, 2, 3, 4),
+                    label="transport")
+    assert rep.ok, rep.format()
+
+
+# ---------------------------------------------------------------------------
+# mutation: inject a real order-dependent tie-break, racecheck must
+# catch it and blame the right event
+# ---------------------------------------------------------------------------
+
+def _fifo_scenario(tracer):
+    """Scarce pool + same-timestamp submissions: FIFO admission order
+    decides who runs first, so corrupting it changes the trace."""
+    sched = Scheduler(_inventory(), tracer=tracer)
+    for i in range(6):
+        sched.submit(PoolJob(f"j{i}", sim.MEGATRON, PAR, n_steps=8,
+                             submit_t=0.0))
+    res = sched.run()
+    return {"summary": res.summary(),
+            "finish": {n: r.finish_t for n, r in res.records.items()}}
+
+
+def test_mutation_unordered_admission_is_caught(monkeypatch):
+    """Replace the scheduler's FIFO admission scan with incidental
+    enumeration order (the classic 'iterate the dict instead of the
+    spec'd queue' refactor bug).  Unmutated the scenario is
+    bit-identical under the seam; mutated, racecheck must diverge and
+    blame the first wrong admission on the pool:sched track."""
+    rep = racecheck(_fifo_scenario, seeds=(1, 2), label="pre-mutation")
+    assert rep.ok, rep.format()
+
+    orig = Scheduler._gang_groups
+    monkeypatch.setattr(
+        Scheduler, "_gang_groups",
+        lambda self: tiebreak.order(orig(self)))
+    rep = racecheck(_fifo_scenario, seeds=(1, 2, 3), label="mutated")
+    assert not rep.ok
+    bad = rep.divergent[0]
+    first = bad.trace_diff.first()
+    assert first is not None
+    assert first.track == "pool:sched"
+    # the earliest divergent event is an admission-order artifact: an
+    # admit (or the run/finish cascade of one) naming the wrong job
+    assert first.a.name != first.b.name or first.a.args != first.b.args
+    assert bad.outcome_diffs                     # outcomes moved too
+
+
+def test_mutation_float_accumulation_order_is_caught(monkeypatch):
+    """Drop the canonical name-sort in the DRF dominant-share
+    accumulation: float addition is not associative, so the emitted
+    ``drf_share`` counter value depends on dict insertion order.  The
+    tier-2 reservations are sized so bytes are the dominant resource
+    (the accel dimension is an exact integer ratio in every order) and
+    chosen so the three per-user terms provably sum differently under
+    permutation."""
+    def mutated(self, user):
+        caps = (self.inv.total_accels, self.inv.total_tier2,
+                self.inv.total_tier2_bw)
+        use = [0.0, 0.0, 0.0]
+        for run in tiebreak.order(list(self._running.values())):
+            if run.job.drf_user != user:         # no canonical sort!
+                continue
+            use[0] += run.alloc.n_requested
+            use[1] += run.job.tier2_bytes
+            use[2] += run.job.tier2_bw
+        return max(u / c for u, c in zip(use, caps) if c > 0)
+    monkeypatch.setattr(Scheduler, "_dominant_share", mutated)
+
+    # 8*(100/3 + 200/7 + 500/11) GB ≈ 859 GB per user: dominant over
+    # the 6/32 accel share, within the 2048 GB pool, and the three
+    # addends yield two distinct IEEE sums across their permutations
+    terms = (8 * 100 / 3 * GB, 8 * 200 / 7 * GB, 8 * 500 / 11 * GB)
+
+    def scenario(tracer):
+        sched = Scheduler(_inventory(), queueing="drf", tracer=tracer)
+        for i in range(6):
+            sched.submit(PoolJob(
+                f"j{i}", sim.MEGATRON, dataclasses.replace(PAR, dp=1),
+                n_steps=4 + i, submit_t=0.0, user=f"u{i % 2}",
+                tier2_bytes=terms[i // 2]))
+        res = sched.run()
+        return {"summary": res.summary()}
+
+    rep = racecheck(scenario, seeds=(1, 2, 3, 4), label="drf-mutated")
+    # the mutation must NOT survive: at least one seed's drf_share
+    # counter carries a different ulp of the same "equal" share
+    assert not rep.ok, "non-associative accumulation went undetected"
+    first = rep.divergent[0].trace_diff.first()
+    assert first.track == "pool:sched"
+    assert first.a.name.startswith("drf_share:")

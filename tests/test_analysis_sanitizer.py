@@ -273,6 +273,197 @@ def test_kv_rule_disabled_on_pre_instrumented_trace():
     assert any("kv-conservation disabled" in n for n in rep.notes)
 
 
+# ---------------------------------------------------------------------------
+# scheduler (pool:sched) rules: synthetic streams
+# ---------------------------------------------------------------------------
+
+SCHED = "pool:sched"
+
+
+def _sched_base(ts=0.0):
+    return [_instant(SCHED, "sched_pool", ts, cat="sched", accels=8.0,
+                     tier2_gb=100.0)]
+
+
+def _job(name, submit_t, admit_t, finish_t, gang=""):
+    """A well-formed submit → admit → run → finish lifecycle."""
+    return [
+        _instant(SCHED, "submit", submit_t, cat="sched", job=name),
+        _instant(SCHED, "admit", admit_t, cat="sched", job=name,
+                 gang=gang),
+        _span(SCHED, f"run:{name}", admit_t, finish_t - admit_t,
+              cat="sched", job=name),
+        _instant(SCHED, "finish", finish_t, cat="sched", job=name,
+                 jct_s=finish_t - submit_t),
+    ]
+
+
+def test_sched_clean_lifecycle_passes_and_counts():
+    rep = sanitize_events(_sched_base() + [
+        _counter(SCHED, "free_accels", 0.5, 6.0, cat="sched"),
+        _counter(SCHED, "busy_accels", 0.5, 2.0, cat="sched"),
+        _counter(SCHED, "drf_share:u", 0.5, 0.25, cat="sched"),
+    ] + _job("j0", 0.0, 1.0, 5.0))
+    assert rep.ok, rep.format()
+    assert rep.checks["sched-job-span"] > 0
+    assert rep.checks["sched-accel-conservation"] == 1
+    assert rep.checks["sched-drf-share"] == 1
+
+
+def test_sched_accel_leak_and_conjure_rejected():
+    leak = _only(sanitize_events(_sched_base() + [
+        _counter(SCHED, "free_accels", 1.0, 4.0, cat="sched"),
+        _counter(SCHED, "busy_accels", 1.0, 2.0, cat="sched")]),
+        "sched-accel-conservation")
+    assert "leaked" in leak.message and leak.ts == pytest.approx(1.0)
+    conjured = _only(sanitize_events(_sched_base() + [
+        _counter(SCHED, "free_accels", 1.0, 7.0, cat="sched"),
+        _counter(SCHED, "busy_accels", 1.0, 3.0, cat="sched")]),
+        "sched-accel-conservation")
+    assert "conjured" in conjured.message
+    # no geometry announced → the rule stands down, not guesses
+    assert sanitize_events([
+        _counter(SCHED, "free_accels", 1.0, 4.0, cat="sched"),
+        _counter(SCHED, "busy_accels", 1.0, 2.0, cat="sched")]).ok
+
+
+def test_sched_drf_share_bound():
+    v = _only(sanitize_events(
+        [_counter(SCHED, "drf_share:u", 1.0, 1.25, cat="sched")]),
+        "sched-drf-share")
+    assert "outside [0, 1]" in v.message and v.track == SCHED
+    # stateless: still enforced on a truncated recording
+    assert not sanitize_events(
+        [_counter(SCHED, "drf_share:u", 1.0, -0.5, cat="sched")],
+        truncated=True).ok
+    assert sanitize_events(
+        [_counter(SCHED, "drf_share:u", 1.0, 1.0, cat="sched")]).ok
+
+
+def test_sched_job_span_orderings_rejected():
+    # finish before admit (non-monotone job span)
+    evs = _sched_base() + [
+        _instant(SCHED, "submit", 0.0, cat="sched", job="j"),
+        _instant(SCHED, "admit", 2.0, cat="sched", job="j", gang=""),
+        _instant(SCHED, "finish", 1.0, cat="sched", job="j", jct_s=1.0)]
+    rep = sanitize_events(evs)
+    assert any(v.rule == "sched-job-span" and "before its last admit"
+               in v.message for v in rep.violations), rep.format()
+    # admitted but never submitted (ghost admission)
+    v = _only(sanitize_events(_sched_base() + [
+        _instant(SCHED, "admit", 1.0, cat="sched", job="ghost",
+                 gang="")]), "sched-job-span")
+    assert "never submitted" in v.message and v.ts == pytest.approx(1.0)
+    # run segment while not admitted
+    v = _only(sanitize_events(_sched_base() + [
+        _span(SCHED, "run:j", 1.0, 2.0, cat="sched", job="j")]),
+        "sched-job-span")
+    assert "not admitted" in v.message
+    # double admission with no intervening preempt/finish
+    evs = _sched_base() + [
+        _instant(SCHED, "submit", 0.0, cat="sched", job="j"),
+        _instant(SCHED, "admit", 1.0, cat="sched", job="j", gang=""),
+        _instant(SCHED, "admit", 2.0, cat="sched", job="j", gang="")]
+    _only(sanitize_events(evs), "sched-job-span")
+    # jct_s that disagrees with finish - submit
+    evs = _sched_base() + _job("j", 0.0, 1.0, 5.0)
+    evs[-1] = _instant(SCHED, "finish", 5.0, cat="sched", job="j",
+                       jct_s=3.0)
+    v = _only(sanitize_events(evs), "sched-job-span")
+    assert "jct_s" in v.message
+
+
+def test_sched_preempt_reopens_admission():
+    evs = _sched_base() + [
+        _instant(SCHED, "submit", 0.0, cat="sched", job="j"),
+        _instant(SCHED, "admit", 1.0, cat="sched", job="j", gang=""),
+        _span(SCHED, "run:j", 1.0, 1.0, cat="sched", job="j"),
+        _instant(SCHED, "preempt", 2.0, cat="sched", job="j"),
+        _instant(SCHED, "admit", 3.0, cat="sched", job="j", gang=""),
+        _span(SCHED, "run:j", 3.0, 1.0, cat="sched", job="j"),
+        _instant(SCHED, "finish", 4.0, cat="sched", job="j", jct_s=4.0)]
+    assert sanitize_events(evs).ok
+
+
+def _gang_pair(t_a, t_b, gang_at=None, members=2):
+    evs = (_sched_base()
+           + [_instant(SCHED, "submit", 0.0, cat="sched", job="a"),
+              _instant(SCHED, "submit", 0.0, cat="sched", job="b"),
+              _instant(SCHED, "admit", t_a, cat="sched", job="a",
+                       gang="g"),
+              _instant(SCHED, "admit", t_b, cat="sched", job="b",
+                       gang="g")])
+    if gang_at is not None:
+        evs.append(_instant(SCHED, "gang_admit", gang_at, cat="sched",
+                            gang="g", members=members))
+    return evs
+
+
+def test_sched_gang_atomic():
+    ok = sanitize_events(_gang_pair(1.0, 1.0, gang_at=1.0))
+    assert ok.ok and ok.checks["sched-gang-atomic"] == 1
+    # member admitted in a different round than its gang_admit: the
+    # stale member AND the resulting count shortfall are both named
+    rep = sanitize_events(_gang_pair(1.0, 2.0, gang_at=2.0, members=2))
+    assert not rep.ok
+    assert all(v.rule == "sched-gang-atomic" for v in rep.violations)
+    assert any("split across rounds" in v.message
+               for v in rep.violations)
+    assert rep.violations[0].ts == pytest.approx(2.0)
+    # gang_admit names more members than actually landed
+    v = _only(sanitize_events(_gang_pair(1.0, 1.0, gang_at=1.0,
+                                         members=3)),
+              "sched-gang-atomic")
+    assert "3 member(s) but 2" in v.message
+    # gang-tagged admits never covered by any gang_admit: caught at
+    # end of stream
+    v = _only(sanitize_events(_gang_pair(1.0, 1.0, gang_at=None)),
+              "sched-gang-atomic")
+    assert "split gang" in v.message
+
+
+def test_sched_stateful_rules_skip_truncated_streams():
+    # the same corruptions, but the ring dropped events — only the
+    # stateless drf bound may still fire
+    evs = _gang_pair(1.0, 2.0, gang_at=2.0) + [
+        _counter(SCHED, "free_accels", 3.0, 1.0, cat="sched"),
+        _counter(SCHED, "busy_accels", 3.0, 1.0, cat="sched")]
+    rep = sanitize_events(evs, truncated=True)
+    assert rep.ok
+    assert rep.checks["sched-gang-atomic"] == 0
+    assert rep.checks["sched-accel-conservation"] == 0
+
+
+def test_live_scheduler_run_sanitizes_clean():
+    """A real pool scheduler run — DRF queueing, a declared gang,
+    preemption pressure — must satisfy every scheduler rule, and every
+    rule must actually check something."""
+    import dataclasses as dc
+
+    from repro.core import simulator as sim
+    from repro.pool import PoolJob, Scheduler, build_inventory
+
+    tracer = Tracer()
+    inv = build_inventory(n_pods=4, pod_size=8, hbm_per_accel_gb=192.0,
+                          n_memory_nodes=2, memory_node_gb=1024.0,
+                          interconnect="scalepool")
+    sched = Scheduler(inv, queueing="drf", tracer=tracer)
+    par = sim.ParallelismConfig(tp=2, pp=1, dp=3, global_batch_seqs=66)
+    for i in range(2):
+        sched.submit(PoolJob(f"g{i}", sim.MEGATRON, par, n_steps=10,
+                             submit_t=float(i), gang="pair",
+                             gang_size=2, user="u"))
+    sched.submit(PoolJob("solo", sim.MEGATRON,
+                         dc.replace(par, dp=2), n_steps=5,
+                         submit_t=0.5, user="v"))
+    sched.run()
+    rep = sanitize_tracer(tracer)
+    assert rep.ok, rep.format()
+    for rule in ("sched-gang-atomic", "sched-accel-conservation",
+                 "sched-job-span", "sched-drf-share"):
+        assert rep.checks[rule] > 0, rule
+
+
 def test_revocation_attribution_rejects_unpriced_charge():
     # kv context first so the revoke's page movement is accounted for
     base = _shared_kv(2.0, 0.0, free_b=10.0)

@@ -17,8 +17,9 @@ from repro.core import fabric as fb
 from repro.core.tiering import KVBudget
 from repro.fabric import Topology, Transport
 from repro.models.api import build_model
-from repro.obs import (CAT_KV, CAT_REQUEST, NULL_TRACER, MetricsRegistry,
-                       NullTracer, Tracer, link_report,
+from repro.obs import (CAT_KV, CAT_REQUEST, NULL_TRACER, JsonlSink,
+                       MetricsRegistry, NullTracer, Tracer,
+                       events_from_jsonl, link_report,
                        link_report_from_trace, resolve, tier_report,
                        to_chrome_trace, validate_trace_events,
                        write_chrome_trace)
@@ -339,3 +340,49 @@ def test_transport_metrics_registry_schema():
     assert st["transfers"] == snap["fabric/transfers"]
     assert (st["links"]["a->sw"]["busy_s"]
             == snap["fabric/link/a->sw/busy_s"])
+
+
+# ---------------------------------------------------------------------------
+# JSONL streaming sink
+# ---------------------------------------------------------------------------
+
+def test_jsonl_sink_roundtrips_losslessly(tmp_path):
+    path = str(tmp_path / "stream.jsonl")
+    tracer = Tracer(capacity=4)         # deliberately tiny ring
+    with JsonlSink(path, tracer) as sink:
+        for i in range(16):             # overflows the ring 4x over
+            tracer.span("engine:a", "decode", i * 0.1, 0.05,
+                        tokens=i, exact=1.0 / 3.0)
+        tracer.instant("pool:sched", "admit", 99.0, job="j", gang="")
+    assert sink.written == 17
+    assert tracer.dropped > 0           # the ring DID drop events...
+    evs = events_from_jsonl(path)
+    assert len(evs) == 17               # ...but the stream kept them all
+    assert evs[0].args["exact"] == 1.0 / 3.0    # full float precision
+    assert evs[-1].track == "pool:sched"
+    # the surviving ring tail agrees with the stream tail
+    assert tracer.events() == evs[-4:]
+
+
+def test_jsonl_sink_attach_detach_contract(tmp_path):
+    path = str(tmp_path / "s.jsonl")
+    tracer = Tracer()
+    sink = JsonlSink(path)
+    sink.attach(tracer)
+    with pytest.raises(RuntimeError):
+        sink.attach(tracer)             # double-attach is a bug
+    tracer.instant("t", "a", 0.0)
+    sink.close()
+    tracer.instant("t", "b", 1.0)       # after close: not streamed
+    assert [e.name for e in events_from_jsonl(path)] == ["a"]
+    sink.close()                        # idempotent
+
+
+def test_events_from_jsonl_rejects_malformed_lines(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"ph":"i","cat":"c","track":"t","name":"n",'
+                 '"ts":0.0,"dur":0.0,"args":{}}\n'
+                 '\n'                   # blank lines are skipped
+                 'not json\n')
+    with pytest.raises(ValueError, match="bad.jsonl:3"):
+        events_from_jsonl(str(p))
