@@ -1,0 +1,335 @@
+"""Figure 12 (new scenario family) — disaggregated prefill/decode
+serving over the routed XLink-CXL fabric: does splitting the phases
+across pods buy interference-free decode?
+
+The colocated engine interleaves admissions' long bucketed prefills
+with in-flight requests' decode steps, so a prefill-heavy burst
+stretches every resident request's decode phase.  ``repro.disagg``
+splits one two-pod estate into a prefill tier and a decode tier:
+prefill pods run the same jitted prefill and stream finished KV pages
+over the fabric (direct pod-to-pod XLink, or staged through a tier-2
+memory node — write leg + read leg, two priced transfers); the decode
+pod admits a request as its pages land and decodes without ever
+running a prefill.
+
+Claims checked:
+
+  * p95_2x               — under the same prefill-heavy burst on equal
+    hardware (2 pods either way), the disaggregated decode-phase p95
+    (done - first_token) is at least 2x better than colocated;
+  * tokens_identical     — token streams are bit-identical colocated
+    vs disaggregated-direct vs disaggregated-tier2-staged: the fabric
+    moves WHEN decode may start, never what it computes;
+  * degenerate_identical — a single-pod cluster (route=None) replays
+    the plain ``Engine`` bit-for-bit, tokens AND trace events;
+  * staging_wins         — with the XLink trunk saturated by
+    background flows, tier-2 staging moves KV faster than the direct
+    pod-to-pod path (and direct wins when the trunk is idle — the
+    crossover is real, not a blanket ordering).
+
+Serving event costs are modeled seconds priced at the FULL-SIZE
+architecture (fig7 convention); fabric capacities are scaled to the
+smoke model's page bytes (fig10 convention).
+
+    PYTHONPATH=src python benchmarks/fig12_disagg.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.configs import get_config
+from repro.core import fabric as fb
+from repro.disagg import DisaggCluster, DisaggConfig, PrefillWorker
+from repro.fabric import Topology, Transport
+from repro.models.api import build_model
+from repro.serve import (Engine, EngineConfig, ServeCostModel, burst_trace,
+                         latency_summary, run_multi_trace, run_trace)
+
+ARCH = "qwen1.5-0.5b"
+PAGE = 16
+PROMPT, MAX_NEW = 224, 16   # long prefills, short decodes: prefill-heavy
+SLOTS = 4
+FAST_PAGES_S = 20000.0      # uncontended fabric outruns prefill page production
+SLOW_PAGES_S = 50.0         # staging scenario: handoff genuinely priced
+N_BG = 3                    # background flows saturating the XLink trunk
+
+
+def _cost_model(full_cfg) -> ServeCostModel:
+    return ServeCostModel.from_fabric(2.0 * full_cfg.param_count())
+
+
+def _ecfg() -> EngineConfig:
+    return EngineConfig(max_slots=SLOTS, max_seq=PROMPT + MAX_NEW,
+                        page_size=PAGE)
+
+
+def _topology(bw: float) -> Topology:
+    """Two pods, two disjoint inter-pod paths: the XLink trunk (via
+    ``xsw`` — inserted first, so BFS routes pod-to-pod traffic over
+    it) and the tier-2 staging path (via ``t2sw`` and ``mem:0``)."""
+    lat = fb.tier2_memory_fabric(8).latency()
+    topo = Topology("fig12")
+    topo.add_node("xsw", "switch")
+    topo.add_node("t2sw", "switch")
+    topo.add_node("mem:0", "memory")
+    for pid in (0, 1):
+        topo.add_node(f"pod:{pid}", "pod")
+        topo.connect(f"pod:{pid}", "xsw", fb.UALINK200, capacity=bw,
+                     latency=lat / 8)
+        topo.connect(f"pod:{pid}", "t2sw", fb.CXL3, capacity=bw,
+                     latency=lat / 4)
+    topo.connect("t2sw", "mem:0", fb.CXL_CAPACITY, capacity=2.0 * bw,
+                 latency=lat / 4)
+    return topo
+
+
+def _decode_p95(handles) -> float:
+    """p95 of the decode phase (done - first_token): the interference
+    axis — prefill work inserted mid-decode stretches exactly this."""
+    ds = sorted(h.done_clock - h.first_token_clock for h in handles)
+    return ds[max(0, math.ceil(0.95 * len(ds)) - 1)]
+
+
+def _run_colocated(model, params, cm, trace) -> List:
+    """Equal-hardware baseline: TWO colocated engines (one per pod),
+    burst split round-robin, interleaved on one modeled clock."""
+    engines = [Engine.local(model, _ecfg(), params=params, cost_model=cm,
+                            tenant=f"colo{k}") for k in (0, 1)]
+    split = [trace[0::2], trace[1::2]]
+    res = run_multi_trace(list(zip(engines, split)))
+    out: List = [None] * len(trace)
+    for k in (0, 1):
+        for j, h in enumerate(res[k]):
+            out[k + 2 * j] = h
+    return out
+
+
+def _run_disagg(model, params, cm, trace, *, staging: str,
+                pages_s: float, saturate: bool = False,
+                tracer=None) -> Tuple[List, DisaggCluster, Transport]:
+    """One prefill pod + one decode pod over the two-path fabric."""
+    probe_pb = None
+    pe = Engine.local(model, _ecfg(), params=params, cost_model=cm,
+                      tracer=tracer, tenant="prefill0")
+    de = Engine.local(model, _ecfg(), params=params, cost_model=cm,
+                      tracer=tracer, tenant="decode0")
+    probe_pb = de.kv.page_bytes
+    bw = pages_s * probe_pb
+    topo = _topology(bw)
+    tx = Transport(topo, tracer=tracer)
+    direct = topo.route("pod:0", "pod:1")
+    assert any("xsw" in l.name for l in direct.links), \
+        "fig12 direct route must ride the XLink trunk"
+    if saturate:
+        # pin the trunk: long-lived flows that outlast the whole burst
+        for _ in range(N_BG):
+            tx.begin_transfer(direct, 1e4 * bw, 0.0, label="bg:xlink")
+    kw = {}
+    if staging == "tier2":
+        kw["stage_in"] = topo.route("pod:0", "mem:0")
+        kw["stage_out"] = topo.route("mem:0", "pod:1")
+    cluster = DisaggCluster(
+        [PrefillWorker(pe, name="p0")], [de], transport=tx, route=direct,
+        tenant="kvcache",
+        config=DisaggConfig(staging=staging, min_ready_pages=1), **kw)
+    handles = cluster.run(trace)
+    tx.quiesce()
+    return handles, cluster, tx
+
+
+def _run_degenerate(model, params, cm, trace) -> Tuple[bool, str]:
+    """route=None single-pod cluster vs the plain engine: tokens AND
+    trace events must match bit-for-bit."""
+    from repro.obs import Tracer
+    tr_a, tr_b = Tracer(1 << 16), Tracer(1 << 16)
+    plain = run_trace(Engine.local(model, _ecfg(), params=params,
+                                   cost_model=cm, tracer=tr_a), trace)
+    eng = Engine.local(model, _ecfg(), params=params, cost_model=cm,
+                       tracer=tr_b)
+    idle_worker = PrefillWorker(Engine.local(model, _ecfg(), params=params,
+                                             cost_model=cm, tracer=tr_b))
+    got = DisaggCluster([idle_worker], [eng]).run(trace)
+    toks_ok = [h.tokens for h in plain] == [h.tokens for h in got]
+    key = lambda t: [(e.ph, e.track, e.name, e.ts, e.dur, e.args)
+                     for e in t.events()]
+    ev_a, ev_b = key(tr_a), key(tr_b)
+    events_ok = ev_a == ev_b
+    return (toks_ok and events_ok,
+            f"tokens={'eq' if toks_ok else 'DIFF'};"
+            f"events={len(ev_a)}v{len(ev_b)}"
+            f"{'eq' if events_ok else 'DIFF'}")
+
+
+def _mean_transit(handles) -> float:
+    return sum(h.kv_transit_s for h in handles) / max(1, len(handles))
+
+
+def run(smoke: bool = True, trace_out: str = None,
+        trace_stream: str = None) -> Tuple[List[str], Dict]:
+    t0 = time.time()
+    mcfg = get_config(ARCH, smoke=True)
+    full_cfg = get_config(ARCH, smoke=False)
+    model = build_model(mcfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cm = _cost_model(full_cfg)
+
+    n = 12 if smoke else 24
+    trace = burst_trace(n, prompt_len=PROMPT, max_new_tokens=MAX_NEW,
+                        vocab=mcfg.vocab, seed=0)
+
+    tracer, sink = None, None
+    if trace_out or trace_stream:
+        from repro.obs import Tracer
+        tracer = Tracer(1 << 17)
+        if trace_stream:
+            from repro.obs import JsonlSink
+            sink = JsonlSink(trace_stream, tracer)
+
+    colo = _run_colocated(model, params, cm, trace)
+    direct, cl_direct, tx_direct = _run_disagg(
+        model, params, cm, trace, staging="direct", pages_s=FAST_PAGES_S,
+        tracer=tracer)
+    staged, cl_staged, _ = _run_disagg(
+        model, params, cm, trace, staging="tier2", pages_s=FAST_PAGES_S)
+
+    # staging scenario: scarce trunk, with and without background load
+    sat_n = max(6, n // 2)
+    sat_trace = trace[:sat_n]
+    sat_direct, _, _ = _run_disagg(model, params, cm, sat_trace,
+                                   staging="direct", pages_s=SLOW_PAGES_S,
+                                   saturate=True)
+    sat_staged, _, _ = _run_disagg(model, params, cm, sat_trace,
+                                   staging="tier2", pages_s=SLOW_PAGES_S,
+                                   saturate=True)
+    idle_direct, _, _ = _run_disagg(model, params, cm, sat_trace,
+                                    staging="direct", pages_s=SLOW_PAGES_S)
+    idle_staged, _, _ = _run_disagg(model, params, cm, sat_trace,
+                                    staging="tier2", pages_s=SLOW_PAGES_S)
+
+    degen_ok, degen_detail = _run_degenerate(model, params, cm, trace[:6])
+
+    colo_p95 = _decode_p95(colo)
+    disagg_p95 = _decode_p95(direct)
+    lines = [
+        f"fig12.colocated,0,decode_p95={colo_p95*1e3:.2f}ms;"
+        f"e2e_p95={latency_summary(colo)['p95_s']*1e3:.2f}ms",
+        f"fig12.disagg_direct,0,decode_p95={disagg_p95*1e3:.2f}ms;"
+        f"e2e_p95={latency_summary(direct)['p95_s']*1e3:.2f}ms;"
+        f"handoffs={cl_direct.handoffs};"
+        f"transit_mean={_mean_transit(direct)*1e3:.3f}ms",
+        f"fig12.disagg_tier2,0,"
+        f"decode_p95={_decode_p95(staged)*1e3:.2f}ms;"
+        f"handoffs={cl_staged.handoffs};"
+        f"transit_mean={_mean_transit(staged)*1e3:.3f}ms",
+        f"fig12.staging,0,"
+        f"sat_direct={_mean_transit(sat_direct)*1e3:.2f}ms;"
+        f"sat_tier2={_mean_transit(sat_staged)*1e3:.2f}ms;"
+        f"idle_direct={_mean_transit(idle_direct)*1e3:.2f}ms;"
+        f"idle_tier2={_mean_transit(idle_staged)*1e3:.2f}ms",
+    ]
+
+    toks = lambda hs: [list(h.tokens) for h in hs]
+    tokens_ok = toks(colo) == toks(direct) == toks(staged)
+    staging_ok = (_mean_transit(sat_staged) < _mean_transit(sat_direct)
+                  and _mean_transit(idle_direct)
+                  <= _mean_transit(idle_staged))
+
+    dt_us = (time.time() - t0) * 1e6 / max(1, 7 * n)
+    checks = [
+        ("p95_2x", colo_p95 >= 2.0 * disagg_p95,
+         f"colocated decode p95 {colo_p95*1e3:.2f}ms vs disagg "
+         f"{disagg_p95*1e3:.2f}ms ({colo_p95/max(disagg_p95,1e-12):.1f}x)"),
+        ("tokens_identical", tokens_ok,
+         "identical tokens colocated vs direct vs tier2-staged"),
+        ("degenerate_identical", degen_ok, degen_detail),
+        ("staging_wins", staging_ok,
+         f"saturated trunk: tier2 {_mean_transit(sat_staged)*1e3:.2f}ms < "
+         f"direct {_mean_transit(sat_direct)*1e3:.2f}ms; idle trunk: "
+         f"direct {_mean_transit(idle_direct)*1e3:.2f}ms <= "
+         f"tier2 {_mean_transit(idle_staged)*1e3:.2f}ms"),
+    ]
+    for key, good, detail in checks:
+        lines.append(f"fig12.claim.{key},{dt_us:.1f},"
+                     f"{detail};{'PASS' if good else 'FAIL'}")
+
+    ok = all(good for _, good, _ in checks)
+    summary = {
+        "decode_p95_s": {"colocated": colo_p95, "disagg_direct": disagg_p95,
+                         "disagg_tier2": _decode_p95(staged)},
+        "e2e_p95_s": {"colocated": latency_summary(colo)["p95_s"],
+                      "disagg_direct": latency_summary(direct)["p95_s"]},
+        "kv_transit_mean_s": {
+            "direct": _mean_transit(direct),
+            "tier2": _mean_transit(staged),
+            "saturated_direct": _mean_transit(sat_direct),
+            "saturated_tier2": _mean_transit(sat_staged),
+        },
+        "handoffs": cl_direct.handoffs,
+        "tokens_bit_identical": tokens_ok,
+        "degenerate_bit_identical": degen_ok,
+        "all_claims_pass": ok,
+    }
+    if trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(tracer, trace_out)
+        lines.append(f"fig12.trace,0,events={len(tracer)};out={trace_out}")
+        summary["trace"] = {"path": trace_out, "events": len(tracer),
+                            "dropped": tracer.dropped}
+    if sink is not None:
+        sink.close()
+        lines.append(f"fig12.stream,0,events={sink.written};"
+                     f"out={trace_stream}")
+        summary["trace_stream"] = {"path": trace_stream,
+                                   "events": sink.written}
+    return lines, summary
+
+
+_SCENARIO_CACHE: Dict[str, object] = {}
+
+
+def racecheck_scenario(tracer) -> Dict[str, object]:
+    """A reduced disagg-direct run for the racecheck harness: the
+    router's candidate selection, the decode engine's handoff
+    admission, and the transport's page-flow re-rating must be
+    bit-identical under perturbed tie-break orders.  Model build +
+    params cached across the K+1 runs (read-only); fabric, engines,
+    cluster, and trace are fresh per run."""
+    if not _SCENARIO_CACHE:
+        mcfg = get_config(ARCH, smoke=True)
+        full_cfg = get_config(ARCH, smoke=False)
+        model = build_model(mcfg)
+        _SCENARIO_CACHE.update(
+            mcfg=mcfg, model=model,
+            params=model.init(jax.random.PRNGKey(0)),
+            cm=_cost_model(full_cfg))
+    c = _SCENARIO_CACHE
+    trace = burst_trace(6, prompt_len=PROMPT, max_new_tokens=MAX_NEW,
+                        vocab=c["mcfg"].vocab, seed=0)
+    handles, cluster, tx = _run_disagg(
+        c["model"], c["params"], c["cm"], trace, staging="direct",
+        pages_s=SLOW_PAGES_S, tracer=tracer)
+    return {
+        "tokens": [list(h.tokens) for h in handles],
+        "clocks": [(h.submit_clock, h.first_token_clock, h.done_clock)
+                   for h in handles],
+        "transit": [h.kv_transit_s for h in handles],
+        "handoffs": cluster.handoffs,
+        "transport": tx.stats(),
+    }
+
+
+def main(argv=None) -> int:
+    try:
+        from benchmarks._cli import bench_main
+    except ImportError:        # run as a bare script: benchmarks/ is sys.path[0]
+        from _cli import bench_main
+    return bench_main("fig12", run, argv, scenario=racecheck_scenario)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -49,6 +49,10 @@ Invariants the sanitizer enforces
   leaked or double-freed, arbiter revocations included.
 * **revocation-attribution** — seconds charged to a victim tenant
   never exceed the revocation costs recorded against it.
+* **disagg-handoff** — disaggregated prefill->decode KV streams
+  (``disagg:req*`` tracks): every page is transferred before the
+  request's first decode step uses it, the page set is complete, and
+  per-page payload bytes agree with the handoff span's total.
 
 This module deliberately imports nothing heavyweight (no jax): the
 lint CLI and offline sanitizer must start fast enough to run on every

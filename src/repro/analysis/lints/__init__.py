@@ -83,7 +83,8 @@ __all__ = [
 _ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(\s*([\w\-,\s]+?)\s*\)")
 
 # subsystems that run on the modeled clock: the no-wallclock scope
-MODELED_TIME_DIRS = ("serve", "fabric", "pool", "colo", "obs")
+MODELED_TIME_DIRS = ("serve", "fabric", "pool", "colo", "obs",
+                     "disagg")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -315,7 +316,7 @@ class NoUnorderedIteration(Rule):
     # draining / DRF admission, water-filling / victim selection, and
     # in-flight flow re-rating
     _FILES = ("pool/scheduler.py", "serve/arbiter.py",
-              "fabric/transport.py")
+              "fabric/transport.py", "disagg/router.py")
     _VIEWS = {"items", "values", "keys"}
     # wrappers that make enumeration order canonical (sorted) or
     # deliberately perturbed (the repro.analysis.tiebreak seam)
@@ -383,7 +384,7 @@ class NoFloatEquality(Rule):
 
     # modeled-time subsystems (obs excluded: it never *computes* times,
     # only records them)
-    _DIRS = ("serve", "fabric", "pool", "colo")
+    _DIRS = ("serve", "fabric", "pool", "colo", "disagg")
     # identifier heuristics for "this is a modeled-time value"
     _EXACT = {"t", "ts", "dt", "now", "t0", "t1", "t_req", "t_eff",
               "before", "clock", "horizon", "deadline"}

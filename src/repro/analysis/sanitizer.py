@@ -72,6 +72,15 @@ Rules (one violation names rule, track, and modeled timestamp):
 ``sched-drf-share``
     Every ``drf_share:*`` sample lies in [0, 1] — a dominant share
     above 1 means DRF admitted past a resource's capacity.
+``disagg-handoff``
+    Disaggregated prefill->decode KV handoff (``disagg:req*`` tracks):
+    every page the decode side uses was transferred before use — the
+    ``handoff_use`` instant (fired at the request's first decode step)
+    lands at or after every page's fabric completion time; the page
+    set is complete (as many unique ``handoff_page`` instants as the
+    ``handoff`` span announced) with byte agreement between the span
+    total and the per-page payloads.  A handoff begun but never used
+    is a note, not a violation (the request may have been dropped).
 
 Offline mode reuses the ``link_report_from_trace`` reconstruction
 idiom: thread-name metadata maps (pid, tid) back to tracks, µs back to
@@ -99,7 +108,8 @@ __all__ = [
 RULES = ("finite-clock", "track-monotone", "span-serial",
          "transfer-causality", "link-conservation", "kv-conservation",
          "revocation-attribution", "sched-gang-atomic",
-         "sched-accel-conservation", "sched-job-span", "sched-drf-share")
+         "sched-accel-conservation", "sched-job-span", "sched-drf-share",
+         "disagg-handoff")
 
 _ARBITER_TRACK = "pool:arbiter"
 _SCHED_TRACK = "pool:sched"
@@ -197,6 +207,10 @@ class Sanitizer:
         # revocation attribution (per tenant, cumulative seconds)
         self._revoked_s: Dict[str, float] = {}
         self._charged_s: Dict[str, float] = {}
+        # disagg KV handoff state, per "disagg:req*" track:
+        # [begin (ts, pages, bytes) | None, {page idx: ready_ts},
+        #  page bytes total, used?]
+        self._handoff: Dict[str, List[Any]] = {}
         # pool-scheduler lifecycle state (track "pool:sched")
         self._sched_total: Optional[float] = None   # sched_pool accels
         self._sched_free: Optional[float] = None    # last free_accels
@@ -237,6 +251,7 @@ class Sanitizer:
         if not self.truncated:
             self._feed_kv(ev)
             self._feed_attribution(ev)
+            self._feed_disagg(ev)
         self._feed_sched(ev)
 
     def _check_monotone(self, ev: Event) -> None:
@@ -553,6 +568,65 @@ class Sanitizer:
                        f"landed at {ev.ts:.9f}s "
                        f"({sorted(got)})")
 
+    # ---- disaggregated KV handoff (tracks "disagg:req*") -----------------
+    def _feed_disagg(self, ev: Event) -> None:
+        if not ev.track.startswith("disagg:"):
+            return
+        st = self._handoff.setdefault(ev.track, [None, {}, 0.0, False])
+        if ev.ph == PH_SPAN and ev.name == "handoff":
+            self.checks["disagg-handoff"] += 1
+            if st[0] is not None:
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"second handoff span on one request track — "
+                           f"a request's KV is streamed exactly once")
+                return
+            st[0] = (ev.ts, int(ev.args.get("pages", 0)),
+                     float(ev.args.get("bytes", 0.0)))
+            return
+        if ev.ph != PH_INSTANT:
+            return
+        if ev.name == "handoff_page":
+            # pages precede their stream span (the span's end is the
+            # last page's landing); completeness is checked at use time
+            self.checks["disagg-handoff"] += 1
+            if st[3]:
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"page transferred after the request's first "
+                           f"decode already used the stream")
+                return
+            idx = int(ev.args.get("page", -1))
+            if idx in st[1]:
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"page {idx} transferred twice in one handoff")
+                return
+            st[1][idx] = float(ev.args.get("ready_ts", ev.ts))
+            st[2] += float(ev.args.get("bytes", 0.0))
+        elif ev.name == "handoff_use":
+            self.checks["disagg-handoff"] += 1
+            if st[0] is None:
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"handoff_use with no handoff span — decode "
+                           f"consumed KV nobody streamed")
+                return
+            begin_ts, want_pages, want_bytes = st[0]
+            st[3] = True
+            if len(st[1]) != want_pages:
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"decode started with {len(st[1])} of "
+                           f"{want_pages} announced page(s) transferred")
+            if abs(st[2] - want_bytes) > 0.5 + _REL * abs(want_bytes):
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"per-page payloads total {st[2]:.0f}B but "
+                           f"the handoff span announced "
+                           f"{want_bytes:.0f}B")
+            late = {i: r for i, r in st[1].items()
+                    if r > ev.ts + _tol(ev.ts)}
+            for i in sorted(late):
+                self._fail("disagg-handoff", ev.track, ev.ts,
+                           f"page {i} decoded before its transfer "
+                           f"completed (ready at {late[i]:.9f}s, first "
+                           f"decode at {ev.ts:.9f}s)")
+
     def _feed_attribution(self, ev: Event) -> None:
         if ev.ph != PH_INSTANT or ev.track != _ARBITER_TRACK:
             return
@@ -595,6 +669,14 @@ class Sanitizer:
                        self._gang_admits[gang][0][0],
                        f"gang {gang!r}: gang-tagged admit(s) {members} "
                        f"never covered by a gang_admit — split gang")
+        unused = sorted(t for t, st in self._handoff.items()
+                        if st[0] is not None and not st[3])
+        if unused:
+            self.notes.append(
+                f"{len(unused)} KV handoff(s) streamed but never used "
+                f"by a decode step ({unused[:5]}"
+                f"{'...' if len(unused) > 5 else ''}) — request dropped "
+                f"or recording ended early")
         if self._begun:
             fids = sorted(self._begun, key=str)[:5]
             self.notes.append(

@@ -100,7 +100,11 @@ class Transport:
         self.link_peak_flows: Dict[str, int] = {}
         self.link_stretch_s: Dict[str, float] = {}
         # per-link payload bytes keyed by flow label ("serve:a",
-        # "train:job0", ...) — who occupied the link, not just how much.
+        # "train:job0", "kv:a", ...) — who occupied the link, not just
+        # how much.  Label classes are conventions, not pricing: the
+        # "kv:<tenant>" class marks disaggregated prefill->decode page
+        # streams (repro.disagg) so link occupancy separates handoff
+        # traffic from the same tenant's "serve:" spill traffic.
         # Only labeled flows accrue here; unlabeled traffic keeps the
         # exact legacy accounting and emits byte-identical spans.
         self.link_label_bytes: Dict[str, Dict[str, float]] = {}

@@ -18,6 +18,11 @@ Request-level modes (continuous batching + budgeted KV tiering):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
         --requests 16 --tenants 2 --tier1-pages 12 --tier2-kv-gb 1
 
+    # disaggregated: prefill tier + decode tier, KV streamed over the
+    # routed fabric (direct pod-to-pod or staged through tier-2 memory)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+        --requests 16 --disagg --disagg-staging tier2 --min-ready-pages 1
+
 Legacy fixed-batch mode (pre-engine path, kept for encdec archs):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
@@ -111,6 +116,96 @@ def _engine_mode(args, cfg, model) -> int:
                                         args.trace_out)
     emit_json(out)
     return 0 if stats["failed_oom"] == 0 else 1
+
+
+def _disagg_mode(args, cfg, model) -> int:
+    """--disagg: prefill tier + decode tier on separate pods of one
+    routed fabric, KV pages streamed between them (repro.disagg)."""
+    from repro.core import fabric as fb
+    from repro.disagg import DisaggCluster, DisaggConfig, PrefillWorker
+    from repro.fabric import Topology, Transport
+    from repro.serve import (Engine, EngineConfig, latency_summary,
+                             load_trace, synthetic_trace)
+
+    ecfg = EngineConfig(max_slots=args.slots, max_seq=args.max_seq,
+                        page_size=args.page_size)
+    tracer = Tracer(args.trace_capacity) if args.trace_out else None
+    budget = None
+    if args.tier1_pages or args.tier2_kv_gb:
+        budget = KVBudget(
+            tier1_pages=args.tier1_pages or None,
+            tier2_bytes=args.tier2_kv_gb * 1e9,
+            page_size=args.page_size)
+
+    params = model.init(jax.random.PRNGKey(0))
+    n_pre, n_dec = args.prefill_pods, args.decode_pods
+    workers = [PrefillWorker(Engine.local(model, ecfg, params=params,
+                                          tracer=tracer), name=f"p{i}")
+               for i in range(n_pre)]
+    dengines = [Engine.local(model, ecfg, params=params, budget=budget,
+                             tracer=tracer, tenant=f"d{k}")
+                for k in range(n_dec)]
+
+    # a two-tier estate graph: every pod hangs off one leaf switch, the
+    # staging memory node too; capacities default to ~50 page-transfers
+    # per modeled second so handoffs are visible but not dominant
+    pb = dengines[0].kv.page_bytes
+    bw = args.kv_gbps * 1e9 if args.kv_gbps > 0 else 50.0 * pb
+    lat = fb.tier2_memory_fabric(8).latency()
+    topo = Topology("disagg-cli")
+    topo.add_node("leaf", "switch")
+    topo.add_node("mem:0", "memory")
+    topo.connect("mem:0", "leaf", fb.CXL_CAPACITY, capacity=2.0 * bw,
+                 latency=lat / 4)
+    for i in range(n_pre + n_dec):
+        topo.add_node(f"pod:{i}", "pod")
+        topo.connect(f"pod:{i}", "leaf", fb.CXL3, capacity=bw,
+                     latency=lat / 4)
+    tx = Transport(topo, tracer=tracer)
+    kw = dict(route=topo.route("pod:0", f"pod:{n_pre}"))
+    if args.disagg_staging == "tier2":
+        kw["stage_in"] = topo.route("pod:0", "mem:0")
+        kw["stage_out"] = topo.route("mem:0", f"pod:{n_pre}")
+    cluster = DisaggCluster(
+        workers, dengines, transport=tx, tenant="cli",
+        config=DisaggConfig(
+            staging=args.disagg_staging,
+            min_ready_pages=args.min_ready_pages or None,
+            max_transit_s=args.max_transit_s or None), **kw)
+
+    if args.trace:
+        trace = load_trace(args.trace, vocab=cfg.vocab)
+    else:
+        trace = synthetic_trace(
+            args.requests, mean_interarrival_s=args.interarrival,
+            prompt_lens=tuple(int(x) for x in args.prompt_lens.split(",")),
+            max_new_tokens=args.max_new, vocab=cfg.vocab, seed=args.seed)
+
+    t0 = time.time()
+    handles = cluster.run(trace)
+    wall = time.time() - t0
+    failed = sum(e.stats()["failed_oom"] for e in dengines)
+    transits = sorted(h.kv_transit_s for h in handles)
+    out = {
+        "arch": cfg.name, "mode": "disagg",
+        "staging": args.disagg_staging,
+        "prefill_pods": n_pre, "decode_pods": n_dec,
+        "requests": len(handles),
+        "handoffs": cluster.handoffs, "colocated": cluster.colocated,
+        "latency": latency_summary(handles),
+        "kv_transit_s": {
+            "mean": sum(transits) / max(1, len(transits)),
+            "max": transits[-1] if transits else 0.0,
+        },
+        "wall_s": round(wall, 2),
+        "sample_tokens": handles[0].tokens[:8] if handles else [],
+    }
+    if tracer is not None:
+        out["trace_out"] = _flush_trace(
+            tracer, [tx] + [e.transport for e in dengines]
+            + [w.engine.transport for w in workers], args.trace_out)
+    emit_json(out)
+    return 0 if failed == 0 else 1
 
 
 def _multitenant_mode(args, cfg, model, ecfg, tracer=None) -> int:
@@ -260,6 +355,25 @@ def main(argv=None):
                    help="N>1: N tenant engines over ONE shared page pool "
                         "(PoolArbiter fair shares), traffic split "
                         "round-robin")
+    p.add_argument("--disagg", action="store_true",
+                   help="disaggregated serving: prefill tier + decode "
+                        "tier on separate pods, KV pages streamed over "
+                        "the routed fabric (repro.disagg)")
+    p.add_argument("--disagg-staging", default="direct",
+                   choices=["direct", "tier2"],
+                   help="handoff path: direct pod-to-pod, or staged "
+                        "through a tier-2 memory node (two priced legs)")
+    p.add_argument("--prefill-pods", type=int, default=1)
+    p.add_argument("--decode-pods", type=int, default=1)
+    p.add_argument("--min-ready-pages", type=int, default=0,
+                   help="admit a handed-off request once this many KV "
+                        "pages landed (0 = wait for all)")
+    p.add_argument("--max-transit-s", type=float, default=0.0,
+                   help="route a request colocated when its predicted "
+                        "KV transit exceeds this (0 = never)")
+    p.add_argument("--kv-gbps", type=float, default=0.0,
+                   help="fabric pod-uplink capacity for KV handoffs "
+                        "(0 = auto-scale to ~50 pages/s)")
     p.add_argument("--pool", default="none",
                    choices=["none", "scalepool", "baseline"])
     p.add_argument("--pool-accels", type=int, default=4)
@@ -286,6 +400,8 @@ def main(argv=None):
                  f"use the fixed-batch mode (--batch/--prompt/"
                  f"--generate) instead")
             return 2
+        if args.disagg:
+            return _disagg_mode(args, cfg, model)
         return _engine_mode(args, cfg, model)
     return _legacy_batch_mode(args, cfg, model)
 

@@ -38,14 +38,16 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
 from repro.obs.trace import (CAT_ARBITER, CAT_ENGINE, CAT_FABRIC, CAT_KV,
                              CAT_LINK, CAT_REQUEST, CAT_SCHED, NULL_TRACER,
                              Event, JsonlSink, NullTracer, Tracer,
-                             events_from_jsonl, resolve)
+                             events_from_jsonl, resolve,
+                             rotated_jsonl_paths)
 
 __all__ = [
     "CAT_ARBITER", "CAT_ENGINE", "CAT_FABRIC", "CAT_KV", "CAT_LINK",
     "CAT_REQUEST", "CAT_SCHED", "Counter", "Event", "Gauge", "Histogram",
     "JsonlSink", "MetricsRegistry", "NULL_TRACER", "NullTracer", "Tracer",
     "adapt", "events_from_jsonl", "format_link_report", "link_report",
-    "link_report_from_trace", "link_tier", "resolve", "tier_report",
+    "link_report_from_trace", "link_tier", "resolve",
+    "rotated_jsonl_paths", "tier_report",
     "to_chrome_trace", "validate_trace_events", "write_chrome_trace",
     "write_json",
 ]

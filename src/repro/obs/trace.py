@@ -39,6 +39,7 @@ prefix before the first ``":"``.
 from __future__ import annotations
 
 import json
+import os
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 # Chrome trace_event phase tags (the subset the exporter emits)
@@ -239,15 +240,43 @@ class JsonlSink:
     so the sanitizer and ``analysis.tracediff`` consume streamed logs
     and ring exports interchangeably.  Use as a context manager or call
     ``close()``; the hook detaches on close.
+
+    Rotation: with ``max_bytes`` set, the sink switches to a fresh
+    sequential segment (``path``, ``path.1``, ``path.2``, ...) before a
+    write would push the current one past the cap — segments are never
+    renamed, so the numeric suffix *is* the chronological order and an
+    in-flight reader never sees a file change identity under it.  A
+    single line larger than ``max_bytes`` still lands (in a segment of
+    its own) — rotation bounds segment size, it never drops an event.
+    ``max_files`` is a retention cap: once exceeded, the *oldest* live
+    segment is deleted, making the sink a coarse-grained disk-bounded
+    ring (``events_from_jsonl`` on the surviving set is then a
+    truncated recording — pass the sanitizer ``truncated=True``).
     """
 
-    def __init__(self, path: str, tracer: Optional["Tracer"] = None):
+    def __init__(self, path: str, tracer: Optional["Tracer"] = None, *,
+                 max_bytes: Optional[int] = None,
+                 max_files: Optional[int] = None):
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
+        if max_files is not None and max_files < 1:
+            raise ValueError(f"max_files must be >= 1, got {max_files}")
         self.path = path
+        self.max_bytes = max_bytes
+        self.max_files = max_files
+        self._seq = 0
+        self._live: List[str] = [path]
+        self._bytes = 0
         self._f = open(path, "w")
         self.written = 0
         self._tracer: Optional[Tracer] = None
         if tracer is not None:
             self.attach(tracer)
+
+    @property
+    def paths(self) -> List[str]:
+        """Live segments in chronological (write) order."""
+        return list(self._live)
 
     def attach(self, tracer: "Tracer") -> "JsonlSink":
         if self._tracer is not None:
@@ -257,12 +286,28 @@ class JsonlSink:
         return self
 
     def _on_event(self, ev: Event) -> None:
-        self._f.write(json.dumps(
+        line = json.dumps(
             {"ph": ev.ph, "cat": ev.cat, "track": ev.track,
              "name": ev.name, "ts": ev.ts, "dur": ev.dur,
              "args": ev.args},
-            separators=(",", ":"), sort_keys=True) + "\n")
+            separators=(",", ":"), sort_keys=True) + "\n"
+        if self.max_bytes is not None and self._bytes > 0 \
+                and self._bytes + len(line) > self.max_bytes:
+            self._rotate()
+        self._f.write(line)
+        self._bytes += len(line)
         self.written += 1
+
+    def _rotate(self) -> None:
+        self._f.close()
+        self._seq += 1
+        nxt = f"{self.path}.{self._seq}"
+        self._f = open(nxt, "w")
+        self._bytes = 0
+        self._live.append(nxt)
+        if self.max_files is not None:
+            while len(self._live) > self.max_files:
+                os.remove(self._live.pop(0))
 
     def close(self) -> None:
         if self._tracer is not None:
@@ -278,23 +323,46 @@ class JsonlSink:
         self.close()
 
 
+def rotated_jsonl_paths(path: str) -> List[str]:
+    """The on-disk segment set a (possibly rotated) ``JsonlSink`` left
+    behind, in chronological order: ``path`` (if it survived retention)
+    then ``path.1``, ``path.2``, ... by numeric suffix.  Gaps are fine
+    — ``max_files`` retention deletes from the oldest end."""
+    base = os.path.basename(path)
+    d = os.path.dirname(path) or "."
+    found: List[Tuple[int, str]] = []
+    if os.path.exists(path):
+        found.append((0, path))
+    if os.path.isdir(d):
+        for fn in os.listdir(d):
+            suffix = fn[len(base) + 1:]
+            if fn.startswith(base + ".") and suffix.isdigit():
+                found.append((int(suffix), os.path.join(d, fn)))
+    return [p for _, p in sorted(found)]
+
+
 def events_from_jsonl(path: str) -> List[Event]:
-    """Rebuild ``Event`` objects from a ``JsonlSink`` stream (skips
-    blank lines; raises with the line number on a malformed one)."""
+    """Rebuild ``Event`` objects from a ``JsonlSink`` stream — a single
+    file or a rotated segment set (``path``, ``path.1``, ...), read in
+    chronological order.  Skips blank lines; raises with file and line
+    number on a malformed one."""
+    paths = rotated_jsonl_paths(path) or [path]   # let open() raise
     out: List[Event] = []
-    with open(path) as f:
-        for lineno, line in enumerate(f, start=1):
-            line = line.strip()
-            if not line:
-                continue
-            try:
-                d = json.loads(line)
-                out.append(Event(d["ph"], d["cat"], d["track"], d["name"],
-                                 d["ts"], d.get("dur", 0.0),
-                                 d.get("args") or {}))
-            except (ValueError, KeyError, TypeError) as e:
-                raise ValueError(
-                    f"{path}:{lineno}: bad trace event line: {e}") from e
+    for p in paths:
+        with open(p) as f:
+            for lineno, line in enumerate(f, start=1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    d = json.loads(line)
+                    out.append(Event(d["ph"], d["cat"], d["track"],
+                                     d["name"], d["ts"],
+                                     d.get("dur", 0.0),
+                                     d.get("args") or {}))
+                except (ValueError, KeyError, TypeError) as e:
+                    raise ValueError(
+                        f"{p}:{lineno}: bad trace event line: {e}") from e
     return out
 
 

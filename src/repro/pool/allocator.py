@@ -105,8 +105,17 @@ class JobRequest:
     # stays a single reservation (no per-tenant carve-up at the
     # allocator), and ``repro.serve.PoolArbiter`` divides the hot pages
     # max-min fairly at runtime while ``lease.kv_share`` hands each
-    # tenant its static slice of the cold-store bytes.
+    # tenant its demand-weighted slice of the cold-store bytes.
     tenants: Tuple[str, ...] = ()
+    # disaggregated serving: the tier this member of a two-tier gang
+    # plays (e.g. "prefill" / "decode").  Pure metadata at the
+    # allocator; ``repro.disagg`` binds roles to engine modes.
+    role: str = ""
+    # live jobs this job will exchange KV handoffs with: under
+    # ``policy="contention"`` the placement ALSO scores (and registers)
+    # the gateway->peer-gateway handoff route, so the prefill->decode
+    # page stream gets a low-overlap path and later jobs avoid it
+    peers: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.n_accels <= 0:
@@ -121,6 +130,8 @@ class JobRequest:
                 f"reservation ({self.kv_bytes} vs {self.tier2_bytes})")
         object.__setattr__(self, "tenants",
                            tuple(str(t) for t in self.tenants))
+        object.__setattr__(self, "peers",
+                           tuple(str(p) for p in self.peers))
         if len(set(self.tenants)) != len(self.tenants):
             raise ValueError(f"{self.name}: duplicate tenant names "
                              f"{self.tenants}")
@@ -151,6 +162,8 @@ class Allocation:
     tier2_bw_requested: float = 0.0
     # serving tenants that share this allocation's kv_bytes as one pool
     tenants: Tuple[str, ...] = ()
+    # gang role this member plays (disaggregated prefill/decode tiers)
+    role: str = ""
 
     @property
     def n_granted(self) -> int:
@@ -290,6 +303,41 @@ class Allocator:
             self.live[alloc.job] = alloc
         return alloc
 
+    def allocate_gang(self, reqs) -> Optional[List[Allocation]]:
+        """Two-tier (or N-tier) gang placement: grant every member of
+        ``reqs`` in order or none of them (snapshot/rollback).  Each
+        member after the first is wired as a handoff peer of all the
+        earlier members, so under ``policy="contention"`` the later
+        tiers' placement scores the prefill->decode handoff route
+        against live traffic — and registers it, keeping later jobs
+        off the page stream's links."""
+        names = [r.name for r in reqs]
+        if len(set(names)) != len(names):
+            raise AllocationError(f"duplicate gang member names {names}")
+        snap = self.snapshot()
+        out: List[Allocation] = []
+        for i, req in enumerate(reqs):
+            wired = dataclasses.replace(
+                req, peers=tuple(dict.fromkeys(req.peers + tuple(names[:i]))))
+            alloc = self.allocate(wired)
+            if alloc is None:
+                self.restore(snap)
+                return None
+            out.append(alloc)
+        return out
+
+    def handoff_route(self, a: Allocation, b: Allocation):
+        """The estate route the ``a -> b`` KV handoff stream rides
+        (gateway pod to gateway pod), or None when the tiers share a
+        gateway pod (the degenerate zero-cost handoff) or the
+        allocator has no routed estate graph."""
+        if self.topo is None:
+            return None
+        gw_a, gw_b = min(a.pod_ids), min(b.pod_ids)
+        if gw_a == gw_b:
+            return None
+        return self.topo.route(f"pod:{gw_a}", f"pod:{gw_b}")
+
     def release(self, job: str) -> None:
         alloc = self.live.pop(job, None)
         if alloc is None:
@@ -325,6 +373,14 @@ class Allocator:
 
     # ---- scalepool: composable, hop-minimizing ---------------------------
     def _allocate_scalepool(self, req: JobRequest) -> Optional[Allocation]:
+        for peer in req.peers:
+            if peer not in self.live:
+                raise AllocationError(
+                    f"{req.name}: handoff peer {peer!r} holds no live "
+                    f"allocation — allocate gang members in order "
+                    f"(allocate_gang wires peers automatically)")
+        peer_pods = tuple(sorted(min(self.live[p].pod_ids)
+                                 for p in req.peers))
         tier2 = self._reserve_pool(self._free_t2, req.tier2_bytes)
         if tier2 is None:
             return None
@@ -333,7 +389,8 @@ class Allocator:
             return None
         mem_ids = tuple(sorted(set(tier2) | set(tier2_bw)))
         if self.policy == "contention":
-            pods = self._pick_pods_contention(req.n_accels, mem_ids)
+            pods = self._pick_pods_contention(req.n_accels, mem_ids,
+                                              peer_pods)
         else:
             pods = self._pick_pods_min_hops(req.n_accels)
         if pods is None:
@@ -359,12 +416,12 @@ class Allocator:
             self._job_links[req.name] = link_plan
         if self.topo is not None:
             self._job_route_links[req.name] = \
-                self._route_link_names(pods, mem_ids)
+                self._route_link_names(pods, mem_ids, peer_pods)
         return Allocation(req.name, accels, tier2, req.n_accels,
                           whole_pods=False, tier2_requested=req.tier2_bytes,
                           kv_bytes=req.kv_bytes, tier2_bw=tier2_bw,
                           tier2_bw_requested=req.tier2_bw,
-                          tenants=req.tenants)
+                          tenants=req.tenants, role=req.role)
 
     def _plan_link_bw(self, gateway_pod: int, tier2_bw: Dict[int, float]
                       ) -> Optional[List[Tuple[str, float]]]:
@@ -410,12 +467,16 @@ class Allocator:
 
     # ---- contention: hop-minimizing, overlap-avoiding --------------------
     def _route_link_names(self, pods: List[int],
-                          mem_ids: Tuple[int, ...]) -> Tuple[str, ...]:
+                          mem_ids: Tuple[int, ...],
+                          peer_pods: Tuple[int, ...] = ()
+                          ) -> Tuple[str, ...]:
         """Predicted estate links a placement's collective + offload
         traffic will occupy: gateway (lowest pod) to every other pod of
-        the gang, and gateway to every reserved tier-2 node — the same
+        the gang, gateway to every reserved tier-2 node — the same
         routes ``repro.colo.job_routes`` pins at run time, widened to
-        the whole gang."""
+        the whole gang — and, for a gang member with handoff peers,
+        gateway to every peer gateway (the prefill->decode KV stream's
+        route, scored and registered like any other traffic)."""
         if self.topo is None:
             return ()
         gw = min(pods)
@@ -429,9 +490,16 @@ class Allocator:
             for link in self.topo.route(f"pod:{gw}",
                                         f"mem:{node_id}").links:
                 names.add(link.name)
+        for peer_gw in peer_pods:
+            if peer_gw == gw:
+                continue            # colocated peer: degenerate handoff
+            for link in self.topo.route(f"pod:{gw}",
+                                        f"pod:{peer_gw}").links:
+                names.add(link.name)
         return tuple(sorted(names))
 
-    def _pick_pods_contention(self, n: int, mem_ids: Tuple[int, ...]
+    def _pick_pods_contention(self, n: int, mem_ids: Tuple[int, ...],
+                              peer_pods: Tuple[int, ...] = ()
                               ) -> Optional[List[int]]:
         """Hop-minimizing placement that breaks ties by predicted link
         overlap with already-placed jobs' routes: same candidate tiers
@@ -439,7 +507,10 @@ class Allocator:
         fabric — hops stay the primary key), but within a tier the
         candidate sharing the fewest links with live jobs wins.  With
         no live jobs every overlap is zero and the choice reduces
-        exactly to the min-hops pick."""
+        exactly to the min-hops pick.  ``peer_pods`` (handoff peers'
+        gateway pods) widen the scored route set with the KV-handoff
+        legs, so a decode tier lands where its page stream from the
+        prefill tier crosses the fewest already-busy links."""
         free = {pid: len(v) for pid, v in self._free.items() if len(v)}
         if sum(free.values()) < n:
             return None
@@ -448,7 +519,8 @@ class Allocator:
             busy.update(links)
 
         def overlap(pods: List[int]) -> int:
-            return sum(1 for name in self._route_link_names(pods, mem_ids)
+            return sum(1 for name in self._route_link_names(pods, mem_ids,
+                                                            peer_pods)
                        if name in busy)
 
         # 1. single pod: (overlap, tightest fit, id) — legacy order when

@@ -20,6 +20,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 
+from repro.analysis import tiebreak
 from repro.ckpt.elastic import resize_plan
 from repro.core.tiering import KVBudget, TieringPolicy
 from repro.pool.allocator import (Allocation, AllocationError, Allocator,
@@ -73,6 +74,12 @@ class Lease:
         """Serving tenants sharing this lease's KV grant as one pool."""
         return self.allocation.tenants
 
+    @property
+    def role(self) -> str:
+        """Gang role this sub-lease plays (disaggregated serving tiers,
+        e.g. ``"prefill"`` / ``"decode"``); empty for a plain lease."""
+        return self.allocation.role
+
     # ---- runtime binding -------------------------------------------------
     def kv_budget(self, *, page_size: int = 64) -> Optional[KVBudget]:
         """The lease's KV grant as an engine-consumable ``KVBudget``:
@@ -83,13 +90,68 @@ class Lease:
         return KVBudget(tier1_pages=None, tier2_bytes=self.kv_bytes,
                         page_size=page_size)
 
-    def kv_share(self, tenant: str, *, page_size: int = 64) -> KVBudget:
+    def kv_shares(self, demands: Optional[Dict[str, float]] = None
+                  ) -> Dict[str, float]:
+        """Demand-weighted split of the shared cold-store grant: max-min
+        water-filling over per-tenant byte demands, mirroring the hot
+        page-share logic in ``repro.serve.PoolArbiter._shares``.  A
+        tenant demanding no more than the even split is *saturated* —
+        it gets exactly its demand and donates the surplus to heavier
+        demanders (the elasticity staging-heavy disagg traffic needs);
+        bytes left after every demand is met are returned to all
+        tenants as an equal headroom bonus, so the shares always sum to
+        ``kv_bytes`` and a quiet tenant keeps spill headroom.  With no
+        demands (``None`` or all zero) every tenant gets exactly
+        ``kv_bytes / N`` — the legacy static split.
+
+        Sharing incentive (pinned by test): a tenant demanding at least
+        the even split never receives less than ``kv_bytes / N``."""
+        if not self.tenants:
+            raise ValueError(
+                f"lease {self.job!r} was not taken with tenants= — "
+                f"use kv_budget() for single-tenant serving")
+        demands = demands or {}
+        unknown = sorted(set(demands) - set(self.tenants))
+        if unknown:
+            raise KeyError(
+                f"{unknown[0]!r} is not a tenant of lease {self.job!r} "
+                f"(tenants: {self.tenants})")
+        shares = {t: 0.0 for t in self.tenants}
+        pending = {t: max(0.0, float(demands.get(t, 0.0)))
+                   for t in self.tenants}
+        remaining = self.kv_bytes
+        while pending:
+            level = remaining / len(pending)
+            # selection is a demand threshold — order() only permutes
+            # the scan (racecheck seam); the filtered set is order-free
+            sat = [t for t, d in tiebreak.order(sorted(pending.items()))
+                   if d <= level]
+            if not sat:
+                # everyone still pending wants more than the even
+                # split: level each, nothing left to donate
+                for t in sorted(pending):
+                    shares[t] += level
+                remaining = 0.0
+                break
+            for t in sorted(sat):
+                shares[t] += pending.pop(t)
+                remaining -= shares[t]
+        if remaining > 0.0 and self.kv_bytes > 0:
+            bonus = remaining / len(self.tenants)
+            for t in shares:
+                shares[t] += bonus
+        return shares
+
+    def kv_share(self, tenant: str, *, page_size: int = 64,
+                 demands: Optional[Dict[str, float]] = None) -> KVBudget:
         """One tenant's slice of the shared KV grant.  The cold-store
-        *bytes* are split statically (1/N of ``kv_bytes`` — a tenant's
-        spill headroom is its own, so a hog cannot exhaust a neighbor's
-        tier-2 budget); the hot tier-1 *pages* stay one shared pool,
-        divided dynamically by ``repro.serve.PoolArbiter`` as a
-        revocable max-min fair share."""
+        *bytes* are split by demand-weighted water-filling over
+        ``demands`` (see ``kv_shares``; omitted demands mean the legacy
+        equal split — a tenant's spill headroom is its own, so a hog
+        cannot exhaust a neighbor's tier-2 budget); the hot tier-1
+        *pages* stay one shared pool, divided dynamically by
+        ``repro.serve.PoolArbiter`` as a revocable max-min fair
+        share."""
         if not self.tenants:
             raise ValueError(
                 f"lease {self.job!r} was not taken with tenants= — "
@@ -98,8 +160,13 @@ class Lease:
             raise KeyError(
                 f"{tenant!r} is not a tenant of lease {self.job!r} "
                 f"(tenants: {self.tenants})")
-        return KVBudget(tier1_pages=None,
-                        tier2_bytes=self.kv_bytes / len(self.tenants),
+        if not demands:
+            # the exact legacy float: bit-compatible with every
+            # existing from_lease construction
+            share = self.kv_bytes / len(self.tenants)
+        else:
+            share = self.kv_shares(demands)[tenant]
+        return KVBudget(tier1_pages=None, tier2_bytes=share,
                         page_size=page_size)
 
     def tiering_policy(self) -> TieringPolicy:
@@ -171,6 +238,61 @@ class ResourcePool:
         lease = Lease(allocation, model_parallel=model_parallel)
         self.leases[name] = lease
         return lease
+
+    def lease_gang(self, name: str, roles: Dict[str, Dict],
+                   *, model_parallel: int = 1) -> Dict[str, Lease]:
+        """Role-tagged sub-leases off ONE gang grant (the disaggregated
+        prefill/decode estate shape): ``roles`` maps a role name to its
+        lease kwargs (``n_accels`` required; ``tier2_gb``/``kv_gb``/
+        ``tier2_gbps``/``tenants`` optional).  Members are placed
+        all-or-nothing in declaration order; each later member's
+        placement scores the handoff route back to the earlier tiers
+        (``policy="contention"``).  Each sub-lease is a full ``Lease``
+        named ``<name>/<role>`` — releasable individually or together
+        via ``release_gang``."""
+        reqs = []
+        for role, kw in roles.items():
+            extra = sorted(set(kw) - {"n_accels", "tier2_gb", "kv_gb",
+                                      "tier2_gbps", "tenants"})
+            if extra:
+                raise TypeError(f"{name}/{role}: unknown lease kwargs "
+                                f"{extra}")
+            reqs.append(JobRequest(
+                f"{name}/{role}", kw["n_accels"],
+                kw.get("tier2_gb", 0.0) * GB,
+                kv_bytes=kw.get("kv_gb", 0.0) * GB,
+                tier2_bw=kw.get("tier2_gbps", 0.0) * GB,
+                tenants=tuple(kw.get("tenants", ())), role=role))
+        allocs = self.alloc.allocate_gang(reqs)
+        if allocs is None:
+            m = self.alloc.metrics()
+            raise AllocationError(
+                f"pool cannot satisfy gang {name!r} "
+                f"({', '.join(r.name for r in reqs)}); free: "
+                f"{self.alloc.free_accels()} accels, "
+                f"{self.alloc.free_tier2() / GB:.0f}GB "
+                f"(utilization {m.utilization:.0%})")
+        out: Dict[str, Lease] = {}
+        for alloc in allocs:
+            lease = Lease(alloc, model_parallel=model_parallel)
+            self.leases[alloc.job] = lease
+            out[alloc.role] = lease
+        return out
+
+    def release_gang(self, name: str) -> None:
+        """Release every sub-lease of gang ``name`` (prefix match on
+        ``<name>/``)."""
+        members = [job for job in sorted(self.leases)
+                   if job.startswith(f"{name}/")]
+        if not members:
+            raise AllocationError(f"no gang {name!r} sub-leases held")
+        for job in members:
+            self.release(job)
+
+    def handoff_route(self, a: Lease, b: Lease):
+        """The estate route an ``a -> b`` KV handoff stream rides, or
+        None when the tiers share a gateway pod (degenerate handoff)."""
+        return self.alloc.handoff_route(a.allocation, b.allocation)
 
     def release(self, lease_or_name) -> None:
         name = (lease_or_name if isinstance(lease_or_name, str)

@@ -34,7 +34,7 @@ from repro.core.tiering import KVBudget, KVBudgetExceeded, PagedKV
 from repro.serve.api import (EngineConfig, Request, RequestHandle,
                              RequestStatus, ServeCostModel)
 from repro.serve.arbiter import PoolArbiter
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, slice_page
 from repro.serve.trace import (burst_trace, latency_summary, load_trace,
                                run_multi_trace, run_trace, synthetic_trace)
 
@@ -42,5 +42,5 @@ __all__ = [
     "Engine", "EngineConfig", "KVBudget", "KVBudgetExceeded", "PagedKV",
     "PoolArbiter", "Request", "RequestHandle", "RequestStatus",
     "ServeCostModel", "burst_trace", "latency_summary", "load_trace",
-    "run_multi_trace", "run_trace", "synthetic_trace",
+    "run_multi_trace", "run_trace", "slice_page", "synthetic_trace",
 ]

@@ -68,6 +68,10 @@ class RequestHandle:
                                        # rode the capacity fabric
     recomputes: int = 0                # KV dropped + re-prefilled (no
                                        # tier-2 headroom to spill into)
+    kv_transit_s: float = 0.0          # modeled seconds this request's KV
+                                       # pages spent in flight on the fabric
+                                       # (disaggregated prefill->decode
+                                       # handoff; 0.0 when colocated)
 
     @property
     def done(self) -> bool:

@@ -124,6 +124,20 @@ def evict_pages(pool, kv, st, logicals, engine, t) -> float:
     return cost
 
 
+def slice_page(cache, i: int, page_size: int):
+    """Payload of logical page ``i`` of a dense ``(layers, 1, seq, ...)``
+    prefill cache: a tree of ``(layers, page_size, ...)`` leaves — the
+    same per-page shape ``PagedKV.evict``/``fetch`` payloads use, so a
+    page sliced here can be spilled to tier-2, streamed over the fabric
+    (``repro.disagg``) or scattered with ``Engine._write_page``
+    interchangeably."""
+    def cut(cache_leaf):
+        lay = cache_leaf.shape[0]
+        tail = tuple(cache_leaf.shape[3:])
+        return cache_leaf[:, 0].reshape((lay, -1, page_size) + tail)[:, i]
+    return jax.tree.map(cut, cache)
+
+
 @dataclasses.dataclass(eq=False)        # identity semantics: these live in
 class _SlotState:                        # queues/sets and are never "equal"
     """Host-side bookkeeping for one in-flight request."""
@@ -136,6 +150,13 @@ class _SlotState:                        # queues/sets and are never "equal"
                                    # newest-admitted rows first)
     last_sched: int = -1           # step() count of the last decode — the
                                    # page-coldness signal for eviction
+    ready_at: float = 0.0          # modeled completion time of the LAST
+                                   # in-flight KV page (disaggregated
+                                   # handoff); decode never schedules the
+                                   # row before it.  0.0 == colocated.
+    on_first_decode: Optional[Any] = None   # one-shot callback fired with
+                                   # the modeled time of the row's first
+                                   # decode (the disagg handoff_use event)
 
     @property
     def rid(self) -> int:
@@ -153,6 +174,19 @@ class _SlotState:                        # queues/sets and are never "equal"
     @property
     def target_len(self) -> int:
         return self.request.prompt_len + self.request.max_new_tokens
+
+
+@dataclasses.dataclass(eq=False)
+class _Handoff:
+    """One externally-prefilled sequence waiting for decode-side
+    admission (``Engine.submit_prefilled``): the per-page payloads in
+    flight over the fabric plus the modeled arrival gates."""
+
+    state: _SlotState
+    pages: List[Any]               # slice_page payloads, logical order
+    page_ready: List[float]        # modeled transfer completion per page
+    admit_at: float                # gate: first min_ready pages landed
+    ready_at: float                # gate: ALL pages landed (decode start)
 
 
 class Engine:
@@ -260,6 +294,9 @@ class Engine:
         self._queue: deque = deque()     # _SlotState, FIFO (+recompute front)
         self._paused: deque = deque()    # insertion-ordered: pause order IS
                                          # the resume order (oldest first)
+        self._handoffs: deque = deque()  # _Handoff, FIFO: externally
+                                         # prefilled sequences whose KV is
+                                         # still riding the fabric
         self.handles: Dict[int, RequestHandle] = {}
         self._next_rid = 0
         self._admit_seq = 0
@@ -460,9 +497,91 @@ class Engine:
                                 max_new=request.max_new_tokens)
         return handle
 
+    # ---- disaggregated prefill/decode seams (repro.disagg) -----------------
+    def prefill_export(self, prompt: Sequence[int]) -> Tuple[int, List[Any],
+                                                             float]:
+        """Prefill-only mode: run ONE bucketed prefill exactly as
+        ``_admit`` would (same jit program, same bucket, same modeled
+        cost, same last-position argmax) but export the KV page-by-page
+        (``slice_page`` payloads) instead of scattering it into this
+        engine's pool — the prefill half of the disaggregated handoff.
+        Returns ``(first_token, pages, modeled_seconds)``; the caller
+        owns clock accounting, transfer pricing, and decode-side
+        admission.  Because the compute path is shared with the
+        colocated admit, the first token and every page payload are
+        bit-identical to what a colocated prefill would have produced."""
+        plen = len(prompt)
+        bucket = self._bucket_len(plen)
+        self._buckets_used.add(bucket)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = prompt
+        slot_cache = self.model.init_cache(1, bucket,
+                                           dtype=self._cache_dtype)
+        logits, cache = self._prefill_fn(self.params,
+                                         {"tokens": jnp.asarray(tokens)},
+                                         slot_cache, jnp.int32(plen - 1))
+        cost = self.cost.prefill_s(bucket)
+        tok = int(np.argmax(np.asarray(logits)[0, -1]))
+        ps = self.cfg.page_size
+        pages = [slice_page(cache, i, ps) for i in range(-(-plen // ps))]
+        return tok, pages, cost
+
+    def submit_prefilled(self, request: Request, *, first_tok: int,
+                         prefill_done: float, pages: List[Any],
+                         page_ready: Sequence[float],
+                         min_ready_pages: Optional[int] = None,
+                         kv_transit_s: float = 0.0,
+                         submit_clock: Optional[float] = None,
+                         on_first_decode=None) -> RequestHandle:
+        """Decode-only mode: hand off a request whose prefill ran on
+        another engine (``prefill_export``) and whose KV pages are in
+        flight on the fabric.  ``page_ready[i]`` is the modeled
+        completion time of page ``i``'s transfer; admission waits for
+        the first ``min_ready_pages`` pages to land (default: all —
+        partial-arrival admission reserves the slot early), and the row
+        is never decoded before max(page_ready): transferred-before-use
+        is the invariant the ``disagg-handoff`` sanitizer rule checks.
+        The first token was already produced by the prefill tier at
+        modeled time ``prefill_done``."""
+        if request.prompt_len + request.max_new_tokens > self.cfg.max_seq:
+            raise ValueError(
+                f"prompt {request.prompt_len} + max_new "
+                f"{request.max_new_tokens} exceeds max_seq {self.cfg.max_seq}")
+        if len(pages) != len(page_ready):
+            raise ValueError(f"{len(pages)} pages but {len(page_ready)} "
+                             f"ready times")
+        if not pages:
+            raise ValueError("handoff with no KV pages")
+        rid = self._next_rid
+        self._next_rid += 1
+        handle = RequestHandle(rid=rid, request=request,
+                               submit_clock=(submit_clock
+                                             if submit_clock is not None
+                                             else request.arrival_time))
+        handle.kv_transit_s = kv_transit_s
+        self.handles[rid] = handle
+        st = _SlotState(handle)
+        st.index = request.prompt_len
+        st.cur_tok = first_tok
+        st.on_first_decode = on_first_decode
+        # the prefill tier produced the first token at prefill_done;
+        # trace events on THIS track must stay monotone, so the finish
+        # path (max_new == 1) clamps forward to the local clock
+        handle.first_token_clock = prefill_done
+        self._emit(st, first_tok, max(self.clock, prefill_done))
+        if handle.done:
+            return handle
+        ready = [float(t) for t in page_ready]
+        n_gate = (len(ready) if min_ready_pages is None
+                  else max(1, min(min_ready_pages, len(ready))))
+        self._handoffs.append(_Handoff(
+            state=st, pages=list(pages), page_ready=ready,
+            admit_at=max(ready[:n_gate]), ready_at=max(ready)))
+        return handle
+
     @property
     def idle(self) -> bool:
-        return (not self._queue and not self._paused
+        return (not self._queue and not self._paused and not self._handoffs
                 and all(s is None for s in self._slots))
 
     def advance_clock(self, t: float) -> None:
@@ -490,6 +609,7 @@ class Engine:
             dt += self.arbiter.take_charge(self.tenant)
         dt += self._relieve_pressure(dt)
         dt += self._swap_in(dt)
+        dt += self._admit_handoffs(dt)
         dt += self._admit(dt)
         dt += self._decode_once(dt)
         if (dt == 0.0 and self._queue and not self._paused  # repro: allow(no-float-equality) 0.0 is an exact no-work sentinel (no phase ran), never an accumulated time
@@ -500,6 +620,18 @@ class Engine:
             nxt = self._queue[0].request.arrival_time
             if nxt > self.clock:
                 self.advance_clock(nxt)
+        if dt == 0.0:  # repro: allow(no-float-equality) same exact no-work sentinel as above
+            # every runnable row (or the pending handoff) is still
+            # waiting on KV in flight over the fabric: idle-advance to
+            # the earliest modeled page arrival so progress is made
+            gates = [s.ready_at for s in self._slots
+                     if s is not None and s.ready_at > self.clock]
+            if self._handoffs:
+                gates.append(self._handoffs[0].admit_at)
+            if gates:
+                nxt = min(gates)
+                if nxt > self.clock:
+                    self.advance_clock(nxt)
         self.clock += dt
         if dt > 0.0:
             self.busy_s += dt
@@ -775,6 +907,40 @@ class Engine:
         self._place(st, slot)
         return dt
 
+    # ---- disaggregated handoff admission -----------------------------------
+    def _admit_handoffs(self, elapsed: float) -> float:
+        """Admit handed-off (externally prefilled) sequences whose
+        leading KV pages have arrived: allocate physical pages, scatter
+        every page payload (arrived pages now; the rest are gated by
+        ``ready_at``, which decode scheduling honors), and place the
+        row.  Runs after swap-in and before fresh admission — a handoff
+        already spent prefill compute elsewhere, so it outranks a fresh
+        arrival for free rows (the recompute-requeue fairness rule) —
+        but never past a blocked pause queue, mirroring ``_admit``."""
+        dt = 0.0
+        while self._handoffs:
+            if self._paused:
+                break
+            ho = self._handoffs[0]
+            st = ho.state
+            if ho.admit_at > self.clock + elapsed + dt:
+                break       # leading pages still in flight on the fabric
+            need = (self.budget.pages_for(st.target_len)
+                    if self.cfg.reserve_lifetime
+                    else self.budget.pages_for(st.index + 1))
+            slot = self._free_slot()
+            if slot is None or need > self.kv.hot_free:
+                break
+            phys = self.kv.alloc(st.rid, need)
+            for i, payload in enumerate(ho.pages):
+                self._write_page(int(phys[i]), payload)
+            for lp, p in enumerate(phys):
+                self._table[slot, lp] = p
+            self._place(st, slot)
+            st.ready_at = ho.ready_at
+            self._handoffs.popleft()
+        return dt
+
     # ---- admission / prefill ---------------------------------------------
     def _admit(self, elapsed: float) -> float:
         """FIFO prefill admission (head-of-line blocking keeps the order
@@ -849,23 +1015,33 @@ class Engine:
         self._place(st, slot)
         return cost
 
+    def _write_page(self, phys: int, payload) -> None:
+        """Write ONE page payload (the ``slice_page`` / ``PagedKV``
+        per-page format) into physical page ``phys`` of the pool — the
+        import half of the page seam.  Prefill scatter, tier-2 fetch
+        and the disaggregated handoff all land pages through the same
+        dtype-converting ``.at[...].set``, so a page is bit-identical
+        in the pool no matter which path carried it."""
+        self._pool = jax.tree.map(
+            lambda pool_leaf, page_leaf: pool_leaf.at[:, phys].set(
+                jnp.asarray(page_leaf, pool_leaf.dtype)),
+            self._pool, payload)
+
     def _write_prefill_pages(self, cache, phys: List[int],
                              plen: int) -> None:
-        """Scatter the dense prefill cache into the allocated physical
-        pages.  Only pages holding real tokens are copied: the padded
-        bucket tail (and any growth/lifetime pages past the prompt) is
-        garbage the kernel's length mask never reads."""
+        """Write the dense prefill cache into the allocated physical
+        pages one page at a time (``slice_page`` -> ``_write_page``):
+        page-granular at prefill time, so a disaggregated prefill tier
+        can stream each page the moment it is sliced instead of
+        scattering the whole bucket after prefill completes.  Only
+        pages holding real tokens are copied: the padded bucket tail
+        (and any growth/lifetime pages past the prompt) is garbage the
+        kernel's length mask never reads.  The physical pages are
+        distinct, so the per-page writes compose to exactly the old
+        batched scatter (pinned by a regression test)."""
         ps = self.cfg.page_size
-        n_copy = -(-plen // ps)
-        idx = jnp.asarray(np.asarray(phys[:n_copy], np.int32))
-
-        def put(pool_leaf, cache_leaf):
-            lay = cache_leaf.shape[0]
-            tail = tuple(cache_leaf.shape[3:])
-            pages = cache_leaf[:, 0].reshape((lay, -1, ps) + tail)[:, :n_copy]
-            return pool_leaf.at[:, idx].set(pages.astype(pool_leaf.dtype))
-
-        self._pool = jax.tree.map(put, self._pool, cache)
+        for i in range(-(-plen // ps)):
+            self._write_page(int(phys[i]), slice_page(cache, i, ps))
 
     def _place(self, st: _SlotState, slot: int) -> None:
         st.slot = slot
@@ -897,12 +1073,14 @@ class Engine:
                 # one span per request lifetime on the tenant's request
                 # row: submit -> done, with the latency decomposition
                 # downstream reports read straight off the timeline
+                extra = ({"kv_transit_s": h.kv_transit_s}
+                         if h.kv_transit_s > 0.0 else {})
                 self.tracer.span(f"{self._track}/requests", f"req{h.rid}",
                                  h.submit_clock, at - h.submit_clock,
                                  cat=CAT_REQUEST, rid=h.rid, ttft_s=ttft,
                                  tokens=len(h.tokens), swaps=h.swaps,
                                  preempts=h.preempts,
-                                 recomputes=h.recomputes)
+                                 recomputes=h.recomputes, **extra)
             if self.kv.holds(st.rid):
                 self.kv.free(st.rid)
             if st.slot is not None:
@@ -918,13 +1096,25 @@ class Engine:
         raise AssertionError(f"{n_live} live rows > max_slots")
 
     def _decode_once(self, elapsed: float) -> float:
-        running = self._running()
+        # rows whose handed-off KV pages are still in flight on the
+        # fabric are placed but not schedulable: decoding one would
+        # read pages before their modeled transfer completion (the
+        # disagg-handoff sanitizer violation).  Colocated rows have
+        # ready_at == 0.0, so the filter is the identity for them.
+        running = [st for st in self._running()
+                   if st.ready_at <= self.clock + elapsed]
         if not running:
             return 0.0
         for st in running:
             self._lengths[st.slot] = st.index
             self._slot_tok[st.slot] = st.cur_tok
             st.last_sched = self.steps
+            if st.on_first_decode is not None:
+                # first decode of a handed-off row: report the modeled
+                # use time (>= every page's transfer completion — the
+                # transferred-before-use fact the sanitizer audits)
+                st.on_first_decode(self.clock + elapsed)
+                st.on_first_decode = None
         # gather live rows into a pow2 row bucket: pad with idle slots
         # (trash page table, length 0 — exactly what a full-array
         # decode feeds for them), so the decode batch shrinks with

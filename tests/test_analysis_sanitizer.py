@@ -612,3 +612,87 @@ def test_sanitizer_is_importable_without_jax_side_effects():
             "sys.exit(1 if 'jax' in sys.modules else 0)")
     proc = subprocess.run([sys.executable, "-c", code])
     assert proc.returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# disagg-handoff: transferred-before-use on the KV handoff protocol
+# ---------------------------------------------------------------------------
+
+def _handoff_stream(use_ts=3.0, pages=(0, 1), span_pages=2,
+                    page_bytes=100.0, span_bytes=200.0, ready=(1.0, 2.0),
+                    span_end=None):
+    """A minimal well-formed disagg:req0 handoff stream, corruptible
+    via the kwargs: pages first, then the stream span, then the use."""
+    evs = [_instant("disagg:req0", "handoff_page", 0.1 * (i + 1),
+                    cat=CAT_KV, page=p, bytes=page_bytes,
+                    ready_ts=ready[i]) for i, p in enumerate(pages)]
+    end = max(ready) if span_end is None else span_end
+    evs.append(_span("disagg:req0", "handoff", 0.1,
+                     end - 0.1, cat=CAT_KV, pages=span_pages,
+                     bytes=span_bytes))
+    evs.append(_instant("disagg:req0", "handoff_use", use_ts,
+                        cat=CAT_KV, pages=span_pages))
+    return evs
+
+
+def test_disagg_handoff_clean_stream_passes():
+    rep = sanitize_events(_handoff_stream())
+    assert rep.ok, rep.format()
+    assert rep.checks["disagg-handoff"] == 4   # 2 pages + span + use
+
+
+def test_disagg_handoff_rejects_use_before_transfer():
+    # the stream span lies (claims it ended at 1.2s) so the track stays
+    # monotone, but page 1's own ready_ts says it landed at 2.0s —
+    # decode at 1.5s consumed a page that was still on the fabric
+    v = _only(sanitize_events(_handoff_stream(use_ts=1.5, span_end=1.2)),
+              "disagg-handoff")
+    assert "page 1 decoded before its transfer completed" in v.message
+
+
+def test_disagg_handoff_rejects_missing_page():
+    evs = [e for e in _handoff_stream()
+           if not (e.name == "handoff_page" and e.args["page"] == 1)]
+    rep = sanitize_events(evs)
+    assert not rep.ok
+    # the dropped page trips both the page-set and the byte agreement
+    assert all(v.rule == "disagg-handoff" for v in rep.violations)
+    assert any("1 of 2 announced page(s)" in v.message
+               for v in rep.violations), rep.format()
+
+
+def test_disagg_handoff_rejects_duplicate_page():
+    rep = sanitize_events(_handoff_stream(pages=(0, 0)))
+    assert not rep.ok
+    assert all(v.rule == "disagg-handoff" for v in rep.violations)
+    assert any("transferred twice" in v.message
+               for v in rep.violations), rep.format()
+
+
+def test_disagg_handoff_rejects_byte_disagreement():
+    v = _only(sanitize_events(_handoff_stream(span_bytes=250.0)),
+              "disagg-handoff")
+    assert "announced 250B" in v.message
+
+
+def test_disagg_handoff_rejects_use_without_span():
+    evs = [_instant("disagg:req0", "handoff_use", 3.0, cat=CAT_KV,
+                    pages=1)]
+    v = _only(sanitize_events(evs), "disagg-handoff")
+    assert "no handoff span" in v.message
+
+
+def test_disagg_handoff_rejects_page_after_use():
+    evs = _handoff_stream() + [
+        _instant("disagg:req0", "handoff_page", 4.0, cat=CAT_KV,
+                 page=2, bytes=100.0, ready_ts=4.0)]
+    rep = sanitize_events(evs)
+    assert any("after the request's first decode" in v.message
+               for v in rep.violations), rep.format()
+
+
+def test_disagg_handoff_unused_stream_is_a_note_not_a_violation():
+    evs = [e for e in _handoff_stream() if e.name != "handoff_use"]
+    rep = sanitize_events(evs)
+    assert rep.ok
+    assert any("streamed but never used" in n for n in rep.notes)

@@ -1,0 +1,282 @@
+"""repro.disagg validation: the degenerate cluster replays the
+colocated engine bit-for-bit (tokens, clocks AND trace events), routed
+handoffs over both stagings preserve tokens while gating decode on KV
+arrival (stalled-KV correctness), the router's predicted-transit and
+queue-depth fallbacks colocate, partial-arrival admission changes no
+tokens, the handoff event protocol sanitizes clean under the
+``disagg-handoff`` rule, and the whole cluster loop is bit-identical
+under tiebreak perturbation (racecheck)."""
+
+import jax
+import pytest
+
+from repro.analysis import racecheck, sanitize_tracer
+from repro.configs import SMOKE_ARCHS
+from repro.core import fabric as fb
+from repro.disagg import (DisaggCluster, DisaggConfig, PrefillWorker,
+                          decode_load, pick_decode_engine)
+from repro.fabric import Topology, Transport
+from repro.models.api import build_model
+from repro.obs import Tracer
+from repro.serve import Engine, EngineConfig, burst_trace, run_trace
+
+VOCAB = SMOKE_ARCHS["qwen1.5-0.5b"].vocab
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = SMOKE_ARCHS["qwen1.5-0.5b"].__class__(**{
+        **SMOKE_ARCHS["qwen1.5-0.5b"].__dict__, "compute_dtype": "float32"})
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(jax.random.PRNGKey(0))
+
+
+def _cfg(**kw):
+    base = dict(max_slots=3, max_seq=64, page_size=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _trace(n=6, prompt=12, new=6, seed=0):
+    return burst_trace(n, prompt_len=prompt, max_new_tokens=new,
+                       vocab=VOCAB, seed=seed)
+
+
+def _topology(*, bw=200.0):
+    """One leaf switch, two pods, one tier-2 memory node."""
+    topo = Topology("disagg-test")
+    topo.add_node("leaf", "switch")
+    for p in (0, 1):
+        topo.add_node(f"pod:{p}", "pod")
+        topo.connect(f"pod:{p}", "leaf", fb.CXL3, capacity=bw, latency=1e-4)
+    topo.add_node("mem:0", "memory")
+    topo.connect("mem:0", "leaf", fb.CXL_CAPACITY, capacity=2 * bw,
+                 latency=1e-4)
+    return topo
+
+
+def _routed_cluster(model, params, *, staging="direct", bw=200.0,
+                    tracer=None, config=None, tenant="t0"):
+    topo = _topology(bw=bw)
+    tracer = tracer if tracer is not None else Tracer()
+    tx = Transport(topo, tracer=tracer)
+    pw = PrefillWorker(
+        Engine.local(model, _cfg(), params=params, tracer=tracer), name="p0")
+    de = Engine.local(model, _cfg(), params=params, tracer=tracer)
+    kw = dict(transport=tx, route=topo.route("pod:0", "pod:1"),
+              config=config or DisaggConfig(staging=staging))
+    if (config.staging if config else staging) == "tier2":
+        kw["stage_in"] = topo.route("pod:0", "mem:0")
+        kw["stage_out"] = topo.route("mem:0", "pod:1")
+    return DisaggCluster([pw], [de], tenant=tenant, **kw), tx
+
+
+# ---------------------------------------------------------------------------
+# degenerate mode: the correctness anchor
+# ---------------------------------------------------------------------------
+
+def test_degenerate_cluster_replays_engine_bit_for_bit(model, params):
+    """route=None + one decode engine: the cluster's run loop must be
+    indistinguishable from ``run_trace(Engine)`` — same tokens, same
+    event clocks, same trace events in the same order, even with an
+    (idle) prefill worker attached."""
+    trace = _trace()
+    tr_a, tr_b = Tracer(), Tracer()
+    plain = run_trace(Engine.local(model, _cfg(), params=params,
+                                   tracer=tr_a), trace)
+    idle_worker = PrefillWorker(
+        Engine.local(model, _cfg(), params=params), name="idle")
+    cl = DisaggCluster([idle_worker],
+                       [Engine.local(model, _cfg(), params=params,
+                                     tracer=tr_b)])
+    assert cl.degenerate
+    got = cl.run(trace)
+    assert [h.tokens for h in got] == [h.tokens for h in plain]
+    assert [(h.submit_clock, h.first_token_clock, h.done_clock)
+            for h in got] == \
+        [(h.submit_clock, h.first_token_clock, h.done_clock)
+         for h in plain]
+    assert [(e.ph, e.track, e.name, e.ts, e.dur, e.args)
+            for e in tr_b.events()] == \
+        [(e.ph, e.track, e.name, e.ts, e.dur, e.args)
+         for e in tr_a.events()]
+    assert cl.handoffs == 0 and cl.colocated == len(trace)
+    assert idle_worker.prefilled == 0
+
+
+# ---------------------------------------------------------------------------
+# routed handoff: token fidelity + stalled-KV gating
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("staging", ["direct", "tier2"])
+def test_routed_handoff_tokens_identical(model, params, staging):
+    """Disaggregated prefill -> fabric -> decode produces the exact
+    colocated token stream, for direct pod->pod transfers and for
+    write+read staging through the tier-2 memory node."""
+    trace = _trace()
+    want = [h.tokens for h in
+            run_trace(Engine.local(model, _cfg(), params=params), trace)]
+    cl, tx = _routed_cluster(model, params, staging=staging)
+    got = cl.run(trace)
+    assert [h.tokens for h in got] == want
+    assert cl.handoffs == len(trace) and cl.colocated == 0
+    assert all(h.kv_transit_s >= 0.0 for h in got)
+    # every page rode the fabric under the kv: label class
+    kvb = tx.link_label_bytes
+    assert any("kv:t0" in labels for labels in kvb.values()), kvb
+
+
+def test_stalled_kv_gates_decode(model, params):
+    """A slow trunk stalls the handoff: decode must not consume a row
+    before its last page lands (done >= first_token + transit), and
+    the tokens still match the colocated run exactly."""
+    trace = _trace(n=4)
+    want = [h.tokens for h in
+            run_trace(Engine.local(model, _cfg(), params=params), trace)]
+    # ~3 pages/s of page_bytes: transfers far slower than prefill
+    cl, _ = _routed_cluster(model, params, bw=3 * 16384.0)
+    got = cl.run(trace)
+    assert [h.tokens for h in got] == want
+    assert all(h.kv_transit_s > 0.0 for h in got)
+    for h in got:
+        # first_token_clock is the prefill tier's emit; the decode side
+        # waited out the full KV transit before producing token 2
+        assert h.done_clock >= h.first_token_clock + h.kv_transit_s
+
+
+def test_partial_arrival_admission_changes_no_tokens(model, params):
+    """min_ready_pages=1 admits a row as soon as its first page lands
+    (early slot reservation) but decode still waits for the last page:
+    tokens are identical to gate-on-all admission."""
+    trace = _trace(n=4)
+    full = _routed_cluster(model, params, bw=3 * 16384.0,
+                           config=DisaggConfig(staging="direct"))[0]
+    early = _routed_cluster(model, params, bw=3 * 16384.0,
+                            config=DisaggConfig(staging="direct",
+                                                min_ready_pages=1))[0]
+    toks_full = [h.tokens for h in full.run(trace)]
+    toks_early = [h.tokens for h in early.run(trace)]
+    assert toks_early == toks_full
+
+
+# ---------------------------------------------------------------------------
+# router fallbacks
+# ---------------------------------------------------------------------------
+
+def test_router_colocates_when_transit_exceeds_budget(model, params):
+    trace = _trace()
+    want = [h.tokens for h in
+            run_trace(Engine.local(model, _cfg(), params=params), trace)]
+    cl, _ = _routed_cluster(model, params,
+                            config=DisaggConfig(max_transit_s=0.0))
+    got = cl.run(trace)
+    assert cl.colocated == len(trace) and cl.handoffs == 0
+    assert [h.tokens for h in got] == want
+    assert all(h.kv_transit_s == 0.0 for h in got)
+
+
+def test_router_colocates_when_prefill_tier_saturated(model, params):
+    """max_prefill_depth=0 declares the prefill tier permanently full:
+    every request falls back to the decode pod's colocated path."""
+    trace = _trace(n=4)
+    cl, _ = _routed_cluster(model, params,
+                            config=DisaggConfig(max_prefill_depth=0))
+    got = cl.run(trace)
+    assert cl.colocated == len(trace) and cl.handoffs == 0
+    assert [h.tokens for h in got] == \
+        [h.tokens for h in
+         run_trace(Engine.local(model, _cfg(), params=params), trace)]
+
+
+def test_predict_transit_direct_matches_route_model(model, params):
+    cl, _ = _routed_cluster(model, params)
+    req = _trace(n=1)[0]
+    eng = cl.decode_engines[0]
+    n_pages = -(-req.prompt_len // eng.cfg.page_size)
+    want = cl.route.transfer_time(n_pages * eng.kv.page_bytes)
+    assert cl.predict_transit(req) == pytest.approx(want)
+
+
+def test_decode_load_counts_all_occupancy(model, params):
+    eng = Engine.local(model, _cfg(), params=params)
+    assert decode_load(eng) == 0
+    from repro.serve import Request
+    eng.submit(Request((1, 2, 3), 2))
+    assert decode_load(eng) == 1
+    assert pick_decode_engine(
+        [eng, Engine.local(model, _cfg(), params=params)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="staging"):
+        DisaggConfig(staging="bounce")
+    with pytest.raises(ValueError, match="min_ready_pages"):
+        DisaggConfig(min_ready_pages=0)
+
+
+def test_cluster_construction_validation(model, params):
+    eng = Engine.local(model, _cfg(), params=params)
+    with pytest.raises(ValueError, match="decode engine"):
+        DisaggCluster([], [])
+    with pytest.raises(ValueError, match="transport"):
+        DisaggCluster([], [eng],
+                      route=_topology().route("pod:0", "pod:1"))
+    with pytest.raises(ValueError, match="stage"):
+        topo = _topology()
+        DisaggCluster([], [eng], transport=Transport(topo),
+                      route=topo.route("pod:0", "pod:1"),
+                      config=DisaggConfig(staging="tier2"))
+
+
+# ---------------------------------------------------------------------------
+# observability + determinism
+# ---------------------------------------------------------------------------
+
+def test_handoff_events_sanitize_clean(model, params):
+    """The per-request handoff protocol (pages -> stream span -> use)
+    passes the full sanitizer, and the disagg-handoff rule actually
+    checked something (transferred-before-use, page set, bytes)."""
+    tr = Tracer()
+    cl, tx = _routed_cluster(model, params, bw=3 * 16384.0, tracer=tr)
+    cl.run(_trace(n=4))
+    tx.quiesce()
+    rep = sanitize_tracer(tr)
+    assert rep.ok, rep.format()
+    assert rep.checks["disagg-handoff"] > 0
+
+
+def test_cluster_bit_identical_under_perturbation(model, params):
+    """racecheck: perturbing every tie-break seam (candidate selection,
+    engine picks) must not change tokens, clocks, transit, or the
+    emitted trace — the cluster loop is order-independent."""
+    trace = _trace(n=4)
+
+    def scenario(tracer):
+        topo = _topology(bw=3 * 16384.0)
+        tx = Transport(topo, tracer=tracer)
+        pw = PrefillWorker(Engine.local(model, _cfg(), params=params,
+                                        tracer=tracer), name="p0")
+        de = Engine.local(model, _cfg(), params=params, tracer=tracer)
+        cl = DisaggCluster([pw], [de], transport=tx,
+                           route=topo.route("pod:0", "pod:1"),
+                           tenant="t0",
+                           config=DisaggConfig(min_ready_pages=1))
+        handles = cl.run(trace)
+        tx.quiesce()
+        return {
+            "tokens": [h.tokens for h in handles],
+            "clocks": [(h.submit_clock, h.first_token_clock, h.done_clock)
+                       for h in handles],
+            "transit": [h.kv_transit_s for h in handles],
+            "handoffs": cl.handoffs,
+        }
+
+    racecheck(scenario, seeds=(1, 2), label="disagg", check=True)

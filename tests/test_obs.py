@@ -20,7 +20,8 @@ from repro.models.api import build_model
 from repro.obs import (CAT_KV, CAT_REQUEST, NULL_TRACER, JsonlSink,
                        MetricsRegistry, NullTracer, Tracer,
                        events_from_jsonl, link_report,
-                       link_report_from_trace, resolve, tier_report,
+                       link_report_from_trace, resolve,
+                       rotated_jsonl_paths, tier_report,
                        to_chrome_trace, validate_trace_events,
                        write_chrome_trace)
 from repro.serve import (Engine, EngineConfig, PoolArbiter, burst_trace,
@@ -386,3 +387,65 @@ def test_events_from_jsonl_rejects_malformed_lines(tmp_path):
                  'not json\n')
     with pytest.raises(ValueError, match="bad.jsonl:3"):
         events_from_jsonl(str(p))
+
+
+def test_jsonl_sink_rotation_is_lossless(tmp_path):
+    """max_bytes rotation: every event survives across the segment set,
+    segments stay under the cap (except a single oversized line),
+    suffixes are chronological, and events_from_jsonl stitches the set
+    back together in emission order."""
+    import os
+    path = str(tmp_path / "rot.jsonl")
+    tracer = Tracer()
+    with JsonlSink(path, tracer, max_bytes=512) as sink:
+        for i in range(64):
+            tracer.instant("t", "tick", i * 0.1, i=i)
+    assert len(sink.paths) > 1                   # it actually rotated
+    assert sink.paths == rotated_jsonl_paths(path)
+    assert sink.paths[0] == path
+    assert [int(p.rsplit(".", 1)[-1]) for p in sink.paths[1:]] == \
+        list(range(1, len(sink.paths)))          # never renamed
+    for p in sink.paths:
+        assert os.path.getsize(p) <= 512
+    evs = events_from_jsonl(path)                # reads the whole set
+    assert len(evs) == sink.written == 64
+    assert [e.args["i"] for e in evs] == list(range(64))
+
+
+def test_jsonl_sink_oversized_line_lands_alone(tmp_path):
+    path = str(tmp_path / "big.jsonl")
+    tracer = Tracer()
+    with JsonlSink(path, tracer, max_bytes=64) as sink:
+        tracer.instant("t", "small", 0.0)
+        tracer.instant("t", "huge", 1.0, blob="x" * 300)
+        tracer.instant("t", "after", 2.0)
+    # the 300B line exceeds max_bytes but is never dropped: it opens a
+    # segment of its own
+    assert len(sink.paths) == 3
+    assert [e.name for e in events_from_jsonl(path)] == \
+        ["small", "huge", "after"]
+
+
+def test_jsonl_sink_retention_keeps_the_tail(tmp_path):
+    import os
+    path = str(tmp_path / "ring.jsonl")
+    tracer = Tracer()
+    with JsonlSink(path, tracer, max_bytes=128, max_files=2) as sink:
+        for i in range(40):
+            tracer.instant("t", "tick", i * 0.1, i=i)
+    assert len(sink.paths) == 2                  # disk-bounded ring
+    assert not os.path.exists(path)              # oldest segments gone
+    assert rotated_jsonl_paths(path) == sink.paths
+    evs = events_from_jsonl(path)        # resolves the surviving set
+    # the surviving set is the most recent tail, contiguous to the end
+    idx = [e.args["i"] for e in evs]
+    assert idx == list(range(idx[0], 40))
+    assert sink.written == 40                    # writes were lossless;
+                                                 # retention trimmed disk
+
+
+def test_jsonl_sink_rotation_validates_args(tmp_path):
+    with pytest.raises(ValueError, match="max_bytes"):
+        JsonlSink(str(tmp_path / "a.jsonl"), max_bytes=0)
+    with pytest.raises(ValueError, match="max_files"):
+        JsonlSink(str(tmp_path / "b.jsonl"), max_files=0)

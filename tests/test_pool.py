@@ -544,3 +544,76 @@ def test_pool_exhaustion_raises_informatively():
     pool.lease("hog", 30)
     with pytest.raises(RuntimeError, match="cannot satisfy"):
         pool.lease("late", 8)
+
+
+# ---------------------------------------------------------------------------
+# demand-weighted KV shares + gang placement (the repro.disagg estate)
+# ---------------------------------------------------------------------------
+
+def test_kv_shares_water_filling_sharing_incentive():
+    pool = ResourcePool(small_inventory())
+    lease = pool.lease("shared", 4, tier2_gb=64, kv_gb=3.0,
+                       tenants=("a", "b", "c"))
+    kv = lease.kv_bytes
+    even = kv / 3
+    # no demands: the legacy static split, bit-compatible
+    assert lease.kv_shares() == pytest.approx(
+        {"a": even, "b": even, "c": even})
+    # a light demander saturates and donates; the surplus flows to the
+    # heavy demander, and the leftover returns as an equal bonus
+    shares = lease.kv_shares({"a": 0.2 * even, "b": 2.5 * even})
+    assert sum(shares.values()) == pytest.approx(kv)
+    assert shares["a"] >= 0.2 * even
+    assert shares["b"] > even
+    assert shares["c"] > 0.0           # quiet tenant keeps spill headroom
+    # sharing incentive (pinned): a tenant demanding at least the even
+    # split never receives less than the even split
+    for demands in ({"a": even}, {"a": 5 * even},
+                    {"a": even, "b": 9 * even, "c": 9 * even}):
+        assert lease.kv_shares(demands)["a"] >= even * (1 - 1e-12)
+    with pytest.raises(KeyError, match="intruder"):
+        lease.kv_shares({"intruder": 1.0})
+
+
+def test_gang_lease_roles_and_handoff_route():
+    pool = ResourcePool(small_inventory(), policy="contention")
+    gang = pool.lease_gang("serve", {
+        "prefill": dict(n_accels=8),
+        "decode": dict(n_accels=8, tier2_gb=8, kv_gb=1.0,
+                       tenants=("d0",)),
+    })
+    assert set(gang) == {"prefill", "decode"}
+    assert gang["prefill"].role == "prefill"
+    assert gang["decode"].role == "decode"
+    assert gang["prefill"].job == "serve/prefill"
+    # pod_size=8: each tier fills one pod, so the tiers cannot share a
+    # gateway and the KV handoff rides a real estate route
+    route = pool.handoff_route(gang["prefill"], gang["decode"])
+    assert route is not None and len(route.links) >= 1
+    pool.release_gang("serve")
+    assert pool.alloc.free_accels() == 32
+    pool.alloc.check_conservation()
+    with pytest.raises(AllocationError, match="no gang"):
+        pool.release_gang("serve")
+
+
+def test_gang_all_or_nothing_rollback():
+    a = Allocator(small_inventory())
+    a.allocate(JobRequest("hog", 28))
+    free_before = a.free_accels()
+    out = a.allocate_gang([JobRequest("g/p", 2, role="prefill"),
+                           JobRequest("g/d", 6, role="decode")])
+    assert out is None                 # the decode member cannot fit
+    assert a.free_accels() == free_before
+    assert "g/p" not in a.live and "g/d" not in a.live
+    a.check_conservation()
+
+
+def test_gang_colocated_tiers_degenerate_handoff():
+    """Both tiers fitting one pod share a gateway: the handoff route is
+    None — the signal DisaggCluster uses to run degenerate."""
+    pool = ResourcePool(small_inventory())
+    gang = pool.lease_gang("tiny", {"prefill": dict(n_accels=2),
+                                    "decode": dict(n_accels=2)})
+    assert pool.handoff_route(gang["prefill"], gang["decode"]) is None
+    pool.release_gang("tiny")

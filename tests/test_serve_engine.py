@@ -184,6 +184,41 @@ def test_engine_serves_scattered_pages(model, params):
     assert all(o.status is RequestStatus.DONE for o in others)
 
 
+def test_prefill_page_writes_match_batched_scatter(model, params):
+    """Page-granular prefill writes (slice_page -> _write_page, the
+    disaggregated-streaming seam) must compose to exactly the old
+    batched ``.at[:, idx].set`` scatter: same tokens AND a bit-equal
+    physical pool after the run, including partially-filled tail
+    pages."""
+    import types
+
+    def old_scatter(self, cache, phys, plen):
+        ps = self.cfg.page_size
+        n_copy = -(-plen // ps)
+        idx = jnp.asarray(np.asarray(phys[:n_copy], np.int32))
+
+        def put(pool_leaf, cache_leaf):
+            lay = cache_leaf.shape[0]
+            tail = tuple(cache_leaf.shape[3:])
+            pages = cache_leaf[:, 0].reshape(
+                (lay, -1, ps) + tail)[:, :n_copy]
+            return pool_leaf.at[:, idx].set(pages.astype(pool_leaf.dtype))
+
+        self._pool = jax.tree.map(put, self._pool, cache)
+
+    trace = _trace(n=3, prompt=12, new=4)     # 12 % 8 != 0: partial page
+    paged = Engine.local(model, _cfg(), params=params)
+    batched = Engine.local(model, _cfg(), params=params)
+    batched._write_prefill_pages = types.MethodType(old_scatter, batched)
+    hs_paged = run_trace(paged, trace)
+    hs_batched = run_trace(batched, trace)
+    assert [h.tokens for h in hs_paged] == [h.tokens for h in hs_batched]
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        paged._pool, batched._pool)
+
+
 def test_engine_deterministic_across_arrival_interleavings(model, params):
     """Same requests, different arrival interleavings (burst vs staggered
     vs reversed submission) -> identical per-request tokens."""
